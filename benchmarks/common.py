@@ -1,0 +1,83 @@
+"""Shared benchmark scaffolding for the paper-experiment reproductions."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import CentralizedGD, FDMGD
+from repro.core.channel import ChannelConfig
+from repro.core.gbma import GBMASimulator
+from repro.core.theory import ProblemConstants
+from repro.data.synthetic import msd_like_regression
+
+LAMBDA = 0.5  # paper §VI-A: regularizer of Eq. (27)
+
+
+@dataclasses.dataclass
+class MSDProblem:
+    """Regularized linear least squares on the MSD-like dataset; one sample
+    per node (paper §VI-A)."""
+
+    X: np.ndarray
+    y: np.ndarray
+    theta_star: np.ndarray
+    pc: ProblemConstants
+
+    @classmethod
+    def make(cls, n_nodes: int, dim: int = 90, seed: int = 0,
+             delta: float = 10.0) -> "MSDProblem":
+        X, y, _ = msd_like_regression(n_nodes, dim=dim, seed=seed)
+        A = X.T @ X / n_nodes
+        theta_star = np.linalg.solve(A + LAMBDA * np.eye(dim),
+                                     X.T @ y / n_nodes)
+        eig = np.linalg.eigvalsh(A)
+        pc = ProblemConstants(
+            mu=float(eig[0] + LAMBDA), L=float(eig[-1] + LAMBDA),
+            L_bar=float(np.max(np.sum(X**2, axis=1)) + LAMBDA),
+            delta=delta, r0_sq=float(np.sum(theta_star**2)), dim=dim)
+        return cls(X, y, theta_star, pc)
+
+    def grad_fn(self):
+        Xj, yj = jnp.array(self.X), jnp.array(self.y)
+
+        def g(theta):
+            return (Xj @ theta - yj)[:, None] * Xj + LAMBDA * theta[None, :]
+
+        return g
+
+    def objective(self, theta) -> float:
+        t = np.asarray(theta, np.float64)
+        return float(0.5 * np.mean((self.X @ t - self.y) ** 2)
+                     + LAMBDA / 2 * np.sum(t * t))
+
+    def excess_risk(self, traj) -> np.ndarray:
+        f_star = self.objective(self.theta_star)
+        return np.array([self.objective(t) - f_star for t in np.asarray(traj)])
+
+
+def average_runs(run_fn, seeds: int) -> np.ndarray:
+    """Averages excess-risk curves over seeds (the expectation in Eq. 14)."""
+    curves = [run_fn(jax.random.key(s)) for s in range(seeds)]
+    return np.mean(np.stack(curves), axis=0)
+
+
+def timed(fn, *args, reps: int = 3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / reps * 1e6
+
+
+def fmt_curve(name: str, ks: np.ndarray, values: np.ndarray,
+              every: int = 50) -> list[str]:
+    rows = []
+    for i in range(0, len(ks), every):
+        rows.append(f"{name},k={int(ks[i])},{values[i]:.6e}")
+    rows.append(f"{name},k={int(ks[-1])},{values[-1]:.6e}")
+    return rows

@@ -1,0 +1,55 @@
+"""Roofline table builder: reads the dry-run JSON records and renders the
+per-(arch x shape x mesh) three-term roofline with dominant bottleneck and
+useful-compute ratio (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def render(path: str) -> list[str]:
+    with open(path) as f:
+        records = json.load(f)
+    rows = ["arch,shape,mesh,status,compute_s,memory_s,collective_s,"
+            "dominant,model_flops,hlo_flops,useful_ratio,args_GiB,temp_GiB"]
+    for r in records:
+        if r["status"] != "ok":
+            rows.append(f"{r['arch']},{r['shape']},{r['mesh']},"
+                        f"{r['status']}:{r.get('reason', r.get('error', ''))[:60]}"
+                        ",,,,,,,,")
+            continue
+        t = r["roofline"]
+        m = r["memory"]
+        rows.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},ok,"
+            f"{t['compute_s']:.3e},{t['memory_s']:.3e},"
+            f"{t['collective_s']:.3e},{t['dominant']},"
+            f"{t['model_flops']:.3e},{t['hlo_flops']:.3e},"
+            f"{t['useful_ratio']:.2f},"
+            f"{m.get('argument_bytes', 0)/2**30:.2f},"
+            f"{m.get('temp_bytes', 0)/2**30:.2f}")
+    return rows
+
+
+def run(verbose: bool = True) -> list[str]:
+    import os
+
+    rows = []
+    for path in ("results/dryrun_pod.json", "results/dryrun_multipod.json",
+                 "results/dryrun_pod_v2.json",
+                 "results/dryrun_multipod_v2.json",
+                 "results/opt_minitron.json", "results/opt_llama4.json",
+                 "results/opt_deepseek.json"):
+        if os.path.exists(path):
+            rows.append(f"# {path}")
+            rows.extend(render(path))
+        elif "v2" not in path and "opt_" not in path:
+            rows.append(f"# {path} missing - run "
+                        f"`python -m repro.launch.dryrun --all --out {path}`")
+    if verbose:
+        print("\n".join(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    run(*sys.argv[1:])

@@ -1,0 +1,36 @@
+"""Benchmark runner — one module per paper table/figure plus the roofline
+table. Prints `name,label,value` CSV rows; `python -m benchmarks.run`."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (ablations, fig2_equal_gains,
+                            fig3_rayleigh, fig4_fdm_comparison,
+                            fig5_localization, fig6_energy_scaling,
+                            roofline)
+
+    modules = [
+        ("fig2_equal_gains (paper Fig. 2)", fig2_equal_gains),
+        ("fig3_rayleigh (paper Fig. 3)", fig3_rayleigh),
+        ("fig4_fdm_comparison (paper Fig. 4)", fig4_fdm_comparison),
+        ("fig5_localization (paper Fig. 5)", fig5_localization),
+        ("fig6_energy_scaling (paper Fig. 6)", fig6_energy_scaling),
+        ("ablations (beyond-paper: phase error / fading / power control)",
+         ablations),
+        ("roofline (EXPERIMENTS §Roofline)", roofline),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for name, mod in modules:
+        if only and only not in name:
+            continue
+        print(f"==== {name} ====", flush=True)
+        t0 = time.time()
+        mod.run(verbose=True)
+        print(f"---- {name}: {time.time() - t0:.1f}s ----", flush=True)
+
+
+if __name__ == "__main__":
+    main()

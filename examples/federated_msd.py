@@ -1,0 +1,17 @@
+"""Paper §VI-A end-to-end: federated year-prediction (MSD-like data), GBMA
+vs FDM-GD vs centralized, with the Fig. 2/3 sweeps reduced to one page.
+
+    PYTHONPATH=src python examples/federated_msd.py
+"""
+import sys
+
+sys.path.insert(0, ".")
+
+from benchmarks import fig2_equal_gains, fig3_rayleigh, fig4_fdm_comparison
+
+print("== equal gains (paper Fig. 2) ==")
+fig2_equal_gains.run()
+print("== Rayleigh fading (paper Fig. 3) ==")
+fig3_rayleigh.run()
+print("== GBMA vs FDM-GD vs centralized (paper Fig. 4) ==")
+fig4_fdm_comparison.run()

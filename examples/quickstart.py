@@ -1,0 +1,53 @@
+"""Quickstart: GBMA in 60 lines — distributed linear regression over a noisy
+Rayleigh-fading MAC, compared with centralized GD and the Theorem-1 bound.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CentralizedGD, ChannelConfig, GBMASimulator)
+from repro.core.theory import (ProblemConstants, stepsize_theorem1,
+                               theorem1_bound)
+from repro.data.synthetic import msd_like_regression
+
+N, DIM, LAM, STEPS = 500, 90, 0.5, 300
+
+# --- federated problem: one (x_n, y_n) sample per node (paper Eq. 27) ----
+X, y, _ = msd_like_regression(N, dim=DIM, seed=0)
+Xj, yj = jnp.array(X), jnp.array(y)
+theta_star = np.linalg.solve(X.T @ X / N + LAM * np.eye(DIM), X.T @ y / N)
+
+
+def local_gradients(theta):  # (N, DIM): every node's local gradient
+    return (Xj @ theta - yj)[:, None] * Xj + LAM * theta[None, :]
+
+
+def objective(theta):
+    t = np.asarray(theta)
+    return float(0.5 * np.mean((X @ t - y) ** 2) + LAM / 2 * np.sum(t * t))
+
+
+# --- channel: Rayleigh fading, per-node energy E_N = N^{-1.5} --------------
+channel = ChannelConfig(fading="rayleigh", scale=1.0, noise_std=1.0,
+                        energy=float(N) ** (-1.5))
+
+eig = np.linalg.eigvalsh(X.T @ X / N)
+pc = ProblemConstants(mu=eig[0] + LAM, L=eig[-1] + LAM,
+                      L_bar=float((X**2).sum(1).max() + LAM), delta=10.0,
+                      r0_sq=float(np.sum(theta_star**2)), dim=DIM)
+beta = stepsize_theorem1(pc, channel, N)  # provably convergent (Eq. 15)
+
+gbma = GBMASimulator(local_gradients, channel, beta)
+traj = gbma.run(jnp.zeros(DIM), STEPS, jax.random.key(0))
+cen = CentralizedGD(local_gradients, beta * channel.mu_h)
+traj_c = cen.run(jnp.zeros(DIM), STEPS)
+
+f_star = objective(theta_star)
+print(f"excess risk  GBMA        : {objective(traj[-1]) - f_star:.3e}")
+print(f"excess risk  centralized : {objective(traj_c[-1]) - f_star:.3e}")
+print(f"Theorem-1 bound at k={STEPS}: "
+      f"{theorem1_bound(np.array([STEPS]), beta, pc, channel, N)[0]:.3e}")
+print(f"total per-slot energy ~ N*E_N = {N * channel.energy:.2e} "
+      f"(vanishes as N grows)")

@@ -1,0 +1,10 @@
+"""Batched serving demo: prefill + 32-token greedy decode on any assigned
+architecture (reduced config by default so it runs on CPU).
+
+    PYTHONPATH=src python examples/serve_batch.py --arch gemma2-9b
+    PYTHONPATH=src python examples/serve_batch.py --arch rwkv6-7b
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

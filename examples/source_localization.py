@@ -1,0 +1,16 @@
+"""Paper §VI-B end-to-end: acoustic source localization with a 200-sensor
+network over a fading MAC (non-convex losses — outside Theorems 1/2, still
+converges).
+
+    PYTHONPATH=src python examples/source_localization.py
+"""
+import sys
+
+sys.path.insert(0, ".")
+
+from benchmarks import fig5_localization, fig6_energy_scaling
+
+print("== localization error + energy (paper Fig. 5) ==")
+fig5_localization.run()
+print("== energy scaling law (paper Fig. 6) ==")
+fig6_energy_scaling.run()

@@ -1,0 +1,22 @@
+"""End-to-end driver (deliverable b): train the ~110M-parameter repro-100m
+transformer for a few hundred steps with GBMA over-the-air gradient
+aggregation, on synthetic token data.
+
+Defaults are sized for this CPU container (~15 min); pass --steps/--seq/
+--batch to scale up. `--aggregator centralized` gives the noiseless
+benchmark; `--aggregator fdm` the orthogonal-channel baseline.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 300
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if not any(a.startswith("--arch") for a in sys.argv[1:]):
+        sys.argv.extend(["--arch", "repro-100m"])
+    if not any(a.startswith("--steps") for a in sys.argv[1:]):
+        sys.argv.extend(["--steps", "300"])
+    if not any(a.startswith("--seq") for a in sys.argv[1:]):
+        sys.argv.extend(["--seq", "128"])
+    main()

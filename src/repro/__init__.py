@@ -1,0 +1,5 @@
+"""repro: GBMA — analog over-the-air gradient descent over fading MACs,
+integrated as a first-class gradient-aggregation mode of a multi-pod JAX
+training/serving framework. See DESIGN.md."""
+
+__version__ = "0.1.0"

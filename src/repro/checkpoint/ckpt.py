@@ -1,0 +1,52 @@
+"""Numpy-based pytree checkpointing (offline container: no orbax).
+
+Leaves are stored in an .npz keyed by '/'-joined tree paths; restore
+validates structure against a template tree and re-casts dtypes.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz cannot round-trip ml_dtypes
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save(path: str, tree: PyTree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp, path)
+
+
+def restore(path: str, template: PyTree) -> PyTree:
+    with np.load(path, allow_pickle=False) as data:
+        flat = dict(data.items())
+    leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, t in leaves_t:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in p)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(t.shape):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {t.shape}")
+        leaves.append(np.asarray(jax.numpy.asarray(arr).astype(t.dtype)))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)

@@ -1,0 +1,51 @@
+"""Architecture registry: --arch <id> resolution for launchers and tests."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+
+_MODULES = {
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "minitron-4b": "minitron_4b",
+    "gemma2-9b": "gemma2_9b",
+    "olmo-1b": "olmo_1b",
+    "rwkv6-7b": "rwkv6_7b",
+    "whisper-small": "whisper_small",
+    "gemma-7b": "gemma_7b",
+    "hymba-1.5b": "hymba_1p5b",
+    "pixtral-12b": "pixtral_12b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "repro-100m": "repro_100m",
+}
+
+ARCH_IDS = tuple(k for k in _MODULES if k != "repro-100m")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+# ---------------------------------------------------------------------------
+# which (arch x shape) pairs run, per DESIGN.md §5 skip table
+# ---------------------------------------------------------------------------
+LONG_CONTEXT_OK = {
+    "rwkv6-7b",            # O(1)-state decode
+    "hymba-1.5b",          # SSM + sliding window
+    "gemma2-9b",           # sliding-window variant (global layers windowed)
+    "llama4-maverick-400b-a17b",  # chunked local attention variant
+}
+SKIPS: dict[tuple, str] = {}
+for _a in ARCH_IDS:
+    if _a not in LONG_CONTEXT_OK:
+        SKIPS[(_a, "long_500k")] = (
+            "pure full-attention stack; no sub-quadratic variant in the "
+            "source model (DESIGN.md §5)")
+
+
+def pair_runnable(arch_id: str, shape_name: str) -> tuple[bool, str]:
+    reason = SKIPS.get((arch_id, shape_name))
+    return (reason is None), (reason or "")

@@ -1,0 +1,17 @@
+"""rwkv6-7b [ssm] — Finch: attention-free, token-shift + data-dependent
+per-channel decay WKV recurrence. [arXiv:2404.05892]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="rwkv6-7b",
+    family="ssm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,          # wkv heads, head_dim 64
+    n_kv_heads=64,
+    head_dim=64,
+    d_ff=14336,
+    vocab_size=65536,
+    citation="arXiv:2404.05892",
+    fsdp=True,
+)

@@ -1,0 +1,32 @@
+"""Core contribution of the paper: GBMA over-the-air gradient aggregation."""
+from repro.core.channel import ChannelConfig, edge_noise_std, received_snr_db, sample_gains
+from repro.core.gbma import (
+    GBMAConfig,
+    GBMASimulator,
+    gbma_value_and_grad,
+    node_weights,
+    ota_aggregate,
+    perturb_gradients,
+    shard_map_aggregate,
+)
+from repro.core.baselines import CentralizedGD, FDMGD, PowerControlOTA
+from repro.core import theory, waveform
+
+__all__ = [
+    "ChannelConfig",
+    "GBMAConfig",
+    "GBMASimulator",
+    "CentralizedGD",
+    "FDMGD",
+    "PowerControlOTA",
+    "edge_noise_std",
+    "received_snr_db",
+    "sample_gains",
+    "gbma_value_and_grad",
+    "node_weights",
+    "ota_aggregate",
+    "perturb_gradients",
+    "shard_map_aggregate",
+    "theory",
+    "waveform",
+]

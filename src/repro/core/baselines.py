@@ -1,0 +1,112 @@
+"""Baselines the paper compares against (§VI): centralized GD and FDM-GD,
+plus a CA-DSGD-style power-control OTA baseline from the related work [11].
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import ChannelConfig, sample_gains
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class CentralizedGD:
+    """Noiseless benchmark: theta_{k+1} = theta_k - beta * (1/N) Σ_n g_n."""
+
+    grad_fn: Callable[[Array], Array]  # theta -> (N, d)
+    stepsize: float
+
+    def run(self, theta0: Array, steps: int, key: Array | None = None) -> Array:
+        def body(theta, _):
+            v = jnp.mean(self.grad_fn(theta), axis=0)
+            return theta - self.stepsize * v, theta
+
+        theta_fin, traj = jax.lax.scan(body, theta0, None, length=steps)
+        return jnp.concatenate([traj, theta_fin[None]], axis=0)
+
+
+@dataclasses.dataclass
+class FDMGD:
+    """Distributed GD over orthogonal (FDM/TDM) channels.
+
+    Each node gets its own dimension-per-node channel: the edge receives
+    h_{n,k} g_n + w_n with an *independent* noise vector per node (the noise
+    cost scales with N — the paper's key disadvantage of FDM, §I-A). Channel
+    gains are assumed equalized per-link (coherent detection with channel
+    inversion is standard on dedicated channels), so distortion comes only
+    from the per-node additive noise at energy E_N per node.
+    """
+
+    grad_fn: Callable[[Array], Array]
+    channel: ChannelConfig
+    stepsize: float
+    invert_channel: bool = True
+
+    def run(self, theta0: Array, steps: int, key: Array) -> Array:
+        import math
+
+        def body(theta, k):
+            g = self.grad_fn(theta)  # (N, d)
+            n = g.shape[0]
+            k_h, k_w = jax.random.split(k)
+            noise = self.channel.noise_std / math.sqrt(self.channel.energy) * (
+                jax.random.normal(k_w, g.shape, dtype=g.dtype)
+            )
+            if self.invert_channel:
+                rx = g + noise  # per-link equalized
+            else:
+                h = sample_gains(k_h, self.channel, (n,))
+                rx = h[:, None] * g + noise
+            v = jnp.mean(rx, axis=0)
+            return theta - self.stepsize * v, theta
+
+        keys = jax.random.split(key, steps)
+        theta_fin, traj = jax.lax.scan(body, theta0, keys)
+        return jnp.concatenate([traj, theta_fin[None]], axis=0)
+
+    def slot_energy(self, grads: Array) -> Array:
+        """FDM per-slot energy: N separate transmissions at energy E_N each."""
+        return self.channel.energy * jnp.sum(grads.astype(jnp.float32) ** 2)
+
+
+@dataclasses.dataclass
+class PowerControlOTA:
+    """CA-DSGD-style truncated channel inversion (related work [11]).
+
+    Nodes invert their channel gain so the edge sees the undistorted sum, but
+    nodes in deep fade (h < h_min) stay silent to bound the inversion power.
+    Included to quantify what GBMA gives up / gains by *not* using power
+    control.
+    """
+
+    grad_fn: Callable[[Array], Array]
+    channel: ChannelConfig
+    stepsize: float
+    h_min: float = 0.3
+
+    def run(self, theta0: Array, steps: int, key: Array) -> Array:
+        import math
+
+        def body(theta, k):
+            g = self.grad_fn(theta)
+            n = g.shape[0]
+            k_h, k_w = jax.random.split(k)
+            h = sample_gains(k_h, self.channel, (n,))
+            active = (h >= self.h_min).astype(g.dtype)
+            n_active = jnp.maximum(jnp.sum(active), 1.0)
+            # inverted channels superpose to sum of active gradients
+            sup = jnp.einsum("n,nd->d", active, g)
+            w = self.channel.noise_std / (
+                n_active * math.sqrt(self.channel.energy)
+            ) * jax.random.normal(k_w, (g.shape[1],), dtype=g.dtype)
+            v = sup / n_active + w
+            return theta - self.stepsize * v, theta
+
+        keys = jax.random.split(key, steps)
+        theta_fin, traj = jax.lax.scan(body, theta0, keys)
+        return jnp.concatenate([traj, theta_fin[None]], axis=0)

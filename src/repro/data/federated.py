@@ -1,0 +1,40 @@
+"""Federated partitioning: map a global batch onto GBMA nodes.
+
+The paper's setting assigns each sample (or local dataset) to one node; the
+node computes its local gradient g_n and transmits over the MAC. In the
+framework tier the global batch is partitioned into `n_nodes` contiguous
+example groups, each group belonging to one node, aligned with the
+('pod','data') device sharding so a node's examples never straddle devices
+unless n_nodes < n_devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FederatedSpec:
+    n_nodes: int
+    global_batch: int
+
+    def __post_init__(self):
+        if self.global_batch % self.n_nodes:
+            raise ValueError(
+                f"global_batch {self.global_batch} must divide into "
+                f"{self.n_nodes} nodes")
+
+    @property
+    def examples_per_node(self) -> int:
+        return self.global_batch // self.n_nodes
+
+    def node_of_example(self) -> np.ndarray:
+        return np.repeat(np.arange(self.n_nodes), self.examples_per_node)
+
+
+def partition_rows(X: np.ndarray, y: np.ndarray, n_nodes: int):
+    """Row-partition a dataset across nodes (paper §VI-A: one sample per
+    device). Returns list of (X_n, y_n)."""
+    idx = np.array_split(np.arange(X.shape[0]), n_nodes)
+    return [(X[i], y[i]) for i in idx]

@@ -1,0 +1,81 @@
+"""Jitted public wrapper around the flash-attention kernel.
+
+Handles GQA head grouping ((B, Hq, S, d) queries vs (B, Hkv, S, d) kv),
+backend dispatch (Pallas on TPU, blockwise-jnp on CPU), and padding of
+sequence lengths to block boundaries.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention.kernel import flash_attention_kernel
+from repro.kernels.attention.ref import attention_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "window", "softcap", "impl", "interpret"),
+)
+def multi_head_attention(
+    q: jax.Array,  # (B, Hq, Sq, d)
+    k: jax.Array,  # (B, Hkv, Skv, d)
+    v: jax.Array,  # (B, Hkv, Skv, d)
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    impl: str = "auto",  # 'auto' | 'pallas' | 'ref'
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    if hq % hkv:
+        raise ValueError(f"query heads {hq} must be a multiple of kv heads {hkv}")
+    group = hq // hkv
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+
+    if impl == "ref":
+        out = attention_ref(
+            q.reshape(b * hq, sq, d),
+            k.reshape(b * hq, -1, d),
+            v.reshape(b * hq, -1, d),
+            scale=scale, causal=causal, window=window, softcap=softcap,
+        )
+        return out.reshape(b, hq, sq, d)
+
+    skv = k.shape[2]
+    blk_q = min(128, sq) if sq >= 128 else sq
+    blk_k = min(128, skv) if skv >= 128 else skv
+    pad_q = (-sq) % blk_q
+    pad_k = (-skv) % blk_k
+    if pad_k and not causal:
+        # zero-padded kv columns would attend under a non-causal mask;
+        # non-causal callers (cross-attention) fall back to the oracle path
+        out = attention_ref(
+            q.reshape(b * hq, sq, d), k.reshape(b * hq, skv, d),
+            v.reshape(b * hq, skv, d),
+            scale=scale, causal=causal, window=window, softcap=softcap,
+        )
+        return out.reshape(b, hq, sq, d)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    # padded kv columns must not attend: push them outside the causal frontier
+    # by relying on causal mask when enabled; otherwise mask via big negative k
+    out = flash_attention_kernel(
+        qp.reshape(b * hq, sq + pad_q, d),
+        kp.reshape(b * hq, skv + pad_k, d),
+        vp.reshape(b * hq, skv + pad_k, d),
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        block_q=blk_q, block_k=blk_k, interpret=interpret,
+    )
+    return out.reshape(b, hq, sq + pad_q, d)[:, :, :sq, :]

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash-attention kernel: full-softmax attention
+with identical masking/softcap semantics, materializing the score matrix."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,  # (BH, Sq, d)
+    k: jax.Array,  # (BH, Skv, d)
+    v: jax.Array,  # (BH, Skv, d)
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqd,bkd->bqk", qf, kf) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    sq, skv = q.shape[1], k.shape[1]
+    q_idx = q_offset + jnp.arange(sq)[:, None]
+    k_idx = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=jnp.bool_)
+    if causal:
+        mask &= q_idx >= k_idx
+    if window is not None:
+        mask &= (q_idx - k_idx) < window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vf).astype(q.dtype)

@@ -1,0 +1,55 @@
+"""Jitted public wrapper for the OTA edge-aggregation kernel.
+
+Dispatches to the Pallas TPU kernel on TPU backends (interpret mode for CPU
+testing) and to the jnp oracle otherwise; pads N and d to tile boundaries.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ota.kernel import ota_edge_aggregate_kernel
+from repro.kernels.ota.ref import ota_edge_aggregate_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("noise_scale", "impl", "interpret"))
+def ota_edge_aggregate(
+    grads: jax.Array,
+    gains: jax.Array,
+    noise: jax.Array,
+    *,
+    noise_scale: float,
+    impl: str = "auto",  # 'auto' | 'pallas' | 'ref'
+    interpret: bool = False,
+) -> jax.Array:
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ota_edge_aggregate_ref(grads, gains, noise, noise_scale=noise_scale)
+
+    n, d = grads.shape
+    node_blk = 128 if n >= 128 else max(8, 1 << (n - 1).bit_length())
+    lane_blk = 512 if d >= 512 else 128
+    pad_n = (-n) % node_blk
+    pad_d = (-d) % lane_blk
+    g = jnp.pad(grads, ((0, pad_n), (0, pad_d)))
+    h = jnp.pad(gains, (0, pad_n))
+    w = jnp.pad(noise, (0, pad_d))
+    # padded rows have zero gain -> contribute nothing; fix normalization
+    out = ota_edge_aggregate_kernel(
+        g, h, w,
+        noise_scale=noise_scale,
+        node_blk=node_blk,
+        lane_blk=lane_blk,
+        interpret=interpret,
+    )
+    out = out[:d].astype(jnp.float32) * ((n + pad_n) / n)
+    # the noise term was scaled too; undo for the noise component
+    out = out - noise_scale * noise.astype(jnp.float32) * ((n + pad_n) / n - 1.0)
+    return out.astype(grads.dtype)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the OTA edge aggregation kernel (paper Eq. 8)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ota_edge_aggregate_ref(
+    grads: jax.Array,  # (N, d)
+    gains: jax.Array,  # (N,)
+    noise: jax.Array,  # (d,)
+    *,
+    noise_scale: float,
+) -> jax.Array:
+    n = grads.shape[0]
+    v = jnp.einsum(
+        "n,nd->d", gains.astype(jnp.float32), grads.astype(jnp.float32)
+    ) / n
+    return (v + noise_scale * noise.astype(jnp.float32)).astype(grads.dtype)

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel for the RWKV6 (Finch) WKV recurrence with
+data-dependent decay [arXiv:2404.05892]:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (S: (D_k, D_v) per head)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+TPU adaptation: the recurrence is inherently sequential in t, so the kernel
+keeps the per-(batch, head) state S resident in VMEM across *time-chunk* grid
+steps — HBM traffic is one read of (r,k,v,w) per chunk and one write of o,
+instead of per-step state round-trips (the naive scan's 2*T*D*D state
+traffic). The grid is (B*H, T/C) with the time dimension sequential; inside a
+chunk a fori_loop performs C rank-1 updates on the VMEM-resident S with VPU
+outer products. D=64 lanes align with the VPU registers. A fully parallel
+chunked-matmul formulation (q̃(KᵀV) style) is a further §Perf step; it trades
+the sequential VPU work for MXU matmuls but needs per-channel log-space
+rescaling to stay stable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sf_ref,
+                s_ref, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    u = u_ref[...].astype(jnp.float32)  # (1, D)
+
+    def step(t, _):
+        r = r_ref[0, t, :].astype(jnp.float32)[None, :]  # (1, D)
+        k = k_ref[0, t, :].astype(jnp.float32)[None, :]
+        v = v_ref[0, t, :].astype(jnp.float32)[None, :]
+        w = w_ref[0, t, :].astype(jnp.float32)[None, :]
+        s = s_ref[...]  # (D, D): rows = k-channels, cols = v-channels
+        kv = k.T @ v  # rank-1 outer product (D, D)
+        o = r @ (s + u.T * kv)  # (1, D)
+        o_ref[0, t, :] = o[0].astype(o_ref.dtype)
+        s_ref[...] = w.T * s + kv
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+    @pl.when(ci == n_chunks - 1)
+    def _finalize():
+        sf_ref[0] = s_ref[...].astype(sf_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_kernel(
+    r: jax.Array,  # (BH, T, D) receptance
+    k: jax.Array,  # (BH, T, D) key
+    v: jax.Array,  # (BH, T, D) value
+    w: jax.Array,  # (BH, T, D) decay in (0,1): exp(-exp(w_raw))
+    u: jax.Array,  # (BH, D)    per-channel bonus
+    s0: jax.Array,  # (BH, D, D) initial state
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    bh, t, d = r.shape
+    chunk = min(chunk, t)
+    if t % chunk:
+        raise ValueError(f"T={t} must tile by chunk={chunk}")
+    n_chunks = t // chunk
+    grid = (bh, n_chunks)
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, n_chunks=n_chunks)
+    out, s_fin = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),  # r
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),  # k
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),  # v
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),  # w
+            pl.BlockSpec((1, d), lambda b, c: (b, 0)),  # u
+            pl.BlockSpec((1, d, d), lambda b, c: (b, 0, 0)),  # s0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, d, d), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, d), r.dtype),
+            jax.ShapeDtypeStruct((bh, d, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return out, s_fin

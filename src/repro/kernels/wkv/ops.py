@@ -1,0 +1,45 @@
+"""Jitted public wrapper for the WKV6 recurrence kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv.kernel import wkv6_kernel
+from repro.kernels.wkv.ref import wkv6_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk", "interpret"))
+def wkv6(
+    r: jax.Array,  # (B, H, T, D)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,  # (H, D)
+    s0: jax.Array | None = None,  # (B, H, D, D)
+    *,
+    impl: str = "auto",
+    chunk: int = 64,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    b, h, t, d = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, d, d), jnp.float32)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    flat = lambda x: x.reshape(b * h, *x.shape[2:])
+    u_b = jnp.broadcast_to(u[None], (b, h, d))
+    if impl == "ref":
+        out, s_fin = wkv6_ref(flat(r), flat(k), flat(v), flat(w), flat(u_b), flat(s0))
+    else:
+        pad = (-t) % chunk
+        pads = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        out, s_fin = wkv6_kernel(
+            pads(flat(r)), pads(flat(k)), pads(flat(v)),
+            # pad decay with ones so the padded tail leaves the state intact
+            jnp.pad(flat(w), ((0, 0), (0, pad), (0, 0)), constant_values=1.0),
+            flat(u_b), flat(s0), chunk=min(chunk, t + pad), interpret=interpret,
+        )
+        out = out[:, :t]
+    return out.reshape(b, h, t, d), s_fin.reshape(b, h, d, d)

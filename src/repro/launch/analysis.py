@@ -1,0 +1,164 @@
+"""Compiled-artifact analysis: memory stats, HLO FLOPs/bytes, and collective
+traffic parsed from the optimized HLO — the inputs to the §Roofline terms.
+
+cost_analysis() numbers are PER-DEVICE (the SPMD module is the per-device
+program); collective bytes likewise. Known limitation (documented in
+EXPERIMENTS.md): XLA's HloCostAnalysis does not multiply `while`-loop bodies
+by their trip count, so scan-over-layers compute is under-counted — we
+therefore report the *analytic* model FLOPs alongside and use HLO numbers for
+structure (collectives, memory) rather than absolute compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in optimized HLO,
+    multiplied by while-loop trip counts where inferable (scan bodies are
+    separate computations called from a while op; XLA names them ..body..).
+    """
+    # map computation name -> accumulated collective bytes
+    per_comp: Dict[str, Dict[str, int]] = {}
+    comp = "main"
+    for line in hlo_text.splitlines():
+        striped = line.strip()
+        m = re.match(r"%?([\w\.\-]+)\s*\([^)]*\)\s*->", striped)
+        if striped.startswith(("ENTRY", "%")) and "{" in striped and "->" in striped:
+            mm = re.search(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", striped)
+            if mm:
+                comp = mm.group(1)
+            continue
+        for op in _COLLECTIVES:
+            # match "= <shape> op-name(" or "= (<tuple>) op-name("
+            if re.search(rf"=\s*[^=]*\s{op}(?:-start|-done)?\(", striped):
+                lhs = striped.split("=", 1)[1]
+                shape_part = lhs.split(op)[0]
+                b = _shape_bytes(shape_part)
+                d = per_comp.setdefault(comp, {})
+                d[op] = d.get(op, 0) + b
+                break
+    # trip counts: find while ops and their body computation names
+    trip_counts: Dict[str, int] = {}
+    for m in re.finditer(r"while\(.*?\), condition=%?([\w\.\-]+), "
+                         r"body=%?([\w\.\-]+)", hlo_text):
+        body = m.group(2)
+        trip_counts.setdefault(body, 0)
+    # XLA often annotates known trip counts
+    for m in re.finditer(r"body=%?([\w\.\-]+).*?trip_count=\"?(\d+)", hlo_text):
+        trip_counts[m.group(1)] = int(m.group(2))
+
+    out: Dict[str, int] = {}
+    for comp_name, d in per_comp.items():
+        mult = 1
+        for body, tc in trip_counts.items():
+            if comp_name.startswith(body) or body == comp_name:
+                mult = max(tc, 1)
+        for op, b in d.items():
+            out[op] = out.get(op, 0) + b * mult
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    hlo_flops: float  # per device
+    hlo_bytes: float  # per device
+    coll_bytes: float  # per device
+    model_flops: float  # analytic, per device
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return max(self.hlo_flops, self.model_flops) / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        h = max(self.hlo_flops, self.model_flops)
+        return self.model_flops / h if h else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "model_flops": self.model_flops,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+        }
+
+
+def memory_stats(compiled) -> dict:
+    try:
+        ms = compiled.memory_analysis()
+        return {
+            "argument_bytes": int(getattr(ms, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ms, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ms, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(ms, "generated_code_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(ms, "peak_memory_in_bytes", 0) or 0),
+            "alias_bytes": int(getattr(ms, "alias_size_in_bytes", 0)),
+        }
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def cost_stats(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {"flops": float(ca.get("flops", 0.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+    except Exception as e:  # pragma: no cover
+        return {"flops": 0.0, "bytes_accessed": 0.0, "error": str(e)}

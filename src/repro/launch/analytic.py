@@ -1,0 +1,80 @@
+"""Analytic MODEL_FLOPS (6·N·D train / 2·N·D inference, MoE-active-aware,
+plus attention term) — the 'useful compute' reference for §Roofline."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models.model import InputShape, Model
+
+
+def param_counts(model: Model) -> tuple[int, int]:
+    """(total_params, active_params_per_token)."""
+    cfg = model.cfg
+    shapes = model.params_shape()
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if "experts_" in name:
+            expert += n
+    if cfg.n_experts:
+        active = total - expert + expert * cfg.top_k // cfg.n_experts
+    else:
+        active = total
+    return total, active
+
+
+def _attention_flops(cfg: ModelConfig, batch: int, sq: int, skv: int,
+                     causal: bool) -> float:
+    """qk^T + pv MACs across layers, windowed layers at their window."""
+    from repro.models.transformer import build_segments
+
+    if cfg.family == "ssm":
+        # wkv recurrence: per token per layer ~ 3 * H * hd * hd MACs
+        h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+        return 2.0 * 3 * cfg.n_layers * batch * sq * h * hd * hd
+    total = 0.0
+    segs = build_segments(cfg) if cfg.family != "hybrid" else None
+    layers = []
+    if segs is None:  # hymba: every layer attn + ssm
+        for i in range(cfg.n_layers):
+            w = None if i in cfg.global_layer_ids else cfg.sliding_window
+            layers.append(w)
+    else:
+        for seg in segs:
+            for _ in range(seg.n_steps):
+                for sub in seg.subs:
+                    layers.append(sub.window)
+    hd = cfg.qk_nope_dim + cfg.qk_rope_dim if cfg.use_mla else cfg.head_dim
+    hv = cfg.v_head_dim if cfg.use_mla else cfg.head_dim
+    for w in layers:
+        eff = min(w, skv) if w else skv
+        kv_per_q = eff * (0.5 if (causal and sq > 1) else 1.0)
+        total += 2.0 * batch * sq * kv_per_q * cfg.n_heads * (hd + hv)
+    if cfg.family == "hybrid":  # ssm branch
+        total += 2.0 * 3 * cfg.n_layers * batch * sq * cfg.d_model * cfg.ssm_state
+    return total
+
+
+def model_flops(model: Model, shape: InputShape, chips: int) -> float:
+    """Analytic FLOPs per device for one step of `shape`."""
+    cfg = model.cfg
+    total, active = param_counts(model)
+    b = shape.global_batch
+    if shape.kind == "train":
+        tokens = b * shape.seq_len
+        f = 6.0 * active * tokens
+        f += 3.0 * _attention_flops(cfg, b, shape.seq_len, shape.seq_len, True)
+    elif shape.kind == "prefill":
+        tokens = b * shape.seq_len
+        f = 2.0 * active * tokens
+        f += _attention_flops(cfg, b, shape.seq_len, shape.seq_len, True)
+    else:  # decode: one token against a seq_len cache
+        f = 2.0 * active * b
+        f += _attention_flops(cfg, b, 1, shape.seq_len, False)
+    return f / chips

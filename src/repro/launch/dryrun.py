@@ -1,0 +1,216 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh) combo
+lowers and compiles on the production mesh, and extract memory/cost/collective
+statistics for §Dry-run and §Roofline of EXPERIMENTS.md.
+
+MUST be executed as its own process (`python -m repro.launch.dryrun ...`):
+the XLA_FLAGS line above runs before any jax import so 512 placeholder host
+devices exist. Never set that flag globally — tests/benches expect 1 device.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCH_IDS, get_config, pair_runnable
+from repro.core.channel import ChannelConfig
+from repro.core.gbma import GBMAConfig
+from repro.launch import analysis
+from repro.launch.analytic import model_flops, param_counts
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import SHAPES, build_model
+from repro.optim.gd import gd
+from repro.sharding.specs import (batch_shardings, cache_shardings,
+                                  params_shardings, use_dp_over_model,
+                                  use_mesh)
+from repro.training.train_step import TrainConfig, build_train_step
+
+
+def step_and_specs(model, shape, mesh, aggregator="gbma",
+                   noise_dtype="float32", rng_impl="threefry2x32",
+                   microbatches=1):
+    """Build the step fn + (arg ShapeDtypeStructs, in_shardings)."""
+    cfg = model.cfg
+    n_nodes = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n_nodes *= mesh.shape[a]
+    params_shape = model.params_shape()
+    p_sh = params_shardings(params_shape, cfg.fsdp, mesh)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(aggregator=aggregator,
+                           gbma=GBMAConfig(n_nodes=n_nodes,
+                                           channel=ChannelConfig(),
+                                           noise_dtype=noise_dtype),
+                           rng_impl=rng_impl, microbatches=microbatches)
+        opt = gd(stepsize=1e-3)
+        opt_state = jax.eval_shape(opt.init, params_shape)
+        o_sh = jax.tree_util.tree_map(lambda _: None, opt_state)
+        step = build_train_step(model, tcfg, opt)
+        batch = model.input_specs(shape)
+        b_sh = batch_shardings(batch, mesh)
+        args = (params_shape, opt_state, batch,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        in_sh = (p_sh, o_sh, b_sh, None)
+        out_sh = ((p_sh, o_sh, None))
+        fn = step
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        batch = model.input_specs(shape)
+        b_sh = batch_shardings(batch, mesh)
+        args = (params_shape, batch)
+        in_sh = (p_sh, b_sh)
+        out_sh = None
+        fn = model.prefill
+        donate = ()
+    else:  # decode
+        cache_len = model.cache_len_for(shape)
+        cache = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, cache_len))
+        c_sh = cache_shardings(cache, mesh)
+        batch = model.input_specs(shape)
+        args = (params_shape, cache, batch["token"],
+                jax.ShapeDtypeStruct((), jnp.int32))
+        in_sh = (p_sh, c_sh, batch_shardings(batch, mesh)["token"], None)
+        out_sh = (None, c_sh)
+        fn = model.decode_step
+        donate = (1,)
+    return fn, args, in_sh, out_sh, donate
+
+
+def run_pair(arch: str, shape_name: str, mesh_kind: str,
+             aggregator: str = "gbma", verbose: bool = True,
+             opts: tuple = ()) -> dict:
+    shape = SHAPES[shape_name]
+    ok, reason = pair_runnable(arch, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+    cfg = get_config(arch)
+    noise_dtype = "float32"
+    rng_impl = "threefry2x32"
+    dp_over_model = False
+    microbatches = 1
+    for o in opts:  # §Perf switches, e.g. opt_pad_heads / opt_bf16_dispatch
+        if o == "bf16_noise":
+            noise_dtype = "bfloat16"
+        elif o == "rbg":
+            rng_impl = "rbg"
+        elif o == "dp_over_model":
+            dp_over_model = True
+        elif o.startswith("micro"):
+            microbatches = int(o[5:])
+        else:
+            cfg = cfg.with_(**{f"opt_{o}" if not o.startswith("opt_") else o:
+                               True})
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        with use_mesh(mesh), use_dp_over_model(dp_over_model):
+            fn, args, in_sh, out_sh, donate = step_and_specs(
+                model, shape, mesh, aggregator, noise_dtype, rng_impl,
+                microbatches)
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = analysis.memory_stats(compiled)
+        cost = analysis.cost_stats(compiled)
+        coll = analysis.collective_bytes(compiled.as_text())
+        total_p, active_p = param_counts(model)
+        terms = analysis.RooflineTerms(
+            hlo_flops=cost["flops"],
+            hlo_bytes=cost["bytes_accessed"],
+            coll_bytes=float(coll.get("total", 0)),
+            model_flops=model_flops(model, shape, chips),
+            chips=chips,
+        )
+        rec = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "status": "ok", "chips": chips,
+            "params_total": total_p, "params_active": active_p,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory": mem, "cost": cost, "collectives": coll,
+            "roofline": terms.as_dict(),
+        }
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_kind}] OK "
+                  f"compile={t_compile:.0f}s "
+                  f"args={mem.get('argument_bytes', 0)/2**30:.2f}GiB "
+                  f"temp={mem.get('temp_bytes', 0)/2**30:.2f}GiB "
+                  f"dominant={terms.dominant}", flush=True)
+            print(f"  memory_analysis: {mem}", flush=True)
+            print(f"  cost_analysis: flops={cost['flops']:.3e} "
+                  f"bytes={cost['bytes_accessed']:.3e}", flush=True)
+            print(f"  collectives: { {k: f'{v/2**20:.1f}MiB' for k, v in coll.items()} }",
+                  flush=True)
+        return rec
+    except Exception as e:  # noqa: BLE001
+        if verbose:
+            traceback.print_exc()
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "error", "error": f"{type(e).__name__}: {e}"}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS + ("repro-100m",))
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("pod", "multipod", "both"),
+                    default="pod")
+    ap.add_argument("--aggregator", default="gbma",
+                    choices=("gbma", "fdm", "centralized"))
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) pair")
+    ap.add_argument("--out", default=None, help="write JSON records here")
+    ap.add_argument("--opts", default="",
+                    help="comma list of §Perf switches: pad_heads,"
+                         "bf16_dispatch,bf16_noise")
+    args = ap.parse_args()
+    opts = tuple(o for o in args.opts.split(",") if o)
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    pairs = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                pairs.append((a, s))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        pairs = [(args.arch, args.shape)]
+
+    records = []
+    for a, s in pairs:
+        for mk in meshes:
+            records.append(run_pair(a, s, mk, args.aggregator, opts=opts))
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)) or ".",
+                    exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {len(records)} records to {args.out}")
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_err = len(records) - n_ok - n_skip
+    print(f"dry-run: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh construction. A FUNCTION (not a module-level constant) so
+importing this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod (TPU v5e-class); 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh needs {n} devices but only {len(devices)} present; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "BEFORE importing jax (launch/dryrun.py does this)")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh for CPU smoke runs."""
+    return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])

@@ -1,0 +1,395 @@
+"""Attention for the model zoo: GQA/MQA, sliding-window, logit softcap,
+blockwise (flash-style) jnp implementation for memory-sane lowering on any
+backend, Pallas TPU kernel dispatch, and ring-buffer KV caches for decode.
+
+The blockwise path is the production CPU-lowering implementation: the
+(Sq, Skv) score matrix is never materialized — nested lax.scan over q/kv
+blocks with online-softmax accumulators, so compiled peak memory stays
+O(block^2) per head. The Pallas kernel (kernels/attention) is selected on
+TPU backends.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.layers import dense_init, rope
+from repro.sharding.specs import axis_size, data_axes, shard
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def head_axis_for(n_heads: int) -> str | None:
+    """Shard attention over the TP axis on the q-head dim when divisible; the
+    non-dividing archs (llama4 40H, minitron 24H, whisper 12H, hymba 25H)
+    run attention head-replicated over 'model' at baseline (DESIGN.md §6;
+    head-padding is a §Perf item). Under pure-DP mode there is no TP axis —
+    heads stay whole and the batch covers every device."""
+    from repro.sharding.specs import tp_axis
+
+    tp = tp_axis()
+    if tp is None:
+        return None
+    return tp if n_heads % max(axis_size(tp), 1) == 0 else None
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+def attention_params(key: Array, cfg: ModelConfig, lead=()) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, (*lead, cfg.d_model, cfg.q_dim), dt),
+        "wk": dense_init(ks[1], cfg.d_model, (*lead, cfg.d_model, cfg.kv_dim), dt),
+        "wv": dense_init(ks[2], cfg.d_model, (*lead, cfg.d_model, cfg.kv_dim), dt),
+        "wo": dense_init(ks[3], cfg.q_dim, (*lead, cfg.q_dim, cfg.d_model), dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((*lead, cfg.head_dim), dt)
+        p["k_norm"] = jnp.ones((*lead, cfg.head_dim), dt)
+    return p
+
+
+# --------------------------------------------------------------------------
+# blockwise (flash-style) jnp attention
+# --------------------------------------------------------------------------
+def _block_mask(q_idx: Array, k_idx: Array, *, causal: bool,
+                window: Optional[int], is_global: Optional[Array]) -> Array:
+    """(bq, bk) boolean mask from absolute indices; `is_global` (traced bool)
+    disables the window at runtime (hymba's few full-attention layers inside a
+    scanned homogeneous stack)."""
+    mask = jnp.ones(q_idx.shape[:1] + k_idx.shape[-1:], dtype=jnp.bool_)
+    if causal:
+        mask &= q_idx[:, None] >= k_idx[None, :]
+    if window is not None:
+        wmask = (q_idx[:, None] - k_idx[None, :]) < window
+        if is_global is not None:
+            wmask = jnp.logical_or(wmask, is_global)
+        mask &= wmask
+    return mask
+
+
+def blockwise_attention(
+    q: Array,  # (B, Hq, Sq, d)
+    k: Array,  # (B, Hkv, Skv, d)
+    v: Array,
+    *,
+    scale: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    is_global: Optional[Array] = None,
+    q_offset: int = 0,
+    block_q: int = 512,
+    block_kv: int = 1024,
+    head_axis: Optional[str] = None,
+) -> Array:
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_kv, skv)
+    pad_q, pad_k = (-sq) % bq, (-skv) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nq, nk = (sq + pad_q) // bq, (skv + pad_k) // bk
+    qg = q.reshape(b, hkv, g, sq + pad_q, d)
+
+    def q_step(_, qi):
+        q_blk = jax.lax.dynamic_slice_in_dim(qg, qi * bq, bq, axis=3)
+        q_idx = q_offset + qi * bq + jnp.arange(bq)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, kj * bk, bk, axis=2)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, kj * bk, bk, axis=2)
+            s = jnp.einsum(
+                "bhgqd,bhkd->bhgqk",
+                q_blk.astype(jnp.float32), k_blk.astype(jnp.float32),
+            ) * scale
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            k_idx = kj * bk + jnp.arange(bk)
+            mask = _block_mask(q_idx, k_idx, causal=causal, window=window,
+                               is_global=is_global)
+            mask &= (k_idx < skv)[None, :]  # kv padding
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m, m_cur)
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        da = data_axes()
+        init = (
+            shard(jnp.full((b, hkv, g, bq, 1), NEG_INF, jnp.float32),
+                  da, head_axis),
+            shard(jnp.zeros((b, hkv, g, bq, 1), jnp.float32), da, head_axis),
+            shard(jnp.zeros((b, hkv, g, bq, dv), jnp.float32), da, head_axis),
+        )
+        # remat: the backward pass recomputes each block's (bq, bk) scores
+        # instead of storing them — otherwise training stores the full S^2
+        # probability matrix across scan steps (flash-attention invariant).
+        kv_body = jax.checkpoint(
+            kv_step, policy=jax.checkpoint_policies.nothing_saveable)
+        (m, l, acc), _ = jax.lax.scan(kv_body, init, jnp.arange(nk))
+        l = jnp.where(l == 0.0, 1.0, l)
+        return None, (acc / l).astype(q.dtype)
+
+    q_body = jax.checkpoint(
+        q_step, policy=jax.checkpoint_policies.nothing_saveable)
+    _, out = jax.lax.scan(q_body, None, jnp.arange(nq))  # (nq, b, hkv, g, bq, dv)
+    out = jnp.moveaxis(out, 0, 3).reshape(b, hkv, g, sq + pad_q, dv)
+    return out.reshape(b, hq, sq + pad_q, dv)[:, :, :sq]
+
+
+def full_attention(
+    q: Array, k: Array, v: Array, *, scale: float, causal: bool = True,
+    window: Optional[int] = None, softcap: Optional[float] = None,
+    is_global: Optional[Array] = None, q_offset: int = 0,
+) -> Array:
+    """Materializing oracle — used for small shapes and as the test reference."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = _block_mask(q_offset + jnp.arange(sq), jnp.arange(skv),
+                       causal=causal, window=window, is_global=is_global)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, dv).astype(q.dtype)
+
+
+def sdpa(q, k, v, cfg: ModelConfig, *, causal=True, window=None,
+         is_global=None, q_offset=0, impl: str = "auto",
+         head_axis: Optional[str] = None):
+    """Dispatch: Pallas kernel on TPU, blockwise jnp elsewhere."""
+    scale = cfg.head_dim**-0.5
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "blockwise"
+    if impl == "pallas" and is_global is None:
+        from repro.kernels.attention.ops import multi_head_attention
+
+        return multi_head_attention(
+            q, k, v, scale=scale, causal=causal, window=window,
+            softcap=cfg.attn_softcap)
+    if impl == "full":
+        return full_attention(q, k, v, scale=scale, causal=causal,
+                              window=window, softcap=cfg.attn_softcap,
+                              is_global=is_global, q_offset=q_offset)
+    if cfg.opt_flash_vjp and is_global is None:
+        from repro.models.flash_vjp import flash_attention
+
+        return flash_attention(
+            q, k, v, scale=scale, causal=causal, window=window,
+            softcap=cfg.attn_softcap, q_offset=q_offset,
+            block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv)
+    return blockwise_attention(
+        q, k, v, scale=scale, causal=causal, window=window,
+        softcap=cfg.attn_softcap, is_global=is_global, q_offset=q_offset,
+        block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+        head_axis=head_axis)
+
+
+# --------------------------------------------------------------------------
+# KV cache (ring buffer for windowed layers; optional int8 quantization)
+# --------------------------------------------------------------------------
+def init_kv_cache(batch: int, cache_len: int, cfg: ModelConfig, lead=()) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    shape = (*lead, batch, cfg.n_kv_heads, cache_len, cfg.head_dim)
+    cache = {"pos_ids": jnp.full((*lead, cache_len), -1, jnp.int32)}
+    if cfg.opt_int8_cache:
+        cache["k"] = jnp.zeros(shape, jnp.int8)
+        cache["v"] = jnp.zeros(shape, jnp.int8)
+        sshape = (*lead, batch, cfg.n_kv_heads, cache_len, 1)
+        cache["k_scale"] = jnp.zeros(sshape, jnp.float32)
+        cache["v_scale"] = jnp.zeros(sshape, jnp.float32)
+    else:
+        cache["k"] = jnp.zeros(shape, dt)
+        cache["v"] = jnp.zeros(shape, dt)
+    return cache
+
+
+def _quantize(x: Array) -> tuple[Array, Array]:
+    """Per-(token, head) symmetric int8 quantization over head_dim."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def cache_kv(cache: dict, which: str) -> Array:
+    """Read (and dequantize if int8) the cached K or V, fp32."""
+    x = cache[which].astype(jnp.float32)
+    if f"{which}_scale" in cache:
+        x = x * cache[f"{which}_scale"]
+    return x
+
+
+def cache_write(cache: dict, k_new: Array, v_new: Array, pos: Array) -> dict:
+    """Write one token (B, Hkv, 1, d) at absolute position `pos` (scalar)."""
+    cache_len = cache["k"].shape[-2]
+    slot = jnp.mod(pos, cache_len)
+    out = dict(cache)
+    if "k_scale" in cache:
+        for name, new in (("k", k_new), ("v", v_new)):
+            q, s = _quantize(new)
+            out[name] = jax.lax.dynamic_update_slice_in_dim(
+                cache[name], q, slot, axis=-2)
+            out[f"{name}_scale"] = jax.lax.dynamic_update_slice_in_dim(
+                cache[f"{name}_scale"], s, slot, axis=-2)
+    else:
+        out["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new,
+                                                       slot, axis=-2)
+        out["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new,
+                                                       slot, axis=-2)
+    out["pos_ids"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos_ids"], pos.reshape(1).astype(jnp.int32), slot, axis=-1)
+    return out
+
+
+def decode_attention(
+    q: Array,  # (B, Hq, 1, d)
+    cache: dict,
+    pos: Array,  # scalar absolute position of the query token
+    cfg: ModelConfig,
+    *,
+    window: Optional[int] = None,
+    is_global: Optional[Array] = None,
+) -> Array:
+    b, hq, _, d = q.shape
+    hkv = cache["k"].shape[1]
+    g = hq // hkv
+    scale = cfg.head_dim**-0.5
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, cache_kv(cache, "k")) * scale
+    if cfg.attn_softcap is not None:
+        s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+    pid = cache["pos_ids"]  # (S,)
+    valid = (pid >= 0) & (pid <= pos)
+    if window is not None:
+        wvalid = (pos - pid) < window
+        if is_global is not None:
+            wvalid = jnp.logical_or(wvalid, is_global)
+        valid &= wvalid
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, cache_kv(cache, "v"))
+    return out.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# full attention sub-layer (projections + rope + sdpa / decode)
+# --------------------------------------------------------------------------
+def attn_apply(
+    x: Array,  # (B, S, D)
+    p: dict,
+    cfg: ModelConfig,
+    *,
+    positions: Array,  # (S,) absolute positions
+    causal: bool = True,
+    window: Optional[int] = None,
+    is_global: Optional[Array] = None,
+    cache: Optional[dict] = None,  # decode mode when set with S==1
+    decode_pos: Optional[Array] = None,
+) -> tuple[Array, Optional[dict]]:
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(
+        b, s, cfg.n_heads, cfg.head_dim)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(
+        b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(
+        b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"])
+        k = layers.rms_norm(k, p["k_norm"])
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q, k, v = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))  # (B, H, S, d)
+
+    if cache is not None and s == 1:
+        cache = cache_write(cache, k, v, decode_pos)
+        out = decode_attention(q, cache, decode_pos, cfg, window=window,
+                               is_global=is_global)
+    else:
+        # distribution: shard heads over 'model' when divisible — for GQA
+        # that requires materializing kv at q-head width first (the repeat
+        # is sharded 16-way, cheaper than replicating attention 16x)
+        k0, v0 = k, v  # kv-head-width tensors for the cache
+        head_axis = head_axis_for(cfg.n_heads)
+        pad_h = 0
+        if head_axis is not None and cfg.n_kv_heads < cfg.n_heads:
+            rep = cfg.n_heads // cfg.n_kv_heads
+            k = jnp.repeat(k, rep, axis=1)
+            v = jnp.repeat(v, rep, axis=1)
+        elif head_axis is None and cfg.opt_pad_heads:
+            # §Perf: activation-level head padding — zero-pad q/k/v to the
+            # next multiple of the model-axis size so attention shards
+            # instead of replicating; padded heads are sliced off before wo
+            msize = max(axis_size("model"), 1)
+            hq_pad = -cfg.n_heads % msize
+            if cfg.n_kv_heads < cfg.n_heads:
+                rep = cfg.n_heads // cfg.n_kv_heads
+                k = jnp.repeat(k, rep, axis=1)
+                v = jnp.repeat(v, rep, axis=1)
+            if hq_pad:
+                zpad = ((0, 0), (0, hq_pad), (0, 0), (0, 0))
+                q = jnp.pad(q, zpad)
+                k = jnp.pad(k, zpad)
+                v = jnp.pad(v, zpad)
+                pad_h = hq_pad
+            head_axis = "model"
+        da = data_axes()
+        q = shard(q, da, head_axis)
+        k = shard(k, da, head_axis)
+        v = shard(v, da, head_axis)
+        out = sdpa(q, k, v, cfg, causal=causal, window=window,
+                   is_global=is_global, head_axis=head_axis)
+        out = shard(out, da, head_axis)
+        if pad_h:
+            out = out[:, : cfg.n_heads]
+        k, v = k0, v0
+        if cache is not None:  # prefill into cache
+            cache_len = cache["k"].shape[-2]
+            take = min(s, cache_len)
+            new_cache = dict(cache)
+            if "k_scale" in cache:
+                for name, t in (("k", k), ("v", v)):
+                    q8, sc = _quantize(t[:, :, -take:])
+                    new_cache[name] = jax.lax.dynamic_update_slice_in_dim(
+                        cache[name], q8, 0, axis=-2)
+                    new_cache[f"{name}_scale"] = \
+                        jax.lax.dynamic_update_slice_in_dim(
+                            cache[f"{name}_scale"], sc, 0, axis=-2)
+            else:
+                new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k[:, :, -take:], 0, axis=-2)
+                new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v[:, :, -take:], 0, axis=-2)
+            new_cache["pos_ids"] = jnp.pad(
+                positions[-take:].astype(jnp.int32),
+                (0, cache_len - take), constant_values=-1)
+            cache = new_cache
+    out = jnp.swapaxes(out, 1, 2).reshape(b, s, cfg.q_dim)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), cache

@@ -1,0 +1,211 @@
+"""Flash-attention with a custom VJP (jnp, backend-agnostic).
+
+The default blockwise attention relies on jax.checkpoint around its scan
+bodies: correct, but the backward re-runs the whole forward (including the
+O(S²·d) pv matmul and online-softmax rescaling) before transposing it. The
+flash backward (Dao et al.) instead saves only (out, lse) per row and
+recomputes just the score blocks, in two passes:
+
+  pass 1 (kv-major):  dk_j = Σ_i ds_ijᵀ q_i · scale,  dv_j = Σ_i p_ijᵀ do_i
+  pass 2 (q-major):   dq_i = Σ_j ds_ij k_j · scale
+  with  p = exp(s_cap − lse),  ds_cap = p ⊙ (do·vᵀ − D),  D = rowsum(do ⊙ out)
+  and the softcap chain rule  ds = ds_cap ⊙ (1 − (s_cap/cap)²).
+
+Enabled per-config via `opt_flash_vjp` (§Perf); equivalence against
+full-attention autodiff is tested in tests/test_flash_vjp.py.
+Supports causal, sliding-window and softcap; GQA via the (b, hkv, g, s, d)
+grouped layout shared with blockwise_attention. `is_global` (hymba) falls
+back to the checkpointed path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(q_idx, k_idx, causal, window, skv):
+    m = (k_idx < skv)[None, :]
+    if causal:
+        m = m & (q_idx[:, None] >= k_idx[None, :])
+    if window is not None:
+        m = m & ((q_idx[:, None] - k_idx[None, :]) < window)
+    return m  # (bq, bk)
+
+
+def _scores(q_blk, k_blk, scale, softcap):
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk.astype(jnp.float32),
+                   k_blk.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    return s  # post-cap scores, fp32
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def flash_mha(q, k, v, scale, causal, window, softcap, q_offset,
+              block_q, block_kv):
+    """q: (B,Hkv,G,Sq,d); k/v: (B,Hkv,Skv,d). Returns (B,Hkv,G,Sq,dv)."""
+    out, _ = _fwd_impl(q, k, v, scale, causal, window, softcap, q_offset,
+                       block_q, block_kv)
+    return out
+
+
+def _fwd_impl(q, k, v, scale, causal, window, softcap, q_offset,
+              block_q, block_kv):
+    b, h, g, sq, d = q.shape
+    skv = k.shape[2]
+    dv = v.shape[-1]
+    bq, bk = min(block_q, sq), min(block_kv, skv)
+    pad_q, pad_k = (-sq) % bq, (-skv) % bk
+    qp = jnp.pad(q, ((0, 0),) * 3 + ((0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0),) * 2 + ((0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0),) * 2 + ((0, pad_k), (0, 0)))
+    nq, nk = (sq + pad_q) // bq, (skv + pad_k) // bk
+
+    def q_step(_, qi):
+        q_blk = jax.lax.dynamic_slice_in_dim(qp, qi * bq, bq, axis=3)
+        q_idx = q_offset + qi * bq + jnp.arange(bq)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(kp, kj * bk, bk, axis=2)
+            v_blk = jax.lax.dynamic_slice_in_dim(vp, kj * bk, bk, axis=2)
+            s = _scores(q_blk, k_blk, scale, softcap)
+            msk = _mask(q_idx, kj * bk + jnp.arange(bk), causal, window, skv)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, h, g, bq, 1), NEG_INF, jnp.float32),
+                jnp.zeros((b, h, g, bq, 1), jnp.float32),
+                jnp.zeros((b, h, g, bq, dv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        lse = m + jnp.log(l_safe)
+        return None, ((acc / l_safe).astype(q.dtype), lse)
+
+    _, (out, lse) = jax.lax.scan(q_step, None, jnp.arange(nq))
+    out = jnp.moveaxis(out, 0, 3).reshape(b, h, g, sq + pad_q, dv)[:, :, :, :sq]
+    lse = jnp.moveaxis(lse, 0, 3).reshape(b, h, g, sq + pad_q, 1)[:, :, :, :sq]
+    return out, lse
+
+
+def _flash_fwd(q, k, v, scale, causal, window, softcap, q_offset,
+               block_q, block_kv):
+    out, lse = _fwd_impl(q, k, v, scale, causal, window, softcap, q_offset,
+                         block_q, block_kv)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(scale, causal, window, softcap, q_offset, block_q, block_kv,
+               res, d_out):
+    q, k, v, out, lse = res
+    b, h, g, sq, d = q.shape
+    skv = k.shape[2]
+    dv = v.shape[-1]
+    bq, bk = min(block_q, sq), min(block_kv, skv)
+    pad_q, pad_k = (-sq) % bq, (-skv) % bk
+    qp = jnp.pad(q, ((0, 0),) * 3 + ((0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0),) * 2 + ((0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0),) * 2 + ((0, pad_k), (0, 0)))
+    do = jnp.pad(d_out.astype(jnp.float32),
+                 ((0, 0),) * 3 + ((0, pad_q), (0, 0)))
+    # D_i = rowsum(do ⊙ out); padded lse rows -> NEG_INF so p = 0 there
+    dvec = jnp.sum(do[:, :, :, : sq] * out.astype(jnp.float32), axis=-1,
+                   keepdims=True)
+    dvec = jnp.pad(dvec, ((0, 0),) * 3 + ((0, pad_q), (0, 0)))
+    lsep = jnp.pad(lse, ((0, 0),) * 3 + ((0, pad_q), (0, 0)),
+                   constant_values=-NEG_INF)
+    nq, nk = (sq + pad_q) // bq, (skv + pad_k) // bk
+
+    def block_grads(qi, kj):
+        """Recompute p/ds for block (qi, kj); shared by both passes."""
+        q_blk = jax.lax.dynamic_slice_in_dim(qp, qi * bq, bq, axis=3)
+        k_blk = jax.lax.dynamic_slice_in_dim(kp, kj * bk, bk, axis=2)
+        v_blk = jax.lax.dynamic_slice_in_dim(vp, kj * bk, bk, axis=2)
+        do_blk = jax.lax.dynamic_slice_in_dim(do, qi * bq, bq, axis=3)
+        lse_blk = jax.lax.dynamic_slice_in_dim(lsep, qi * bq, bq, axis=3)
+        d_blk = jax.lax.dynamic_slice_in_dim(dvec, qi * bq, bq, axis=3)
+        q_idx = q_offset + qi * bq + jnp.arange(bq)
+        s_cap = _scores(q_blk, k_blk, scale, softcap)
+        msk = _mask(q_idx, kj * bk + jnp.arange(bk), causal, window, skv)
+        p = jnp.where(msk[None, None, None],
+                      jnp.exp(s_cap - lse_blk), 0.0)  # (b,h,g,bq,bk)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", do_blk,
+                        v_blk.astype(jnp.float32))
+        ds = p * (dp - d_blk)
+        if softcap is not None:
+            ds = ds * (1.0 - jnp.square(s_cap / softcap))
+        return q_blk, k_blk, do_blk, p, ds
+
+    # ---- pass 1: kv-major -> dk, dv ---------------------------------------
+    def kv_major(_, kj):
+        def q_inner(carry, qi):
+            dk_acc, dv_acc = carry
+            q_blk, _, do_blk, p, ds = block_grads(qi, kj)
+            dk_acc += jnp.einsum("bhgqk,bhgqd->bhkd", ds,
+                                 q_blk.astype(jnp.float32)) * scale
+            dv_acc += jnp.einsum("bhgqk,bhgqd->bhkd", p, do_blk)
+            return (dk_acc, dv_acc), None
+
+        init = (jnp.zeros((b, h, bk, d), jnp.float32),
+                jnp.zeros((b, h, bk, dv), jnp.float32))
+        (dk_b, dv_b), _ = jax.lax.scan(q_inner, init, jnp.arange(nq))
+        return None, (dk_b, dv_b)
+
+    _, (dk_blocks, dv_blocks) = jax.lax.scan(kv_major, None, jnp.arange(nk))
+    dk = jnp.moveaxis(dk_blocks, 0, 2).reshape(b, h, skv + pad_k, d)[:, :, :skv]
+    dv_out = jnp.moveaxis(dv_blocks, 0, 2).reshape(b, h, skv + pad_k,
+                                                   dv)[:, :, :skv]
+
+    # ---- pass 2: q-major -> dq ---------------------------------------------
+    def q_major(_, qi):
+        def kv_inner(dq_acc, kj):
+            _, k_blk, _, _, ds = block_grads(qi, kj)
+            dq_acc += jnp.einsum("bhgqk,bhkd->bhgqd", ds,
+                                 k_blk.astype(jnp.float32)) * scale
+            return dq_acc, None
+
+        dq_b, _ = jax.lax.scan(
+            kv_inner, jnp.zeros((b, h, g, bq, d), jnp.float32),
+            jnp.arange(nk))
+        return None, dq_b
+
+    _, dq_blocks = jax.lax.scan(q_major, None, jnp.arange(nq))
+    dq = jnp.moveaxis(dq_blocks, 0, 3).reshape(b, h, g, sq + pad_q,
+                                               d)[:, :, :, :sq]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv_out.astype(v.dtype))
+
+
+flash_mha.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Hq, Sq, d)
+    k: jax.Array,  # (B, Hkv, Skv, d)
+    v: jax.Array,
+    *,
+    scale: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_offset: int = 0,
+    block_q: int = 512,
+    block_kv: int = 1024,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, d)
+    out = flash_mha(qg, k, v, scale, causal, window, softcap, q_offset,
+                    min(block_q, sq), min(block_kv, k.shape[2]))
+    return out.reshape(b, hq, sq, -1)

@@ -1,0 +1,133 @@
+"""Shared model building blocks: norms, RoPE, MLPs, embeddings, initializers."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def dense_init(key: Array, fan_in: int, shape, dtype) -> Array:
+    std = 1.0 / math.sqrt(fan_in)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def embed_init(key: Array, shape, dtype) -> Array:
+    return (0.02 * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def rms_norm(x: Array, scale: Optional[Array], eps: float = 1e-6,
+             plus_one: bool = False) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        s = scale.astype(jnp.float32)
+        y = y * (1.0 + s if plus_one else s)
+    return y.astype(x.dtype)
+
+
+def nonparam_layer_norm(x: Array, eps: float = 1e-5) -> Array:
+    """OLMo's non-parametric LayerNorm [arXiv:2402.00838]: no scale, no bias."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def apply_norm(x: Array, p, cfg: ModelConfig) -> Array:
+    if cfg.norm == "ln_nonparam":
+        return nonparam_layer_norm(x)
+    # gemma-family rms norm uses the (1 + scale) parameterization
+    return rms_norm(x, p, plus_one=cfg.norm_style == "sandwich" or cfg.embed_scale)
+
+
+def norm_param(cfg: ModelConfig, *lead) -> Optional[Array]:
+    if cfg.norm == "ln_nonparam":
+        return None
+    return jnp.zeros((*lead, cfg.d_model), _dt(cfg)) if (
+        cfg.norm_style == "sandwich" or cfg.embed_scale
+    ) else jnp.ones((*lead, cfg.d_model), _dt(cfg))
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[None, :, None] * freqs[None, None, :]
+        ang = ang[:, :, None, :]  # (1, S, 1, half)
+    else:
+        ang = positions.astype(jnp.float32)[:, :, None] * freqs[None, None, :]
+        ang = ang[:, :, None, :]  # (B, S, 1, half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def sinusoidal_positions(positions: Array, dim: int) -> Array:
+    """Whisper-style sinusoidal embeddings, (len(positions), dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# mlp
+# --------------------------------------------------------------------------
+def activation(x: Array, act: str) -> Array:
+    if act == "silu":
+        return jax.nn.silu(x)
+    if act == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if act == "relu2":  # nemotron/minitron squared ReLU [arXiv:2407.14679]
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(act)
+
+
+def mlp_params(key: Array, cfg: ModelConfig, d_ff: Optional[int] = None,
+               lead=()) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(ks[0], cfg.d_model, (*lead, cfg.d_model, d_ff), dt),
+        "wo": dense_init(ks[1], d_ff, (*lead, d_ff, cfg.d_model), dt),
+    }
+    if cfg.glu:
+        p["wg"] = dense_init(ks[2], cfg.d_model, (*lead, cfg.d_model, d_ff), dt)
+    return p
+
+
+def mlp_apply(x: Array, p: dict, cfg: ModelConfig) -> Array:
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    if cfg.glu:
+        h = activation(jnp.einsum("...d,df->...f", x, p["wg"]), cfg.act) * h
+    else:
+        h = activation(h, cfg.act)
+    return jnp.einsum("...f,fd->...d", h, p["wo"])

@@ -1,0 +1,157 @@
+"""Multi-head Latent Attention (DeepSeek-V3 [arXiv:2412.19437]).
+
+Queries and keys/values are projected through low-rank latents; only the
+compressed kv latent c_kv (kv_lora_rank) plus the shared rotary key
+(qk_rope_dim) are cached at decode. TPU adaptation: the decode path uses the
+*absorbed-matmul* formulation — q_nope is pre-multiplied by W_ukᵀ so scores
+are computed directly in the latent space and the per-head K/V are never
+expanded over the 32k/500k cache (turning a memory-bound cache expansion into
+two small MXU matmuls).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import (blockwise_attention, full_attention,
+                                    head_axis_for)
+from repro.models.layers import dense_init, rms_norm, rope
+from repro.sharding.specs import data_axes, shard
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def mla_params(key: Array, cfg: ModelConfig, lead=()) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d, h = cfg.d_model, cfg.n_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 8)
+    p = {}
+    if cfg.q_lora_rank:
+        p["q_a"] = dense_init(ks[0], d, (*lead, d, cfg.q_lora_rank), dt)
+        p["q_a_norm"] = jnp.ones((*lead, cfg.q_lora_rank), dt)
+        p["q_b"] = dense_init(ks[1], cfg.q_lora_rank,
+                              (*lead, cfg.q_lora_rank, h * qd), dt)
+    else:
+        p["q_b"] = dense_init(ks[1], d, (*lead, d, h * qd), dt)
+    p["kv_a"] = dense_init(ks[2], d,
+                           (*lead, d, cfg.kv_lora_rank + cfg.qk_rope_dim), dt)
+    p["kv_a_norm"] = jnp.ones((*lead, cfg.kv_lora_rank), dt)
+    p["kv_b_k"] = dense_init(ks[3], cfg.kv_lora_rank,
+                             (*lead, h, cfg.kv_lora_rank, cfg.qk_nope_dim), dt)
+    p["kv_b_v"] = dense_init(ks[4], cfg.kv_lora_rank,
+                             (*lead, h, cfg.kv_lora_rank, cfg.v_head_dim), dt)
+    p["wo"] = dense_init(ks[5], h * cfg.v_head_dim,
+                         (*lead, h * cfg.v_head_dim, d), dt)
+    return p
+
+
+def _project_q(x: Array, p: dict, cfg: ModelConfig) -> tuple[Array, Array]:
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["q_a"]), p["q_a_norm"])
+        q = jnp.einsum("bsr,rh->bsh", cq, p["q_b"])
+    else:
+        q = jnp.einsum("bsd,dh->bsh", x, p["q_b"])
+    q = q.reshape(b, s, h, qd)
+    return q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+
+
+def _project_kv_latent(x: Array, p: dict, cfg: ModelConfig):
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["kv_a"])
+    c = rms_norm(ckv[..., : cfg.kv_lora_rank], p["kv_a_norm"])
+    k_rope = ckv[..., cfg.kv_lora_rank:]  # (B, S, qk_rope_dim), shared heads
+    return c, k_rope
+
+
+def init_mla_cache(batch: int, cache_len: int, cfg: ModelConfig, lead=()) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "c": jnp.zeros((*lead, batch, cache_len, cfg.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((*lead, batch, cache_len, cfg.qk_rope_dim), dt),
+        "pos_ids": jnp.full((*lead, cache_len), -1, jnp.int32),
+    }
+
+
+def mla_apply(
+    x: Array,  # (B, S, D)
+    p: dict,
+    cfg: ModelConfig,
+    *,
+    positions: Array,
+    cache: Optional[dict] = None,
+    decode_pos: Optional[Array] = None,
+) -> tuple[Array, Optional[dict]]:
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    q_nope, q_rope = _project_q(x, p, cfg)
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    c, k_rope = _project_kv_latent(x, p, cfg)
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    if cache is not None and s == 1:
+        # ---- absorbed decode: never expand per-head K/V over the cache ----
+        slot = jnp.mod(decode_pos, cache["c"].shape[-2])
+        cache = {
+            "c": jax.lax.dynamic_update_slice_in_dim(cache["c"], c, slot, -2),
+            "k_rope": jax.lax.dynamic_update_slice_in_dim(
+                cache["k_rope"], k_rope, slot, -2),
+            "pos_ids": jax.lax.dynamic_update_slice_in_dim(
+                cache["pos_ids"], decode_pos.reshape(1).astype(jnp.int32),
+                slot, -1),
+        }
+        # absorb W_uk into q: (B,1,H,nope) x (H,rank,nope) -> (B,H,rank)
+        q_lat = jnp.einsum("bshn,hrn->bhr", q_nope.astype(jnp.float32),
+                           p["kv_b_k"].astype(jnp.float32))
+        s_lat = jnp.einsum("bhr,btr->bht", q_lat,
+                           cache["c"].astype(jnp.float32))
+        s_rope = jnp.einsum("bshr,btr->bht", q_rope.astype(jnp.float32),
+                            cache["k_rope"].astype(jnp.float32))
+        scores = (s_lat + s_rope) * scale
+        valid = (cache["pos_ids"] >= 0) & (cache["pos_ids"] <= decode_pos)
+        scores = jnp.where(valid[None, None], scores, NEG_INF)
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bht,btr->bhr", attn, cache["c"].astype(jnp.float32))
+        out = jnp.einsum("bhr,hrv->bhv", ctx, p["kv_b_v"].astype(jnp.float32))
+        out = out.reshape(b, 1, h * cfg.v_head_dim).astype(x.dtype)
+    else:
+        # ---- train / prefill: expand K/V per head, flash attention ----
+        k_nope = jnp.einsum("bsr,hrn->bshn", c, p["kv_b_k"])
+        v = jnp.einsum("bsr,hrv->bshv", c, p["kv_b_v"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                      (b, s, h, cfg.qk_rope_dim))], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        qt, kt, vt = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+        head_axis = head_axis_for(cfg.n_heads)
+        da = data_axes()
+        qt = shard(qt, da, head_axis)
+        kt = shard(kt, da, head_axis)
+        vt = shard(vt, da, head_axis)
+        if s <= 1024:
+            o = full_attention(qt, kt, vt, scale=scale, causal=True)
+        else:
+            o = blockwise_attention(qt, kt, vt, scale=scale, causal=True,
+                                    block_q=cfg.attn_block_q,
+                                    block_kv=cfg.attn_block_kv,
+                                    head_axis=head_axis)
+        out = jnp.swapaxes(o, 1, 2).reshape(b, s, h * cfg.v_head_dim)
+        if cache is not None:  # prefill
+            take = min(s, cache["c"].shape[-2])
+            cache = {
+                "c": jax.lax.dynamic_update_slice_in_dim(
+                    cache["c"], c[:, -take:], 0, -2),
+                "k_rope": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k_rope"], k_rope[:, -take:], 0, -2),
+                "pos_ids": jnp.pad(
+                    positions[-take:].astype(jnp.int32),
+                    (0, cache["c"].shape[-2] - take), constant_values=-1),
+            }
+    return jnp.einsum("bsv,vd->bsd", out, p["wo"]), cache

@@ -1,0 +1,251 @@
+"""Unified model API over all assigned architecture families.
+
+Every architecture exposes the same five entry points, so the training
+substrate (GBMA aggregation), the serving engine, and the dry-run launcher
+are family-agnostic:
+
+    model = build_model(cfg)
+    params = model.init_params(key)
+    losses = model.train_loss_per_example(params, batch)   # (B,) for GBMA
+    logits, cache = model.prefill(params, batch)
+    logits, cache = model.decode_step(params, cache, token, pos)
+    cache = model.init_cache(batch_size, cache_len)
+    batch = model.input_specs(shape)                       # ShapeDtypeStructs
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, rwkv, ssm as hymba
+from repro.models import transformer as tfm
+from repro.models.layers import apply_norm
+from repro.sharding.specs import data_axes, shard
+
+Array = jax.Array
+
+MTP_WEIGHT = 0.3
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+class Model:
+    """Family-dispatching façade; all methods are pure and jit-friendly."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.kind = (
+            "rwkv" if cfg.family == "ssm" else
+            "hymba" if cfg.family == "hybrid" else
+            "encdec" if cfg.family == "encdec" else
+            "transformer")
+
+    # ------------------------------------------------------------------ init
+    def init_params(self, key: Array):
+        cfg = self.cfg
+        if self.kind == "rwkv":
+            return rwkv.init_params(key, cfg)
+        if self.kind == "hymba":
+            return hymba.init_params(key, cfg)
+        if self.kind == "encdec":
+            k1, k2 = jax.random.split(key)
+            p = tfm.init_decoder(k1, cfg, cross_attn=True)
+            p["encoder"] = encdec.encoder_params(k2, cfg)
+            return p
+        return tfm.init_decoder(key, cfg)
+
+    def params_shape(self):
+        return jax.eval_shape(self.init_params, jax.random.key(0))
+
+    # ----------------------------------------------------------------- train
+    def train_loss_per_example(self, params, batch) -> tuple[Array, dict]:
+        """Per-example losses (B,) (MoE aux folded in), plus metrics."""
+        cfg = self.cfg
+        tokens = batch["tokens"]  # (B, S+1)
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        inputs = shard(inputs, data_axes())
+        b, s = inputs.shape
+        aux = jnp.zeros((), jnp.float32)
+
+        if self.kind == "rwkv":
+            h, _ = rwkv.forward(params, inputs, cfg)
+            losses = tfm.chunked_xent(params, h, labels,
+                                      jnp.ones_like(labels), cfg)
+        elif self.kind == "hymba":
+            h, _ = hymba.forward(params, inputs, cfg, prepend_meta=True)
+            h = h[:, cfg.meta_tokens:]
+            losses = tfm.chunked_xent(params, h, labels,
+                                      jnp.ones_like(labels), cfg)
+        elif self.kind == "encdec":
+            enc = encdec.encoder_forward(params["encoder"], batch["frames"],
+                                         cfg)
+            x = tfm.embed_tokens(params, inputs, cfg)
+            h, _, aux = tfm.decoder_forward(params, x, cfg,
+                                            positions=jnp.arange(s),
+                                            enc_out=enc)
+            losses = tfm.chunked_xent(params, h, labels,
+                                      jnp.ones_like(labels), cfg)
+        else:
+            x = tfm.embed_tokens(params, inputs, cfg)
+            mask = jnp.ones_like(labels)
+            if cfg.n_patches:  # VLM: patch embeddings prepended, not predicted
+                patches = batch["patch_embed"].astype(x.dtype)
+                x = jnp.concatenate([patches, x], axis=1)
+            h, _, aux = tfm.decoder_forward(
+                params, x, cfg, positions=jnp.arange(x.shape[1]))
+            if cfg.n_patches:
+                h = h[:, cfg.n_patches:]
+            losses = tfm.chunked_xent(params, h, labels, mask, cfg)
+            if cfg.mtp:  # deepseek-v3 multi-token prediction (k=1)
+                losses = losses + MTP_WEIGHT * self._mtp_loss(
+                    params, h, inputs, labels, cfg)
+
+        metrics = {"loss": jnp.mean(losses), "aux_loss": aux}
+        losses = losses + cfg.router_aux_weight * aux
+        return losses, metrics
+
+    def _mtp_loss(self, params, h, inputs, labels, cfg) -> Array:
+        """Predict token t+2 from a one-block MTP head on (h_t, emb_{t+1}).
+        Rematerialized: the unscanned MTP block otherwise keeps ~30 GiB of
+        full-sequence activations alive for its backward (671B config)."""
+        if cfg.remat:
+            return jax.checkpoint(
+                functools.partial(self._mtp_loss_inner, cfg=cfg),
+                policy=jax.checkpoint_policies.nothing_saveable,
+            )(params, h, inputs, labels)
+        return self._mtp_loss_inner(params, h, inputs, labels, cfg=cfg)
+
+    def _mtp_loss_inner(self, params, h, inputs, labels, cfg) -> Array:
+        mp = params["mtp"]
+        h_in = apply_norm(h[:, :-1], mp.get("norm_h"), cfg)
+        e_in = apply_norm(tfm.embed_tokens(params, inputs[:, 1:], cfg),
+                          mp.get("norm_e"), cfg)
+        z = jnp.einsum("bsd,dk->bsk",
+                       jnp.concatenate([h_in, e_in], axis=-1), mp["proj"])
+        z, _, _ = tfm.sublayer_apply(
+            z, mp["block"], tfm.SubLayer("dense", None), cfg,
+            positions=jnp.arange(z.shape[1]))
+        mask = jnp.ones_like(labels[:, 1:])
+        return tfm.chunked_xent(params, z, labels[:, 1:], mask, cfg)
+
+    # ------------------------------------------------------------- serving
+    def init_cache(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        if self.kind == "rwkv":
+            return rwkv.init_state(batch, cfg)
+        if self.kind == "hymba":
+            return hymba.init_cache(batch, cache_len, cfg)
+        return tfm.init_decoder_cache(batch, cache_len, cfg,
+                                      cross_attn=self.kind == "encdec")
+
+    def prefill(self, params, batch, max_len: Optional[int] = None
+                ) -> tuple[Array, Any]:
+        """Processes the prompt; returns (last-position logits fp32, cache).
+        `max_len` (static) sizes the KV cache beyond the prompt for
+        subsequent decode steps."""
+        cfg = self.cfg
+        tokens = batch["tokens"]  # (B, S)
+        b, s = tokens.shape
+        if self.kind == "rwkv":
+            h, state = rwkv.forward(params, tokens, cfg,
+                                    state=rwkv.init_state(b, cfg))
+            return tfm.logits_fn(params, h[:, -1:], cfg)[:, 0], state
+        if self.kind == "hymba":
+            cache = hymba.init_cache(
+                b, max(max_len or 0, s) + cfg.meta_tokens, cfg)
+            h, cache = hymba.forward(params, tokens, cfg, cache=cache,
+                                     prepend_meta=True)
+            return tfm.logits_fn(params, h[:, -1:], cfg)[:, 0], cache
+        clen = max(max_len or 0, s)
+        cache = tfm.init_decoder_cache(b, clen, cfg,
+                                       cross_attn=self.kind == "encdec")
+        enc = None
+        if self.kind == "encdec":
+            enc = encdec.encoder_forward(params["encoder"], batch["frames"],
+                                         cfg)
+        x = tfm.embed_tokens(params, tokens, cfg)
+        if cfg.n_patches and "patch_embed" in batch:
+            x = jnp.concatenate([batch["patch_embed"].astype(x.dtype), x],
+                                axis=1)
+            cache = tfm.init_decoder_cache(b, max(clen, x.shape[1]), cfg)
+        h, cache, _ = tfm.decoder_forward(
+            params, x, cfg, positions=jnp.arange(x.shape[1]), cache=cache,
+            enc_out=enc)
+        return tfm.logits_fn(params, h[:, -1:], cfg)[:, 0], cache
+
+    def decode_step(self, params, cache, token: Array, pos: Array):
+        """One-token decode: token (B,), pos scalar absolute position.
+        Returns (logits (B, V) fp32, new_cache)."""
+        cfg = self.cfg
+        b = token.shape[0]
+        if self.kind == "rwkv":
+            h, state = rwkv.forward(params, token[:, None], cfg, state=cache)
+            return tfm.logits_fn(params, h, cfg)[:, 0], state
+        if self.kind == "hymba":
+            h, cache = hymba.forward(params, token[:, None], cfg, cache=cache,
+                                     decode_pos=pos)
+            return tfm.logits_fn(params, h, cfg)[:, 0], cache
+        x = tfm.embed_tokens(params, token[:, None], cfg)
+        h, cache, _ = tfm.decoder_forward(
+            params, x, cfg, positions=pos.reshape(1), cache=cache,
+            decode_pos=pos)
+        return tfm.logits_fn(params, h, cfg)[:, 0], cache
+
+    # ------------------------------------------------------------ input specs
+    def input_specs(self, shape: InputShape, dtype=jnp.int32) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of `shape`."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+        emb = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.dtype(cfg.dtype))
+        if shape.kind == "train":
+            if self.kind == "encdec":
+                return {"tokens": tok(b, s + 1), "frames": emb(b, cfg.enc_seq,
+                                                               cfg.d_model)}
+            if cfg.n_patches:
+                return {"tokens": tok(b, s - cfg.n_patches + 1),
+                        "patch_embed": emb(b, cfg.n_patches, cfg.d_model)}
+            return {"tokens": tok(b, s + 1)}
+        if shape.kind == "prefill":
+            base = {"tokens": tok(b, s)}
+            if self.kind == "encdec":
+                base["frames"] = emb(b, cfg.enc_seq, cfg.d_model)
+            if cfg.n_patches:
+                base = {"tokens": tok(b, s - cfg.n_patches),
+                        "patch_embed": emb(b, cfg.n_patches, cfg.d_model)}
+            return base
+        # decode: one token with a seq_len-deep cache
+        return {"token": tok(b), "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def cache_len_for(self, shape: InputShape) -> int:
+        """Cache depth for decode shapes; windowed archs bound the 524k decode
+        by their window/state (documented in DESIGN.md)."""
+        cfg = self.cfg
+        if self.kind in ("rwkv",):
+            return 1  # O(1) state
+        if shape.seq_len > 65536 and cfg.sliding_window:
+            return cfg.sliding_window
+        return shape.seq_len
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,207 @@
+"""Mixture-of-Experts layer (llama4-style top-1 and deepseek-v3-style
+shared+routed top-8) with GShard-style grouped capacity dispatch.
+
+Distribution strategy (baseline): tokens are viewed as G groups (G = a
+config-chosen grouping, set to the mesh size by the launcher) sharded over
+all mesh axes; the dispatch one-hot is built per group (local cumsum, no
+cross-group communication); the (G, E, C, D) expert-input tensor is resharded
+from group-sharded to expert-sharded — GSPMD lowers that reshard to an
+all-to-all, reproducing the GShard schedule. Expert weights are sharded
+(E:'model', F:'data'-when-fsdp). Over-capacity tokens are dropped (standard
+GShard semantics) and counted in aux stats.
+
+The router aux (load-balance) loss follows Switch/GShard: E * Σ_e f_e·p_e.
+DeepSeek-v3's sigmoid scoring + per-expert bias is supported via
+`router_scoring='sigmoid'` [arXiv:2412.19437].
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import activation, dense_init
+from repro.sharding.specs import (axis_size, current_mesh, data_axes, shard,
+                                  tp_axis)
+
+Array = jax.Array
+
+
+def _a2a_reshard(x: Array, *, invert: bool) -> Array:
+    """Explicit GShard dispatch all-to-all over the TP axis via shard_map.
+
+    forward (invert=False): (g:(pod,data,model), e, c, d)
+                          -> (g:(pod,data), e:'model', c, d)
+    On the 2x16x16 mesh GSPMD lowers the equivalent with_sharding_constraint
+    reshard through its replicate-then-repartition fallback (a full
+    all-gather of the expert-input tensor, ~320 GiB/device/step for the 400B
+    config); the explicit tiled all_to_all is exact and local.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    mesh = current_mesh()
+    tp = tp_axis()
+    if mesh is None or tp is None or axis_size(tp) == 1:
+        return x
+    da = data_axes()
+    g, e = x.shape[0], x.shape[1]
+    if g % axis_size(tuple(da) + (tp,)) or e % axis_size(tp):
+        return x  # small-group regimes: leave the reshard to GSPMD
+
+    if not invert:
+        in_spec = P((*da, tp), None, None, None)
+        out_spec = P(da, tp, None, None)
+
+        def body(xl):  # (g_loc, e, c, d) -> (g_loc*m, e/m, c, d)
+            return jax.lax.all_to_all(xl, tp, split_axis=1, concat_axis=0,
+                                      tiled=True)
+    else:
+        in_spec = P(da, tp, None, None)
+        out_spec = P((*da, tp), None, None, None)
+
+        def body(xl):  # (g_loc, e_loc, c, d) -> (g_loc/m, e_loc*m, c, d)
+            return jax.lax.all_to_all(xl, tp, split_axis=0, concat_axis=1,
+                                      tiled=True)
+
+    return jax.shard_map(body, mesh=mesh, in_specs=(in_spec,),
+                         out_specs=out_spec)(x)
+
+
+def moe_params(key: Array, cfg: ModelConfig, lead=()) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.expert_ff
+    ks = jax.random.split(key, 8)
+    p = {
+        "router": dense_init(ks[0], d, (*lead, d, e), jnp.dtype("float32")),
+        "experts_wi": dense_init(ks[1], d, (*lead, e, d, f), dt),
+        "experts_wg": dense_init(ks[2], d, (*lead, e, d, f), dt),
+        "experts_wo": dense_init(ks[3], f, (*lead, e, f, d), dt),
+    }
+    if cfg.router_scoring == "sigmoid":
+        p["router_bias"] = jnp.zeros((*lead, e), jnp.float32)
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        p["shared_wi"] = dense_init(ks[4], d, (*lead, d, fs), dt)
+        p["shared_wg"] = dense_init(ks[5], d, (*lead, d, fs), dt)
+        p["shared_wo"] = dense_init(ks[6], fs, (*lead, fs, d), dt)
+    return p
+
+
+def _capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(tokens_per_group * cfg.top_k * cfg.capacity_factor
+                      / cfg.n_experts))
+    return max(min(tokens_per_group, max(c, 4)), 1)
+
+
+GROUP_SIZE = 256  # tokens per routing group; dispatch-einsum cost is
+# O(tg * E * C * d) = O(k * tg^2 * d) per group — quadratic in group size, so
+# groups are kept small (GShard-style) and their count is a multiple of the
+# mesh size so the group dim shards over every axis.
+
+
+def moe_apply(
+    x: Array,  # (B, S, D)
+    p: dict,
+    cfg: ModelConfig,
+    n_groups: int = 1,  # minimum group count (mesh size), from the caller
+) -> tuple[Array, Array]:
+    """Returns (output (B,S,D), aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    # groups = (example, seq-chunk) pairs: the (b, s, d) -> (g, tg, d)
+    # reshape then merges a batch-sharded dim with a seq-chunk dim whose
+    # sharding ('model', via sequence parallelism) is minor-most — tile-order
+    # aligned, so GSPMD reshards it locally. A flat t//GROUP_SIZE grouping
+    # forces a 3-axis reshard that hits the replicate-then-repartition
+    # fallback on the (pod, data, model) mesh (~320 GiB/device of gathers).
+    tg = min(GROUP_SIZE, s)
+    while s % tg:
+        tg //= 2
+    g = t // tg
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(tg, cfg)
+    tp = tp_axis()
+    da = data_axes()
+    xg = x.reshape(b, s // tg, tg, d)
+    xg = shard(xg, da, tp, None, None)
+    xg = xg.reshape(g, tg, d)
+    xg = shard(xg, (*da, *((tp,) if tp else ())))
+
+    # ---- routing (fp32) ----------------------------------------------------
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    if cfg.router_scoring == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        sel_scores = scores + p["router_bias"][None, None]
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+        sel_scores = scores
+
+    # ---- iterative top-k with capacity assignment ---------------------------
+    # §Perf: each (token, expert, slot) cell is written at most once across
+    # the k rounds, so bf16 combine weights lose no accumulation precision
+    comb_dt = jnp.bfloat16 if cfg.opt_bf16_dispatch else jnp.float32
+    dispatch = jnp.zeros((g, tg, e, cap), jnp.bool_)
+    combine = jnp.zeros((g, tg, e, cap), comb_dt)
+    counts = jnp.zeros((g, e), jnp.int32)  # slots already used per expert
+    remaining = sel_scores
+    gate_sum = jnp.zeros((g, tg), jnp.float32)
+    frac_routed = jnp.zeros((g, e), jnp.float32)
+    for _ in range(k):
+        eid = jnp.argmax(remaining, axis=-1)  # (g, tg)
+        onehot = jax.nn.one_hot(eid, e, dtype=jnp.float32)  # (g, tg, e)
+        frac_routed += jnp.mean(onehot, axis=1)
+        # position of each token within its expert's slots this round
+        pos_in_e = jnp.cumsum(onehot, axis=1) - onehot + counts[:, None, :]
+        slot = jnp.einsum("gte,gte->gt", pos_in_e, onehot).astype(jnp.int32)
+        keep = slot < cap
+        gate = jnp.take_along_axis(scores, eid[..., None], axis=-1)[..., 0]
+        gate = jnp.where(keep, gate, 0.0)
+        slot_oh = jax.nn.one_hot(jnp.where(keep, slot, cap), cap + 1,
+                                 dtype=comb_dt)[..., :cap]  # (g,tg,cap)
+        d_k = onehot.astype(comb_dt)[..., None] * slot_oh[:, :, None, :]
+        dispatch |= d_k.astype(jnp.bool_)
+        combine += gate.astype(comb_dt)[..., None, None] * d_k
+        gate_sum += gate
+        counts += jnp.sum(onehot, axis=1).astype(jnp.int32)
+        remaining = remaining - onehot * 1e9  # mask chosen expert
+    if cfg.top_k > 1:  # renormalize combined gates over selected experts
+        denom = jnp.maximum(gate_sum, 1e-9)[..., None, None]
+        combine = (combine / denom.astype(comb_dt)).astype(comb_dt)
+
+    # ---- aux load-balance loss (Switch-style) --------------------------------
+    mean_prob = jnp.mean(scores, axis=1)  # (g, e)
+    aux = e * jnp.mean(jnp.sum(frac_routed / k * mean_prob, axis=-1))
+
+    # ---- dispatch -> expert compute -> combine --------------------------------
+    disp = dispatch.astype(xg.dtype)
+    expert_in = jnp.einsum("gtec,gtd->gecd", disp, xg)
+    # reshard (g:(pod,data,model), e:None) -> (g:(pod,data), e:'model'):
+    # the GShard dispatch all-to-all over 'model'
+    if cfg.opt_shardmap_moe:
+        expert_in = _a2a_reshard(expert_in, invert=False)
+    expert_in = shard(expert_in, data_axes(), tp_axis())
+    h = jnp.einsum("gecd,edf->gecf", expert_in, p["experts_wi"])
+    hg = jnp.einsum("gecd,edf->gecf", expert_in, p["experts_wg"])
+    h = activation(hg, cfg.act) * h
+    h = shard(h, data_axes(), tp_axis())
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["experts_wo"])
+    if cfg.opt_shardmap_moe:
+        expert_out = _a2a_reshard(expert_out, invert=True)
+    tp = tp_axis()
+    expert_out = shard(expert_out,
+                       (*data_axes(), *((tp,) if tp else ())))  # a2a back
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(xg.dtype), expert_out)
+
+    # ---- shared experts (deepseek-v3) ------------------------------------------
+    if cfg.n_shared_experts:
+        hs = jnp.einsum("gtd,df->gtf", xg, p["shared_wi"])
+        hsg = jnp.einsum("gtd,df->gtf", xg, p["shared_wg"])
+        out = out + jnp.einsum(
+            "gtf,fd->gtd", activation(hsg, cfg.act) * hs, p["shared_wo"])
+
+    out = out.reshape(b, s, d)
+    out = shard(out, data_axes(), None, None)
+    return out, aux.astype(jnp.float32)

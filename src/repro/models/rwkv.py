@@ -1,0 +1,172 @@
+"""RWKV6 "Finch" — attention-free RNN with data-dependent decay
+[arXiv:2404.05892]. Time-mix uses token-shift interpolation and the
+LoRA-produced per-channel decay w_t = exp(-exp(w0 + tanh(x A) B)) — the
+data-dependent decay that distinguishes v6 — feeding the WKV recurrence
+(Pallas kernel on TPU, scan oracle elsewhere). Channel-mix is the squared-
+ReLU MLP with token shift. Decode state is O(1): per-layer shift tokens plus
+the (H, hd, hd) WKV state — hence this arch runs the 524k-token decode shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, embed_init, rms_norm
+from repro.kernels.wkv.ops import wkv6
+from repro.sharding.specs import constrain_like_params, data_axes, shard, tp_axis
+
+Array = jax.Array
+
+W_LORA_RANK = 64
+
+
+def _heads(cfg: ModelConfig) -> tuple[int, int]:
+    return cfg.n_heads, cfg.d_model // cfg.n_heads
+
+
+def block_params(key: Array, cfg: ModelConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d, f = cfg.d_model, cfg.d_ff
+    h, hd = _heads(cfg)
+    ks = jax.random.split(key, 12)
+    rank = min(W_LORA_RANK, d // 2)
+    return {
+        "ln1": jnp.ones((d,), dt),
+        "ln2": jnp.ones((d,), dt),
+        "tm": {
+            "mix_r": jnp.full((d,), 0.5, dt),
+            "mix_k": jnp.full((d,), 0.5, dt),
+            "mix_v": jnp.full((d,), 0.5, dt),
+            "mix_w": jnp.full((d,), 0.5, dt),
+            "mix_g": jnp.full((d,), 0.5, dt),
+            "wr": dense_init(ks[0], d, (d, d), dt),
+            "wk": dense_init(ks[1], d, (d, d), dt),
+            "wv": dense_init(ks[2], d, (d, d), dt),
+            "wg": dense_init(ks[3], d, (d, d), dt),
+            "wo": dense_init(ks[4], d, (d, d), dt),
+            "decay_base": jnp.full((d,), -1.0, jnp.float32),  # w0
+            "decay_lora_a": dense_init(ks[5], d, (d, rank), dt),
+            "decay_lora_b": dense_init(ks[6], rank, (rank, d), dt),
+            "bonus": (0.5 * jax.random.normal(ks[7], (h, hd))).astype(jnp.float32),
+            "head_norm": jnp.ones((d,), dt),
+        },
+        "cm": {
+            "mix_k": jnp.full((d,), 0.5, dt),
+            "mix_r": jnp.full((d,), 0.5, dt),
+            "wk": dense_init(ks[8], d, (d, f), dt),
+            "wv": dense_init(ks[9], f, (f, d), dt),
+            "wr": dense_init(ks[10], d, (d, d), dt),
+        },
+    }
+
+
+def init_params(key: Array, cfg: ModelConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    blocks = [block_params(ks[i], cfg) for i in range(cfg.n_layers)]
+    return {
+        "embed": embed_init(ks[-1], (cfg.vocab_size, cfg.d_model), dt),
+        "ln_in": jnp.ones((cfg.d_model,), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": dense_init(ks[-2], cfg.d_model,
+                              (cfg.d_model, cfg.vocab_size), dt),
+        "blocks": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks),
+    }
+
+
+def _shift(x: Array, last: Optional[Array]) -> Array:
+    """Token shift: x_{t-1}; position 0 uses `last` (decode state) or zeros."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([last[:, None, :], x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def time_mix(x: Array, p: dict, cfg: ModelConfig, state: Optional[dict]):
+    """x: (B, S, D). state: {'shift': (B, D), 'wkv': (B, H, hd, hd)} or None."""
+    b, s, d = x.shape
+    h, hd = _heads(cfg)
+    last = None if state is None else state["tm_shift"]
+    xs = _shift(x, last)
+    r = jnp.einsum("bsd,de->bse", _mix(x, xs, p["mix_r"]), p["wr"])
+    k = jnp.einsum("bsd,de->bse", _mix(x, xs, p["mix_k"]), p["wk"])
+    v = jnp.einsum("bsd,de->bse", _mix(x, xs, p["mix_v"]), p["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", _mix(x, xs, p["mix_g"]), p["wg"]))
+    xw = _mix(x, xs, p["mix_w"])
+    w_raw = p["decay_base"] + jnp.einsum(
+        "bsr,rd->bsd",
+        jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["decay_lora_a"])),
+        p["decay_lora_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_raw))  # (B, S, D) in (0,1)
+
+    hsplit = lambda t: jnp.swapaxes(t.reshape(b, s, h, hd), 1, 2)
+    s0 = None if state is None else state["wkv"]
+    o, s_fin = wkv6(hsplit(r), hsplit(k), hsplit(v),
+                    hsplit(w.astype(x.dtype)), p["bonus"], s0)
+    o = jnp.swapaxes(o, 1, 2).reshape(b, s, d)
+    # per-head group norm
+    o = rms_norm(o.reshape(b, s, h, hd), None).reshape(b, s, d)
+    o = o * p["head_norm"] * g
+    out = jnp.einsum("bsd,de->bse", o, p["wo"])
+    new_state = {"tm_shift": x[:, -1], "wkv": s_fin}
+    return out, new_state
+
+
+def channel_mix(x: Array, p: dict, state: Optional[dict]):
+    last = None if state is None else state["cm_shift"]
+    xs = _shift(x, last)
+    k = jnp.einsum("bsd,df->bsf", _mix(x, xs, p["mix_k"]), p["wk"])
+    k = jnp.square(jax.nn.relu(k))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", _mix(x, xs, p["mix_r"]),
+                                  p["wr"]))
+    out = r * jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    return out, {"cm_shift": x[:, -1]}
+
+
+def block_apply(x: Array, p: dict, cfg: ModelConfig, state: Optional[dict]):
+    a, st_tm = time_mix(rms_norm(x, p["ln1"]), p["tm"], cfg, state)
+    x = x + a
+    m, st_cm = channel_mix(rms_norm(x, p["ln2"]), p["cm"], state)
+    x = x + m
+    return x, {**st_tm, **st_cm}
+
+
+def forward(params: dict, tokens: Array, cfg: ModelConfig,
+            state: Optional[dict] = None):
+    """tokens: (B, S). state: per-layer stacked decode state or None.
+    Returns (hidden (B,S,D), new_state)."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = rms_norm(x, params["ln_in"])
+
+    def body(xx, xs):
+        bp, st = xs
+        bp = constrain_like_params(bp, cfg.fsdp)
+        xx, new_st = block_apply(xx, bp, cfg, st)
+        if cfg.fsdp:
+            xx = shard(xx, data_axes(), tp_axis(), None)
+        return xx, new_st
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, new_state = jax.lax.scan(body, x, (params["blocks"], state))
+    h = rms_norm(x, params["final_norm"])
+    return h, new_state
+
+
+def init_state(batch: int, cfg: ModelConfig) -> dict:
+    h, hd = _heads(cfg)
+    return {
+        "tm_shift": jnp.zeros((cfg.n_layers, batch, cfg.d_model),
+                              jnp.dtype(cfg.dtype)),
+        "cm_shift": jnp.zeros((cfg.n_layers, batch, cfg.d_model),
+                              jnp.dtype(cfg.dtype)),
+        "wkv": jnp.zeros((cfg.n_layers, batch, h, hd, hd), jnp.float32),
+    }

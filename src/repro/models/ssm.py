@@ -1,0 +1,224 @@
+"""Selective-SSM (Mamba-style) branch and the Hymba hybrid stack
+[arXiv:2411.13676]: every layer runs attention heads and SSM heads *in
+parallel* on the same input, averages the (per-branch-normalized) outputs,
+plus 128 learned meta tokens prepended to the sequence. Most layers use
+sliding-window attention; layers in `global_layer_ids` attend globally
+(fed through the scanned stack as a per-step flag).
+
+The selective scan is evaluated chunk-sequentially with an associative scan
+inside each chunk: peak memory O(B * chunk * D * state) instead of
+O(B * S * D * state), while keeping MXU-friendly parallelism within chunks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models.layers import (apply_norm, dense_init, embed_init, mlp_apply,
+                                 mlp_params, norm_param, rms_norm)
+from repro.sharding.specs import constrain_like_params
+
+Array = jax.Array
+
+SSM_CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# mamba branch
+# ---------------------------------------------------------------------------
+def mamba_params(key: Array, cfg: ModelConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    din = cfg.d_model  # hymba: ssm head dim matches model width
+    n, r = cfg.ssm_state, max(cfg.dt_rank, 1)
+    ks = jax.random.split(key, 8)
+    a_init = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (din, n)))
+    return {
+        "in_proj": dense_init(ks[0], d, (d, 2 * din), dt),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (cfg.ssm_conv, din))
+                   ).astype(dt),
+        "conv_b": jnp.zeros((din,), dt),
+        "bc_proj": dense_init(ks[2], din, (din, 2 * n), dt),
+        "dt_lora_a": dense_init(ks[3], din, (din, r), dt),
+        "dt_lora_b": dense_init(ks[4], r, (r, din), dt),
+        "dt_bias": jnp.zeros((din,), jnp.float32),
+        "a_log": a_init,  # (din, n)
+        "d_skip": jnp.ones((din,), jnp.float32),
+        "out_proj": dense_init(ks[5], din, (din, d), dt),
+    }
+
+
+def _selective_scan(a: Array, bx: Array, h0: Array) -> tuple[Array, Array]:
+    """h_t = a_t * h_{t-1} + bx_t, chunked associative scan.
+    a, bx: (B, S, Din, N) fp32; h0: (B, Din, N). Returns (h_all, h_final)."""
+    b, s, d, n = a.shape
+    chunk = min(SSM_CHUNK, s)
+    pad = (-s) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (s + pad) // chunk
+    a_c = a.reshape(b, nc, chunk, d, n)
+    bx_c = bx.reshape(b, nc, chunk, d, n)
+
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_step(h, inp):
+        ac, bc = inp  # (B, chunk, D, N)
+        a_cum, b_cum = jax.lax.associative_scan(assoc, (ac, bc), axis=1)
+        h_all = a_cum * h[:, None] + b_cum
+        return h_all[:, -1], h_all
+
+    h_fin, h_all = jax.lax.scan(
+        chunk_step, h0, (jnp.moveaxis(a_c, 1, 0), jnp.moveaxis(bx_c, 1, 0)))
+    h_all = jnp.moveaxis(h_all, 0, 1).reshape(b, nc * chunk, d, n)[:, :s]
+    return h_all, h_fin
+
+
+def mamba_apply(x: Array, p: dict, cfg: ModelConfig,
+                state: Optional[dict] = None):
+    """x: (B, S, D). state: {'conv': (B, W-1, Din), 'ssm': (B, Din, N)}."""
+    b, s, d = x.shape
+    n = cfg.ssm_state
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi_raw, z = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv
+    w = p["conv_w"]  # (W, Din)
+    kw = w.shape[0]
+    if state is None:
+        xpad = jnp.pad(xi_raw, ((0, 0), (kw - 1, 0), (0, 0)))
+    else:
+        xpad = jnp.concatenate([state["conv"], xi_raw], axis=1)
+    conv = sum(xpad[:, i:i + s] * w[i][None, None] for i in range(kw))
+    xi = jax.nn.silu(conv + p["conv_b"])
+
+    bc = jnp.einsum("bsd,dn->bsn", xi, p["bc_proj"])
+    b_ssm, c_ssm = jnp.split(bc.astype(jnp.float32), 2, axis=-1)  # (B,S,N)
+    dt = jnp.einsum("bsr,rd->bsd",
+                    jnp.einsum("bsd,dr->bsr", xi, p["dt_lora_a"]),
+                    p["dt_lora_b"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])  # (B,S,Din)
+    a = -jnp.exp(p["a_log"])  # (Din, N)
+    xf = xi.astype(jnp.float32)
+    decay = jnp.exp(dt[..., None] * a[None, None])  # (B,S,Din,N)
+    bx = (dt * xf)[..., None] * b_ssm[:, :, None, :]  # (B,S,Din,N)
+    h0 = (jnp.zeros((b, d, n), jnp.float32) if state is None
+          else state["ssm"])
+    h_all, h_fin = _selective_scan(decay, bx, h0)
+    y = jnp.einsum("bsdn,bsn->bsd", h_all, c_ssm) + p["d_skip"] * xf
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+    new_state = {"conv": xpad[:, -(kw - 1):], "ssm": h_fin}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# hymba hybrid stack
+# ---------------------------------------------------------------------------
+def hymba_block_params(key: Array, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "ln1": norm_param(cfg),
+        "ln2": norm_param(cfg),
+        "attn": attn_mod.attention_params(ks[0], cfg),
+        "mamba": mamba_params(ks[1], cfg),
+        "attn_norm": jnp.ones((cfg.d_model,), dt),
+        "ssm_norm": jnp.ones((cfg.d_model,), dt),
+        "mlp": mlp_params(ks[2], cfg),
+    }
+
+
+def init_params(key: Array, cfg: ModelConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    blocks = [hymba_block_params(ks[i], cfg) for i in range(cfg.n_layers)]
+    p = {
+        "embed": embed_init(ks[-1], (cfg.vocab_size, cfg.d_model), dt),
+        "final_norm": norm_param(cfg),
+        "lm_head": dense_init(ks[-2], cfg.d_model,
+                              (cfg.d_model, cfg.vocab_size), dt),
+        "blocks": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks),
+    }
+    if cfg.meta_tokens:
+        p["meta"] = embed_init(ks[-3], (cfg.meta_tokens, cfg.d_model), dt)
+    return p
+
+
+def hymba_block(x, p, cfg: ModelConfig, *, positions, is_global,
+                cache=None, decode_pos=None):
+    h = apply_norm(x, p.get("ln1"), cfg)
+    a, kvc = attn_mod.attn_apply(
+        h, p["attn"], cfg, positions=positions, causal=True,
+        window=cfg.sliding_window, is_global=is_global,
+        cache=None if cache is None else cache["kv"], decode_pos=decode_pos)
+    m, ssm_state = mamba_apply(h, p["mamba"], cfg,
+                               state=None if cache is None else cache["ssm"])
+    # per-branch normalization then average (hymba fusion)
+    fused = 0.5 * (rms_norm(a, p["attn_norm"]) + rms_norm(m, p["ssm_norm"]))
+    x = x + fused
+    h = apply_norm(x, p.get("ln2"), cfg)
+    x = x + mlp_apply(h, p["mlp"], cfg)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"kv": kvc, "ssm": ssm_state}
+    return x, new_cache
+
+
+def forward(params: dict, tokens: Array, cfg: ModelConfig, *,
+            cache: Optional[dict] = None, decode_pos=None,
+            prepend_meta: bool = False):
+    """Returns (hidden (B, S(+meta), D), new_cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    b, s = tokens.shape
+    offset = 0
+    if prepend_meta and cfg.meta_tokens:
+        meta = jnp.broadcast_to(params["meta"][None], (b, cfg.meta_tokens,
+                                                       cfg.d_model))
+        x = jnp.concatenate([meta.astype(x.dtype), x], axis=1)
+        offset = cfg.meta_tokens
+    if decode_pos is not None:
+        positions = decode_pos.reshape(1)
+    else:
+        positions = jnp.arange(s + offset)
+
+    ids = jnp.arange(cfg.n_layers)
+    flags = jnp.zeros((cfg.n_layers,), jnp.bool_)
+    for g in cfg.global_layer_ids:
+        flags = flags | (ids == g)
+
+    def body(xx, xs):
+        bp, fl, c = xs
+        bp = constrain_like_params(bp, cfg.fsdp)
+        xx, nc = hymba_block(xx, bp, cfg, positions=positions, is_global=fl,
+                             cache=c, decode_pos=decode_pos)
+        return xx, nc
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], flags, cache))
+    return apply_norm(x, params.get("final_norm"), cfg), new_cache
+
+
+def init_cache(batch: int, cache_len: int, cfg: ModelConfig) -> dict:
+    kv = attn_mod.init_kv_cache(batch, cache_len, cfg, lead=(cfg.n_layers,))
+    return {
+        "kv": kv,
+        "ssm": {
+            "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1,
+                               cfg.d_model), jnp.dtype(cfg.dtype)),
+            "ssm": jnp.zeros((cfg.n_layers, batch, cfg.d_model,
+                              cfg.ssm_state), jnp.float32),
+        },
+    }

@@ -1,0 +1,363 @@
+"""Generic decoder-only / encoder-decoder transformer stack, config-driven.
+
+Covers the dense, MoE, VLM(backbone) and whisper-decoder families of the
+assigned architectures. The layer stack is organized into *scan segments*:
+maximal runs of structurally-identical layers whose parameters are stacked on
+a leading dim and iterated with jax.lax.scan (keeps HLO size O(1) in depth —
+essential for compiling 61-layer 671B configs). Alternating patterns
+(gemma2 local/global, llama4 dense/MoE) become multi-sublayer scan bodies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import layers, mla as mla_mod, moe as moe_mod
+from repro.models.layers import apply_norm, embed_init, norm_param
+from repro.sharding.specs import (constrain_like_params, current_mesh,
+                                  data_axes, shard, tp_axis)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# stack structure
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SubLayer:
+    kind: str  # 'dense' | 'moe'
+    window: Optional[int]  # sliding window (None = global)
+    dynamic_global: bool = False  # per-step is_global flag fed via scan xs
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    n_steps: int
+    subs: tuple
+
+
+def build_segments(cfg: ModelConfig) -> tuple:
+    if cfg.n_experts and cfg.first_dense_layers:
+        # deepseek-v3: leading dense layers, then a homogeneous MoE stack
+        return (
+            Segment(cfg.first_dense_layers, (SubLayer("dense", None),)),
+            Segment(cfg.n_layers - cfg.first_dense_layers,
+                    (SubLayer("moe", None),)),
+        )
+    if cfg.n_experts and cfg.moe_layer_step == 2:
+        # llama4: alternating (local dense, global MoE) pairs
+        return (
+            Segment(cfg.n_layers // 2,
+                    (SubLayer("dense", cfg.sliding_window),
+                     SubLayer("moe", None))),
+        )
+    if cfg.n_experts:
+        return (Segment(cfg.n_layers, (SubLayer("moe", None),)),)
+    if cfg.layer_pattern == "alt_local_global":
+        # gemma2: local, global, local, ...
+        return (
+            Segment(cfg.n_layers // 2,
+                    (SubLayer("dense", cfg.sliding_window),
+                     SubLayer("dense", None))),
+        )
+    if cfg.layer_pattern == "hymba_global_set":
+        return (Segment(cfg.n_layers,
+                        (SubLayer("dense", cfg.sliding_window,
+                                  dynamic_global=True),)),)
+    window = cfg.sliding_window if cfg.layer_pattern == "all_local" else None
+    return (Segment(cfg.n_layers, (SubLayer("dense", window),)),)
+
+
+def global_flags(cfg: ModelConfig, seg: Segment) -> Optional[Array]:
+    """Per-step is_global flags for dynamic_global segments (hymba)."""
+    if not any(s.dynamic_global for s in seg.subs):
+        return None
+    ids = jnp.arange(seg.n_steps)
+    flag = jnp.zeros((seg.n_steps,), jnp.bool_)
+    for g in cfg.global_layer_ids:
+        flag |= ids == g
+    return flag
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def _stack_init(key, n, init_one):
+    """Init n per-layer param trees and stack leaves on a leading dim."""
+    trees = [init_one(k) for k in jax.random.split(key, n)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def sublayer_params(key: Array, sub: SubLayer, cfg: ModelConfig,
+                    cross_attn: bool) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict = {"ln1": norm_param(cfg), "ln2": norm_param(cfg)}
+    if cfg.use_mla:
+        p["attn"] = mla_mod.mla_params(ks[0], cfg)
+    else:
+        p["attn"] = attn_mod.attention_params(ks[0], cfg)
+    if sub.kind == "moe":
+        p["moe"] = moe_mod.moe_params(ks[1], cfg)
+    else:
+        p["mlp"] = layers.mlp_params(ks[1], cfg)
+    if cfg.norm_style == "sandwich":
+        p["post_ln1"] = norm_param(cfg)
+        p["post_ln2"] = norm_param(cfg)
+    if cross_attn:
+        p["xattn"] = attn_mod.attention_params(ks[2], cfg)
+        p["ln_x"] = norm_param(cfg)
+        if cfg.norm_style == "sandwich":
+            p["post_ln_x"] = norm_param(cfg)
+    return p
+
+
+def init_decoder(key: Array, cfg: ModelConfig, cross_attn: bool = False) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    segs = build_segments(cfg)
+    ks = jax.random.split(key, len(segs) + 4)
+    params: dict = {
+        "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dt),
+        "final_norm": norm_param(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(
+            ks[1], cfg.d_model, (cfg.d_model, cfg.vocab_size), dt)
+    params["segments"] = {}
+    for i, seg in enumerate(segs):
+        def seg_one(k, seg=seg):
+            sks = jax.random.split(k, len(seg.subs))
+            return {f"sub{j}": sublayer_params(sks[j], sub, cfg, cross_attn)
+                    for j, sub in enumerate(seg.subs)}
+        params["segments"][f"seg{i}"] = _stack_init(ks[2 + i], seg.n_steps,
+                                                    seg_one)
+    if cfg.mtp:
+        km = jax.random.split(ks[-1], 3)
+        params["mtp"] = {
+            "proj": layers.dense_init(km[0], 2 * cfg.d_model,
+                                      (2 * cfg.d_model, cfg.d_model), dt),
+            "block": sublayer_params(km[1], SubLayer("dense", None), cfg, False),
+            "norm_h": norm_param(cfg),
+            "norm_e": norm_param(cfg),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# embedding / logits
+# ---------------------------------------------------------------------------
+def embed_tokens(params: dict, tokens: Array, cfg: ModelConfig) -> Array:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def logits_fn(params: dict, h: Array, cfg: ModelConfig) -> Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, w).astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def chunked_xent(params: dict, h: Array, labels: Array, mask: Array,
+                 cfg: ModelConfig) -> Array:
+    """Per-example mean cross-entropy, computed in seq chunks so the full
+    (B, S, vocab) logits tensor is never materialized (202k-vocab configs)."""
+    b, s, d = h.shape
+    chunk = min(cfg.logit_chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    n = (s + pad) // chunk
+    hc = h.reshape(b, n, chunk, d)
+    lc = labels.reshape(b, n, chunk)
+    mc = mask.reshape(b, n, chunk)
+
+    def step(carry, inp):
+        hs, ls, ms = inp  # (B, chunk, D), (B, chunk), (B, chunk)
+        logits = logits_fn(params, hs, cfg)  # (B, chunk, V) fp32
+        logits = shard(logits, data_axes(), None, tp_axis())
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * ms
+        return carry + jnp.sum(nll, axis=-1), None
+
+    # remat: backward recomputes each chunk's logits instead of storing the
+    # (B, chunk, V) softmax residuals for every chunk (202k-vocab configs)
+    step = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    xs = (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(lc, 1, 0), jnp.moveaxis(mc, 1, 0))
+    tot, _ = jax.lax.scan(step, jnp.zeros((b,), jnp.float32), xs)
+    return tot / jnp.maximum(jnp.sum(mask, axis=-1), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# sublayer / stack forward
+# ---------------------------------------------------------------------------
+def sublayer_apply(x, sp, sub: SubLayer, cfg: ModelConfig, *, positions,
+                   cache=None, decode_pos=None, is_global=None,
+                   enc_out=None, n_groups=1):
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(x, sp.get("ln1"), cfg)
+    new_cache = {}
+    if cfg.use_mla:
+        a, kvc = mla_mod.mla_apply(h, sp["attn"], cfg, positions=positions,
+                                   cache=None if cache is None else cache["kv"],
+                                   decode_pos=decode_pos)
+    else:
+        a, kvc = attn_mod.attn_apply(
+            h, sp["attn"], cfg, positions=positions, causal=True,
+            window=sub.window, is_global=is_global,
+            cache=None if cache is None else cache["kv"],
+            decode_pos=decode_pos)
+    if cfg.norm_style == "sandwich":
+        a = apply_norm(a, sp.get("post_ln1"), cfg)
+    x = x + a
+    if kvc is not None:
+        new_cache["kv"] = kvc
+
+    if "xattn" in sp:  # whisper decoder cross-attention
+        h = apply_norm(x, sp.get("ln_x"), cfg)
+        xa, (xk, xv) = _cross_attn(h, sp["xattn"], cfg, enc_out=enc_out,
+                                   cache=cache)
+        if cfg.norm_style == "sandwich":
+            xa = apply_norm(xa, sp.get("post_ln_x"), cfg)
+        x = x + xa
+        if cache is not None:
+            new_cache["xk"] = xk
+            new_cache["xv"] = xv
+
+    h = apply_norm(x, sp.get("ln2"), cfg)
+    if sub.kind == "moe":
+        m, aux = moe_mod.moe_apply(h, sp["moe"], cfg, n_groups=n_groups)
+    else:
+        m = layers.mlp_apply(h, sp["mlp"], cfg)
+    if cfg.norm_style == "sandwich":
+        m = apply_norm(m, sp.get("post_ln2"), cfg)
+    return x + m, new_cache, aux
+
+
+def _cross_attn(h, p, cfg, *, enc_out=None, cache=None):
+    """Non-causal attention over encoder states; k/v precomputed in cache
+    at prefill (cache['xk'/'xv']: (B, Hkv, S_enc, hd))."""
+    b, s, _ = h.shape
+    q = jnp.einsum("bsd,dh->bsh", h, p["wq"]).reshape(
+        b, s, cfg.n_heads, cfg.head_dim)
+    q = jnp.swapaxes(q, 1, 2)
+    if enc_out is None:  # decode: encoder K/V precomputed at prefill
+        k, v = cache["xk"], cache["xv"]
+    else:
+        k = jnp.einsum("bsd,dh->bsh", enc_out, p["wk"]).reshape(
+            b, -1, cfg.n_kv_heads, cfg.head_dim)
+        v = jnp.einsum("bsd,dh->bsh", enc_out, p["wv"]).reshape(
+            b, -1, cfg.n_kv_heads, cfg.head_dim)
+        k, v = jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2)
+    o = attn_mod.full_attention(q, k, v, scale=cfg.head_dim**-0.5,
+                                causal=False)
+    o = jnp.swapaxes(o, 1, 2).reshape(b, s, cfg.q_dim)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"]), (k, v)
+
+
+def decoder_forward(
+    params: dict,
+    x: Array,  # (B, S, D) embedded inputs
+    cfg: ModelConfig,
+    *,
+    positions: Array,
+    cache: Optional[dict] = None,
+    decode_pos: Optional[Array] = None,
+    enc_out: Optional[Array] = None,
+) -> tuple[Array, Optional[dict], Array]:
+    """Runs all scan segments. Returns (hidden, new_cache, aux_loss_sum)."""
+    segs = build_segments(cfg)
+    mesh = current_mesh()
+    n_groups = mesh.devices.size if mesh is not None else 1
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: Optional[dict] = {} if cache is not None else None
+
+    for i, seg in enumerate(segs):
+        seg_params = params["segments"][f"seg{i}"]
+        seg_cache = None if cache is None else cache[f"seg{i}"]
+        flags = global_flags(cfg, seg)
+
+        def body_full(carry, xs, seg=seg):
+            xx, aux = carry
+            sp_all, sc_all, flag = xs
+            # pin per-layer param slices (and, via the transpose of the
+            # constraint, their cotangents) to the parameter shardings
+            sp_all = constrain_like_params(sp_all, cfg.fsdp)
+            nc_all = {}
+            a_sum = jnp.zeros((), jnp.float32)
+            for j, sub in enumerate(seg.subs):
+                sc = None if sc_all is None else sc_all[f"sub{j}"]
+                xx, nc, a = sublayer_apply(
+                    xx, sp_all[f"sub{j}"], sub, cfg, positions=positions,
+                    cache=sc, decode_pos=decode_pos,
+                    is_global=flag if sub.dynamic_global else None,
+                    enc_out=enc_out, n_groups=n_groups)
+                nc_all[f"sub{j}"] = nc
+                a_sum = a_sum + a
+            # sequence parallelism on the residual stream: the saved scan
+            # carry (one per layer, the dominant training working set) is
+            # sharded over 'model' on the seq dim; GSPMD inserts the
+            # all-gather at the next layer's first projection.
+            if cfg.fsdp:
+                xx = shard(xx, data_axes(), tp_axis(), None)
+            return (xx, aux + a_sum), nc_all
+
+        fn = jax.checkpoint(body_full,
+                            policy=jax.checkpoint_policies.nothing_saveable) \
+            if cfg.remat else body_full
+        flag_xs = flags if flags is not None else jnp.zeros(
+            (seg.n_steps,), jnp.bool_)
+        (x, aux_total), seg_new_cache = jax.lax.scan(
+            fn, (x, aux_total), (seg_params, seg_cache, flag_xs))
+        if new_cache is not None:
+            new_cache[f"seg{i}"] = seg_new_cache
+
+    h = apply_norm(x, params.get("final_norm"), cfg)
+    return h, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+def init_decoder_cache(batch: int, cache_len: int, cfg: ModelConfig,
+                       cross_attn: bool = False) -> dict:
+    """Cache pytree matching decoder_forward's scan structure. For windowed
+    sublayers the per-layer cache is a ring buffer of min(window, cache_len).
+    Encoder-decoder stacks also carry per-layer cross-attention K/V over the
+    encoder states (filled during prefill).
+    """
+    segs = build_segments(cfg)
+    cache: dict = {}
+    for i, seg in enumerate(segs):
+        subs_cache = {}
+        for j, sub in enumerate(seg.subs):
+            clen = cache_len
+            if sub.window is not None and not sub.dynamic_global:
+                clen = min(cache_len, sub.window)
+            if cfg.use_mla:
+                kvc = mla_mod.init_mla_cache(batch, clen, cfg,
+                                             lead=(seg.n_steps,))
+            else:
+                kvc = attn_mod.init_kv_cache(batch, clen, cfg,
+                                             lead=(seg.n_steps,))
+            sc = {"kv": kvc}
+            if cross_attn:
+                dt = jnp.dtype(cfg.dtype)
+                sc["xk"] = jnp.zeros((seg.n_steps, batch, cfg.n_kv_heads,
+                                      cfg.enc_seq, cfg.head_dim), dt)
+                sc["xv"] = jnp.zeros((seg.n_steps, batch, cfg.n_kv_heads,
+                                      cfg.enc_seq, cfg.head_dim), dt)
+            subs_cache[f"sub{j}"] = sc
+        cache[f"seg{i}"] = subs_cache
+    return cache

@@ -1,0 +1,99 @@
+"""Optimizers. The paper's algorithm is constant-stepsize GD (Eq. 9) — no
+state — which is also what keeps the 400B/671B configs inside v5e HBM during
+the dry-run. Momentum-GD and Adam are provided for the beyond-paper
+experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+    # update(grads, state, params) -> (new_params, new_state)
+
+
+def gd(stepsize: float) -> Optimizer:
+    """theta <- theta - beta v (paper Eq. 9), stateless."""
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        new = jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - stepsize * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(stepsize: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params):
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+        new_p = jax.tree_util.tree_map(
+            lambda p, m: (p.astype(jnp.float32) - stepsize * m).astype(p.dtype),
+            params, new_m)
+        return new_p, new_m
+
+    return Optimizer(init, update)
+
+
+def adam(stepsize: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1**t.astype(jnp.float32)
+        bc2 = 1 - b2**t.astype(jnp.float32)
+        new_p = jax.tree_util.tree_map(
+            lambda p, m_, v_: (p.astype(jnp.float32) - stepsize * (m_ / bc1)
+                               / (jnp.sqrt(v_ / bc2) + eps)).astype(p.dtype),
+            params, m, v)
+        return new_p, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    leaves = jax.tree_util.tree_leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads)
+
+
+def get_optimizer(name: str, stepsize: float) -> Optimizer:
+    if name == "gd":
+        return gd(stepsize)
+    if name == "momentum":
+        return momentum(stepsize)
+    if name == "adam":
+        return adam(stepsize)
+    raise ValueError(name)

@@ -1,0 +1,59 @@
+"""Serving engine: batched prefill + greedy/temperature decode.
+
+Decode shapes of the assignment lower `serve_step` — ONE token against a
+seq_len-deep cache — which is exactly `Model.decode_step`; this engine wraps
+it for the runnable examples (generation loops on real arrays).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # 0 = greedy
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, model: Model, params, serve_cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = serve_cfg
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill, static_argnums=(2,))
+
+    def generate(self, batch: dict) -> Array:
+        """batch: prompt inputs (model.input_specs 'prefill' layout with real
+        arrays). Returns (B, max_new_tokens) generated ids."""
+        cfg, m = self.cfg, self.model
+        max_len = batch["tokens"].shape[1] + cfg.max_new_tokens
+        logits, cache = self._prefill(self.params, batch, max_len)
+        b = logits.shape[0]
+        prompt_len = batch["tokens"].shape[1]
+        pos0 = prompt_len + (m.cfg.n_patches or 0) + (m.cfg.meta_tokens or 0)
+        key = jax.random.key(cfg.seed)
+        out = []
+        tok = self._sample(logits, key)
+        for i in range(cfg.max_new_tokens):
+            out.append(tok)
+            logits, cache = self._decode(
+                self.params, cache, tok, jnp.asarray(pos0 + i, jnp.int32))
+            key = jax.random.fold_in(key, i)
+            tok = self._sample(logits, key)
+        return jnp.stack(out, axis=1)
+
+    def _sample(self, logits: Array, key) -> Array:
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(key, logits / self.cfg.temperature,
+                                      axis=-1)

@@ -1,0 +1,43 @@
+"""Host-side training loop: data feeding, jitted step, metrics, checkpoints."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, Optional
+
+import jax
+import numpy as np
+
+
+def run_training(
+    train_step: Callable,
+    params,
+    opt_state,
+    batches: Iterable,
+    steps: int,
+    *,
+    log_every: int = 10,
+    checkpoint_fn: Optional[Callable] = None,
+    checkpoint_every: int = 0,
+    donate: bool = True,
+):
+    """Runs `steps` iterations; returns (params, opt_state, history)."""
+    step_fn = jax.jit(train_step, donate_argnums=(0, 1) if donate else ())
+    history = []
+    t0 = time.time()
+    it = iter(batches)
+    for step in range(steps):
+        batch = next(it)
+        batch = jax.tree_util.tree_map(jax.numpy.asarray, batch)
+        params, opt_state, metrics = step_fn(params, opt_state, batch, step)
+        if log_every and (step % log_every == 0 or step == steps - 1):
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall_s"] = time.time() - t0
+            history.append(m)
+            print(f"step {step:5d} loss {m['loss']:.4f} "
+                  f"gnorm {m['grad_norm']:.3f} ({m['wall_s']:.1f}s)",
+                  flush=True)
+        if checkpoint_fn and checkpoint_every and step and \
+                step % checkpoint_every == 0:
+            checkpoint_fn(params, opt_state, step)
+    return params, opt_state, history

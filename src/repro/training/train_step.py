@@ -1,0 +1,145 @@
+"""Train-step builder: model loss + gradient aggregation protocol + optimizer.
+
+The aggregation protocol is selected per run:
+  'gbma'        — the paper: fading-weighted loss (exact OTA superposition,
+                  DESIGN.md §4) + edge noise on the reduced gradient tree.
+  'fdm'         — FDM-GD baseline: orthogonal per-node channels, channel-
+                  inverted (no fading distortion) but per-node additive noise;
+                  the averaged-gradient noise std is sqrt(N) times GBMA's.
+  'centralized' — noiseless exact mean (Remark 1 benchmark).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import edge_noise_std
+from repro.core.gbma import (GBMAConfig, gbma_value_and_grad, node_weights,
+                             perturb_gradients)
+from repro.models.model import Model
+from repro.optim.gd import Optimizer, clip_by_global_norm
+from repro.sharding.specs import current_mesh, params_shardings
+
+PyTree = Any
+
+
+def _constrain_like_params(grads: PyTree, fsdp: bool) -> PyTree:
+    """Pin the gradient tree to the parameter shardings. Without this GSPMD
+    materializes scan-accumulated cotangents replicated (64 GiB/device for the
+    400B config) before the optimizer update re-shards them."""
+    mesh = current_mesh()
+    if mesh is None:
+        return grads
+    shardings = params_shardings(grads, fsdp, mesh)
+    return jax.tree_util.tree_map(
+        lambda g, s: jax.lax.with_sharding_constraint(g, s), grads, shardings)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    aggregator: str = "gbma"  # gbma | fdm | centralized
+    gbma: GBMAConfig = dataclasses.field(default_factory=GBMAConfig)
+    seed: int = 0
+    clip_norm: Optional[float] = None
+    # §Perf: 'rbg' generates the d-dimensional edge noise with one
+    # RngBitGenerator op per leaf instead of threefry's elementwise chain —
+    # at d = 671e9 the threefry pipeline materializes tens of GiB of u32
+    # counter tensors per expert leaf. 'threefry2x32' is the baseline.
+    rng_impl: str = "threefry2x32"
+    # §Perf: gradient accumulation over microbatches. Faithful to the paper —
+    # each node transmits ONE analog gradient per slot regardless of how it
+    # computed it locally (f_n is the node's full local loss); only the
+    # per-step activation working set shrinks by the microbatch factor.
+    microbatches: int = 1
+
+
+def _fdm_noise(grads: PyTree, key, gcfg: GBMAConfig) -> PyTree:
+    """FDM-GD: each node's dedicated channel adds independent noise at energy
+    E_N; the edge averages N received gradients, so the per-coordinate noise
+    std is sigma_w / (sqrt(E_N) * sqrt(N)) = sqrt(N) * GBMA's."""
+    std = (gcfg.channel.noise_std
+           / math.sqrt(gcfg.channel.energy * gcfg.n_nodes))
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [g + std * jax.random.normal(k, g.shape, jnp.float32).astype(g.dtype)
+             for g, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, noisy)
+
+
+def _accumulated_grads(vg, params, batch, weights, m: int, fsdp: bool):
+    """Scan over m microbatches, accumulating the mean gradient in f32
+    (sharded like the params). Cuts the per-step activation working set by m
+    at the cost of an f32 gradient accumulator (2x param bytes)."""
+    mb_batch = jax.tree_util.tree_map(
+        lambda x: x.reshape(m, x.shape[0] // m, *x.shape[1:]), batch)
+    mb_w = weights.reshape(m, -1)
+    acc0 = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    acc0 = _constrain_like_params(acc0, fsdp)
+
+    def body(carry, mb):
+        acc, loss_sum = carry
+        b, w = mb
+        loss, g = vg(params, b, w)
+        g = _constrain_like_params(g, fsdp)
+        acc = jax.tree_util.tree_map(
+            lambda a, x: a + x.astype(jnp.float32) / m, acc, g)
+        acc = _constrain_like_params(acc, fsdp)
+        return (acc, loss_sum + loss / m), None
+
+    (grads, loss), _ = jax.lax.scan(
+        body, (acc0, jnp.zeros((), jnp.float32)), (mb_batch, mb_w))
+    return loss, grads
+
+
+def build_train_step(model: Model, tcfg: TrainConfig, opt: Optimizer
+                     ) -> Callable:
+    """Returns train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics). Pure; jit/pjit at the call site."""
+    gcfg = tcfg.gbma
+    base_key = jax.random.key(tcfg.seed, impl=tcfg.rng_impl)
+    vg = gbma_value_and_grad(
+        lambda p, b: model.train_loss_per_example(p, b)[0])
+
+    def train_step(params, opt_state, batch, step):
+        k_step = jax.random.fold_in(base_key, step)
+        k_h, k_w = jax.random.split(k_step)
+        bsz = batch["tokens"].shape[0]
+
+        if tcfg.aggregator == "gbma" and gcfg.enabled:
+            weights = node_weights(k_h, gcfg, bsz)
+        else:
+            weights = jnp.ones((bsz,), jnp.float32)
+
+        if tcfg.microbatches > 1:
+            clean_loss, grads = _accumulated_grads(
+                vg, params, batch, weights, tcfg.microbatches, model.cfg.fsdp)
+        else:
+            clean_loss, grads = vg(params, batch, weights)
+            grads = _constrain_like_params(grads, model.cfg.fsdp)
+
+        if tcfg.aggregator == "gbma" and gcfg.enabled:
+            grads = perturb_gradients(grads, k_w, gcfg)
+        elif tcfg.aggregator == "fdm":
+            grads = _fdm_noise(grads, k_w, gcfg)
+
+        if tcfg.clip_norm is not None:
+            grads = clip_by_global_norm(grads, tcfg.clip_norm)
+
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)))
+        params, opt_state = opt.update(grads, opt_state, params)
+        metrics = {
+            "loss": clean_loss,
+            "grad_norm": gnorm,
+            "noise_std": (edge_noise_std(gcfg.channel, gcfg.n_nodes)
+                          if tcfg.aggregator == "gbma" else 0.0),
+        }
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,12 @@
+import jax
+import pytest
+
+# CPU determinism; do NOT set xla_force_host_platform_device_count here —
+# smoke tests and benches must see 1 device (the 512-device world belongs
+# exclusively to launch/dryrun.py).
+jax.config.update("jax_default_matmul_precision", "highest")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.key(0)

@@ -1,0 +1,51 @@
+"""Roofline analysis unit tests: HLO collective parsing + term arithmetic."""
+import numpy as np
+
+from repro.launch.analysis import (HBM_BW, ICI_BW, PEAK_FLOPS, RooflineTerms,
+                                   _shape_bytes, collective_bytes)
+
+HLO = """
+HloModule jit_step
+
+%fused (p: f32[4,4]) -> f32[4,4] {
+  ROOT %x = f32[4,4] add(%p, %p)
+}
+
+ENTRY %main (a: bf16[128,256]) -> bf16[128,256] {
+  %ag = bf16[128,256]{1,0} all-gather(%a), dimensions={0}
+  %ar = f32[64]{0} all-reduce(%b), to_apply=%add
+  %a2a = bf16[32,16]{1,0} all-to-all(%c), dimensions={0}
+  %rs = f32[8,8]{1,0} reduce-scatter(%d), dimensions={0}
+  %cp = bf16[16]{0} collective-permute(%e), source_target_pairs={{0,1}}
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[128,256]") == 128 * 256 * 2
+    assert _shape_bytes("f32[64]") == 256
+    assert _shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+
+
+def test_collective_bytes_parses_all_kinds():
+    out = collective_bytes(HLO)
+    assert out["all-gather"] == 128 * 256 * 2
+    assert out["all-reduce"] == 64 * 4
+    assert out["all-to-all"] == 32 * 16 * 2
+    assert out["reduce-scatter"] == 8 * 8 * 4
+    assert out["collective-permute"] == 16 * 2
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_roofline_terms_math():
+    t = RooflineTerms(hlo_flops=197e12, hlo_bytes=819e9, coll_bytes=50e9,
+                      model_flops=98.5e12, chips=256)
+    np.testing.assert_allclose(t.compute_s, 1.0)
+    np.testing.assert_allclose(t.memory_s, 1.0)
+    np.testing.assert_allclose(t.collective_s, 1.0)
+    assert t.useful_ratio == 0.5
+    t2 = RooflineTerms(hlo_flops=1.0, hlo_bytes=819e9, coll_bytes=0,
+                       model_flops=500e12, chips=256)
+    # analytic model flops bind when HLO undercounts (scan bodies)
+    np.testing.assert_allclose(t2.compute_s, 500e12 / PEAK_FLOPS)
+    assert t2.dominant == "compute"

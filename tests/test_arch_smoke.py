@@ -1,0 +1,117 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED variant
+of each family (<=2 layers, d_model<=512, <=4 experts) runs one forward/train
+step and one prefill+decode step on CPU with finite outputs + right shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.core.channel import ChannelConfig
+from repro.core.gbma import GBMAConfig
+from repro.models.model import build_model
+from repro.optim.gd import gd
+from repro.training.train_step import TrainConfig, build_train_step
+
+
+def _make_batch(m, key, bsz, seq):
+    cfg = m.cfg
+    batch = {"tokens": jax.random.randint(key, (bsz, seq + 1), 0,
+                                          cfg.vocab_size)}
+    if cfg.n_patches:
+        batch = {
+            "tokens": jax.random.randint(key, (bsz, seq - cfg.n_patches + 1),
+                                         0, cfg.vocab_size),
+            "patch_embed": jax.random.normal(key, (bsz, cfg.n_patches,
+                                                   cfg.d_model)),
+        }
+    if m.kind == "encdec":
+        batch["frames"] = jax.random.normal(key, (bsz, cfg.enc_seq,
+                                                  cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_train_step(arch):
+    cfg = get_config(arch).reduced()
+    m = build_model(cfg)
+    key = jax.random.key(0)
+    params = m.init_params(key)
+    batch = _make_batch(m, key, bsz=2, seq=32)
+    losses, metrics = m.train_loss_per_example(params, batch)
+    assert losses.shape == (2,)
+    assert np.isfinite(np.array(losses, np.float32)).all()
+    assert float(metrics["loss"]) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_gbma_training_reduces_loss(arch):
+    """One GBMA train step with high-SNR channel must not produce NaNs and
+    a few steps must reduce the loss on a repeated batch."""
+    cfg = get_config(arch).reduced()
+    m = build_model(cfg)
+    key = jax.random.key(1)
+    params = m.init_params(key)
+    tcfg = TrainConfig(
+        aggregator="gbma",
+        gbma=GBMAConfig(n_nodes=2, channel=ChannelConfig(
+            fading="rayleigh", noise_std=0.01, energy=1.0)))
+    opt = gd(stepsize=0.2 if not cfg.n_experts else 0.05)
+    step = jax.jit(build_train_step(m, tcfg, opt))
+    batch = _make_batch(m, key, bsz=2, seq=16)
+    opt_state = opt.init(params)
+    first = None
+    for i in range(8):
+        params, opt_state, metrics = step(params, opt_state, batch, i)
+        assert np.isfinite(float(metrics["loss"])), (arch, i)
+        if first is None:
+            first = float(metrics["loss"])
+    assert float(metrics["loss"]) < first, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_prefill_decode(arch):
+    cfg = get_config(arch).reduced()
+    m = build_model(cfg)
+    key = jax.random.key(2)
+    params = m.init_params(key)
+    bsz, seq = 2, 16
+    batch = _make_batch(m, key, bsz, seq)
+    batch = {k: (v[:, :seq] if k == "tokens" else v)
+             for k, v in batch.items()}
+    logits, cache = m.prefill(params, batch, max_len=seq + 4)
+    assert logits.shape == (bsz, cfg.vocab_size)
+    assert np.isfinite(np.array(logits, np.float32)).all()
+    pos = batch["tokens"].shape[1] + (cfg.n_patches or 0) + (cfg.meta_tokens
+                                                             or 0)
+    tok = jnp.argmax(logits, -1)
+    for i in range(3):
+        logits, cache = m.decode_step(params, cache, tok,
+                                      jnp.asarray(pos + i, jnp.int32))
+        assert logits.shape == (bsz, cfg.vocab_size)
+        assert np.isfinite(np.array(logits, np.float32)).all(), (arch, i)
+        tok = jnp.argmax(logits, -1)
+
+
+def test_decode_matches_teacher_forcing_dense():
+    """Decode with cache must equal the full-sequence forward (olmo family:
+    exact match expected in f32)."""
+    cfg = get_config("olmo-1b").reduced()
+    m = build_model(cfg)
+    key = jax.random.key(3)
+    params = m.init_params(key)
+    toks = jax.random.randint(key, (1, 12), 0, cfg.vocab_size)
+    # full forward logits at last position
+    from repro.models import transformer as tfm
+
+    x = tfm.embed_tokens(params, toks, cfg)
+    h, _, _ = tfm.decoder_forward(params, x, cfg,
+                                  positions=jnp.arange(12))
+    full_logits = tfm.logits_fn(params, h[:, -1:], cfg)[:, 0]
+    # prefill on first 11 + decode token 12
+    logits_p, cache = m.prefill(params, {"tokens": toks[:, :11]},
+                                max_len=16)
+    logits_d, _ = m.decode_step(params, cache, toks[:, 11],
+                                jnp.asarray(11, jnp.int32))
+    np.testing.assert_allclose(np.array(logits_d), np.array(full_logits),
+                               atol=2e-3, rtol=1e-3)

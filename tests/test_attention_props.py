@@ -1,0 +1,83 @@
+"""Attention implementation properties: blockwise == full oracle, window and
+softcap semantics, cache-decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_config
+from repro.models.attention import (blockwise_attention, cache_write,
+                                    decode_attention, full_attention,
+                                    init_kv_cache)
+
+
+@given(
+    sq=st.sampled_from([64, 96, 128, 200]),
+    h=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2]),
+    window=st.sampled_from([None, 16, 64]),
+    softcap=st.sampled_from([None, 20.0]),
+)
+@settings(max_examples=25, deadline=None)
+def test_blockwise_equals_full(sq, h, g, window, softcap):
+    d = 16
+    ks = jax.random.split(jax.random.key(sq * h * g), 3)
+    q = jax.random.normal(ks[0], (1, h * g, sq, d))
+    k = jax.random.normal(ks[1], (1, h, sq, d))
+    v = jax.random.normal(ks[2], (1, h, sq, d))
+    full = full_attention(q, k, v, scale=0.25, causal=True, window=window,
+                          softcap=softcap)
+    blk = blockwise_attention(q, k, v, scale=0.25, causal=True,
+                              window=window, softcap=softcap,
+                              block_q=32, block_kv=32)
+    np.testing.assert_allclose(np.array(blk), np.array(full), atol=2e-5,
+                               rtol=1e-4)
+
+
+def test_window_masks_out_distant_tokens():
+    """With window=1 each token attends only to itself -> output == v."""
+    d, s = 8, 16
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (1, 1, s, d))
+    k = jax.random.normal(ks[1], (1, 1, s, d))
+    v = jax.random.normal(ks[2], (1, 1, s, d))
+    out = full_attention(q, k, v, scale=1.0, causal=True, window=1)
+    np.testing.assert_allclose(np.array(out), np.array(v), atol=1e-5)
+
+
+def test_is_global_flag_disables_window():
+    d, s = 8, 32
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (1, 2, s, d))
+    k = jax.random.normal(ks[1], (1, 2, s, d))
+    v = jax.random.normal(ks[2], (1, 2, s, d))
+    glob = full_attention(q, k, v, scale=0.3, causal=True, window=None)
+    flagged = full_attention(q, k, v, scale=0.3, causal=True, window=4,
+                             is_global=jnp.asarray(True))
+    np.testing.assert_allclose(np.array(flagged), np.array(glob), atol=1e-5)
+
+
+def test_ring_buffer_cache_decode_matches_windowed_attention():
+    """Decoding with a ring buffer of size W == full attention with window W."""
+    cfg = get_config("gemma2-9b").reduced()
+    d = cfg.head_dim
+    hkv = cfg.n_kv_heads
+    s_total, w = 24, 8
+    ks = jax.random.split(jax.random.key(2), 3)
+    k_all = jax.random.normal(ks[0], (1, hkv, s_total, d))
+    v_all = jax.random.normal(ks[1], (1, hkv, s_total, d))
+    q_last = jax.random.normal(ks[2], (1, cfg.n_heads, 1, d))
+
+    cache = init_kv_cache(1, w, cfg)
+    for t in range(s_total):
+        cache = cache_write(cache, k_all[:, :, t:t + 1], v_all[:, :, t:t + 1],
+                            jnp.asarray(t))
+    out_ring = decode_attention(q_last, cache, jnp.asarray(s_total - 1), cfg,
+                                window=w)
+    # reference: full attention of the last query over the last w keys
+    ref = full_attention(q_last, k_all[:, :, -w:], v_all[:, :, -w:],
+                         scale=d**-0.5, causal=False,
+                         softcap=cfg.attn_softcap)
+    np.testing.assert_allclose(np.array(out_ring), np.array(ref), atol=2e-5,
+                               rtol=1e-4)

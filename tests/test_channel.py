@@ -1,0 +1,54 @@
+"""Channel model unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.channel import ChannelConfig, edge_noise_std, sample_gains
+
+
+@pytest.mark.parametrize("fading,scale", [
+    ("equal", 1.0), ("equal", 2.5), ("rayleigh", 1.0), ("rayleigh", 0.5),
+    ("rician", 1.0), ("lognormal", 0.5),
+])
+def test_sample_moments_match_analytic(fading, scale):
+    cfg = ChannelConfig(fading=fading, scale=scale)
+    h = sample_gains(jax.random.key(0), cfg, (400_000,))
+    assert float(h.min()) >= 0.0 or fading == "lognormal"
+    np.testing.assert_allclose(float(h.mean()), cfg.mu_h, rtol=0.02)
+    np.testing.assert_allclose(float(h.var()), cfg.sigma_h2,
+                               rtol=0.05, atol=5e-3)
+
+
+def test_phase_error_reduces_mean_gain():
+    base = ChannelConfig(fading="rayleigh")
+    err = ChannelConfig(fading="rayleigh", phase_error_max=np.pi / 4)
+    assert err.mu_h < base.mu_h
+    assert err.mu_h > 0.0  # paper §III: error < pi/4 keeps nonzero mean
+    h = sample_gains(jax.random.key(1), err, (400_000,))
+    np.testing.assert_allclose(float(h.mean()), err.mu_h, rtol=0.02)
+
+
+@given(n=st.integers(min_value=1, max_value=10_000),
+       e=st.floats(min_value=1e-6, max_value=1e3))
+@settings(max_examples=50, deadline=None)
+def test_edge_noise_scaling_law(n, e):
+    """Noise std must scale as sigma_w / (N sqrt(E_N)) (Eq. 8)."""
+    cfg = ChannelConfig(noise_std=2.0, energy=e)
+    assert np.isclose(edge_noise_std(cfg, n), 2.0 / (n * np.sqrt(e)))
+
+
+@given(eps=st.floats(min_value=0.05, max_value=0.9))
+@settings(max_examples=20, deadline=None)
+def test_energy_scaling_vanishing_total_energy(eps):
+    """With E_N = N^{eps-2}, total energy N*E_N -> 0 while the noise term
+    d sigma_w^2/(E_N N^2) = d sigma_w^2 N^{-eps} -> 0 as well (§V-C.2)."""
+    from repro.core.theory import energy_for_scaling
+
+    n1, n2 = 100, 10_000
+    e1, e2 = energy_for_scaling(n1, eps), energy_for_scaling(n2, eps)
+    assert n2 * e2 < n1 * e1  # total energy decreasing
+    noise1 = 1.0 / (e1 * n1**2)
+    noise2 = 1.0 / (e2 * n2**2)
+    assert noise2 < noise1  # noise term decreasing too

@@ -1,0 +1,142 @@
+"""GBMA convergence properties against Theorems 1 and 2 (the paper's own
+claims), plus statistical invariants of the OTA aggregation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import CentralizedGD, FDMGD
+from repro.core.channel import ChannelConfig
+from repro.core.gbma import GBMASimulator, ota_aggregate
+from repro.core.theory import (ProblemConstants, contraction_c,
+                               stepsize_theorem1, stepsize_theorem2,
+                               theorem1_bound, theorem2_bound)
+
+
+def quadratic_problem(n=80, d=8, lam=0.5, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, d))
+    y = X @ rng.standard_normal(d) + 0.1 * rng.standard_normal(n)
+    Xj, yj = jnp.array(X), jnp.array(y)
+
+    def grad_fn(theta):
+        return (Xj @ theta - yj)[:, None] * Xj + lam * theta[None, :]
+
+    A = X.T @ X / n
+    theta_star = np.linalg.solve(A + lam * np.eye(d), X.T @ y / n)
+
+    def objective(theta):
+        t = np.asarray(theta)
+        return float(0.5 * np.mean((X @ t - y) ** 2)
+                     + lam / 2 * np.sum(t * t))
+
+    eig = np.linalg.eigvalsh(A)
+    pc = ProblemConstants(
+        mu=float(eig[0] + lam), L=float(eig[-1] + lam),
+        L_bar=float(np.max(np.sum(X**2, axis=1)) + lam),
+        delta=4.0, r0_sq=float(np.sum(theta_star**2)), dim=d)
+    return grad_fn, objective, theta_star, pc
+
+
+def test_ota_aggregate_unbiased_scaled_by_mu_h():
+    """E[v_k] = mu_h * grad(F) (Eq. 31)."""
+    ch = ChannelConfig(fading="rayleigh", noise_std=0.5)
+    g = jax.random.normal(jax.random.key(0), (64, 16))
+    keys = jax.random.split(jax.random.key(1), 4000)
+    vs = jax.vmap(lambda k: ota_aggregate(g, k, ch))(keys)
+    expected = ch.mu_h * np.mean(np.array(g), axis=0)
+    np.testing.assert_allclose(np.array(vs.mean(axis=0)), expected,
+                               atol=4 * float(vs.std()) / np.sqrt(4000))
+
+
+def test_ota_variance_formula():
+    """E||v||^2 = mu_h^2||gbar||^2 + sigma_h^2/N^2 sum||g_n||^2 + d sw^2/(E N^2)
+    (Eq. 34)."""
+    ch = ChannelConfig(fading="rayleigh", noise_std=0.3, energy=2.0)
+    n, d = 32, 8
+    g = jax.random.normal(jax.random.key(2), (n, d))
+    keys = jax.random.split(jax.random.key(3), 30_000)
+    vs = jax.vmap(lambda k: ota_aggregate(g, k, ch))(keys)
+    emp = float(jnp.mean(jnp.sum(vs.astype(jnp.float64)**2, axis=-1)))
+    gbar = np.mean(np.array(g), axis=0)
+    expected = (ch.mu_h**2 * np.sum(gbar**2)
+                + ch.sigma_h2 / n**2 * np.sum(np.array(g)**2)
+                + d * ch.noise_std**2 / (ch.energy * n**2))
+    np.testing.assert_allclose(emp, expected, rtol=0.05)
+
+
+def test_remark1_noiseless_equal_gains_matches_centralized():
+    """Remark 1: sigma_h=0, sigma_w=0, h=1 -> GBMA == centralized GD."""
+    grad_fn, _, _, _ = quadratic_problem()
+    ch = ChannelConfig(fading="equal", scale=1.0, noise_std=0.0)
+    beta = 0.05
+    sim = GBMASimulator(grad_fn, ch, beta)
+    cen = CentralizedGD(grad_fn, beta)
+    t0 = jnp.zeros(8)
+    traj_g = sim.run(t0, 50, jax.random.key(0))
+    traj_c = cen.run(t0, 50)
+    np.testing.assert_allclose(np.array(traj_g), np.array(traj_c), atol=1e-5)
+
+
+@pytest.mark.parametrize("fading", ["equal", "rayleigh"])
+def test_theorem1_bound_holds_empirically(fading):
+    grad_fn, objective, theta_star, pc = quadratic_problem()
+    ch = ChannelConfig(fading=fading, noise_std=0.5, energy=1.0)
+    beta = stepsize_theorem1(pc, ch, 80, safety=0.5)
+    c = contraction_c(beta, pc, ch, 80)
+    assert 0.0 < c < 1.0
+    sim = GBMASimulator(grad_fn, ch, beta)
+    # average excess risk over seeds; bound is on the expectation
+    excesses = []
+    for seed in range(8):
+        traj = sim.run(jnp.zeros(8), 200, jax.random.key(seed))
+        excesses.append(objective(traj[-1]) - objective(theta_star))
+    bound = theorem1_bound(np.array([200]), beta, pc, ch, 80)[0]
+    assert np.mean(excesses) <= bound * 1.05
+
+
+def test_theorem2_rate_equal_gains():
+    """Convex case, equal gains: error <= r0^2/(2 beta k) + beta d sw^2/(E N^2)."""
+    grad_fn, objective, theta_star, pc = quadratic_problem(lam=0.0)
+    ch = ChannelConfig(fading="equal", scale=1.0, noise_std=0.3)
+    beta = stepsize_theorem2(pc, ch, safety=0.5)
+    sim = GBMASimulator(grad_fn, ch, beta)
+    excesses = []
+    for seed in range(6):
+        traj = sim.run(jnp.zeros(8), 300, jax.random.key(seed))
+        excesses.append(objective(traj[-1]) - objective(theta_star))
+    bound = theorem2_bound(np.array([300]), beta, pc, ch, 80, b_of_n=0.0,
+                           equal_gains=True)[0]
+    assert np.mean(excesses) <= bound * 1.05
+
+
+@given(n_small=st.integers(20, 60))
+@settings(max_examples=8, deadline=None)
+def test_more_nodes_reduce_steady_state_error(n_small):
+    """Theorem 1: distortion + noise terms decay with N."""
+    _, _, _, pc = quadratic_problem()
+    ch = ChannelConfig(fading="rayleigh", noise_std=1.0)
+    beta = stepsize_theorem1(pc, ch, n_small, safety=0.5)
+    b_small = theorem1_bound(np.array([10_000]), beta, pc, ch, n_small)[0]
+    b_large = theorem1_bound(np.array([10_000]), beta, pc, ch,
+                             n_small * 100)[0]
+    assert b_large < b_small
+
+
+def test_gbma_beats_fdm_at_equal_low_energy():
+    """Paper Fig. 4 qualitative claim: at very low per-node energy, GBMA's
+    noise (sigma_w/(N sqrt(E))) beats FDM's (sigma_w/(sqrt(N) sqrt(E)))."""
+    grad_fn, objective, theta_star, pc = quadratic_problem(n=100)
+    e_n = 100.0 ** (-1.5)
+    ch = ChannelConfig(fading="rayleigh", noise_std=1.0, energy=e_n)
+    beta = stepsize_theorem1(pc, ch, 100, safety=0.5)
+    sim = GBMASimulator(grad_fn, ch, beta)
+    fdm = FDMGD(grad_fn, ch, beta)
+    err_g, err_f = [], []
+    for s in range(5):
+        tg = sim.run(jnp.zeros(8), 150, jax.random.key(s))
+        tf = fdm.run(jnp.zeros(8), 150, jax.random.key(100 + s))
+        err_g.append(objective(tg[-1]) - objective(theta_star))
+        err_f.append(objective(tf[-1]) - objective(theta_star))
+    assert np.mean(err_g) < np.mean(err_f)

@@ -1,0 +1,78 @@
+"""§Perf optimization switches must preserve semantics:
+microbatch accumulation == single-batch gradients; pad_heads/bf16_dispatch
+preserve model outputs; dp_over_model context changes only shardings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.channel import ChannelConfig
+from repro.core.gbma import GBMAConfig
+from repro.models.model import build_model
+from repro.optim.gd import gd
+from repro.training.train_step import TrainConfig, build_train_step
+
+
+def _setup(arch="olmo-1b", **cfg_kw):
+    cfg = get_config(arch).reduced().with_(**cfg_kw)
+    m = build_model(cfg)
+    params = m.init_params(jax.random.key(0))
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (8, 17), 0,
+                                          cfg.vocab_size)}
+    return m, params, batch
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    m, params, batch = _setup()
+    gcfg = GBMAConfig(n_nodes=4, channel=ChannelConfig(noise_std=0.05))
+    opt = gd(0.1)
+    step1 = build_train_step(m, TrainConfig(gbma=gcfg), opt)
+    step4 = build_train_step(m, TrainConfig(gbma=gcfg, microbatches=4), opt)
+    p1, _, m1 = jax.jit(step1)(params, opt.init(params), batch, 0)
+    p4, _, m4 = jax.jit(step4)(params, opt.init(params), batch, 0)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p4)):
+        np.testing.assert_allclose(np.array(a, np.float32),
+                                   np.array(b, np.float32),
+                                   atol=5e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ["minitron-4b", "hymba-1.5b",
+                                  "whisper-small"])
+def test_pad_heads_preserves_loss(arch):
+    cfg = get_config(arch).reduced()
+    m0 = build_model(cfg)
+    m1 = build_model(cfg.with_(opt_pad_heads=True))
+    params = m0.init_params(jax.random.key(2))
+    batch = {"tokens": jax.random.randint(jax.random.key(3), (2, 17), 0,
+                                          cfg.vocab_size)}
+    if m0.kind == "encdec":
+        batch["frames"] = jax.random.normal(jax.random.key(4),
+                                            (2, cfg.enc_seq, cfg.d_model))
+    l0, _ = m0.train_loss_per_example(params, batch)
+    l1, _ = m1.train_loss_per_example(params, batch)
+    np.testing.assert_allclose(np.array(l0), np.array(l1), atol=1e-3,
+                               rtol=1e-4)
+
+
+def test_dp_over_model_context_is_scoped():
+    from repro.sharding.specs import data_axes, tp_axis, use_dp_over_model
+
+    assert tp_axis() == "model"
+    with use_dp_over_model():
+        assert tp_axis() is None
+        assert "model" in data_axes()
+    assert tp_axis() == "model"
+
+
+def test_rng_impl_rbg_trains():
+    m, params, batch = _setup()
+    gcfg = GBMAConfig(n_nodes=4, channel=ChannelConfig(noise_std=0.05))
+    opt = gd(0.1)
+    step = jax.jit(build_train_step(
+        m, TrainConfig(gbma=gcfg, rng_impl="rbg"), opt))
+    p, _, metrics = step(params, opt.init(params), batch, 0)
+    assert np.isfinite(float(metrics["loss"]))

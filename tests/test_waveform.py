@@ -1,0 +1,39 @@
+"""Sample-level waveform simulation must reproduce the abstract MAC model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import waveform as wf
+
+
+@pytest.mark.parametrize("d,T,N", [(4, 16, 3), (8, 32, 5), (16, 64, 20)])
+def test_matched_filter_equals_abstract_model(d, T, N):
+    key = jax.random.key(d * T * N)
+    g = jax.random.normal(key, (N, d))
+    gains = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (N,)))
+    s = wf.shaping_waveforms(d, T)
+    # orthonormality
+    np.testing.assert_allclose(np.array(s @ s.T), np.eye(d), atol=1e-5)
+    rx = wf.transmit(g, gains, s, energy=2.0, noise_std=0.0,
+                     key=jax.random.fold_in(key, 2))
+    v = wf.edge_estimate(rx, s, N, 2.0)
+    expected = np.einsum("n,nd->d", np.array(gains), np.array(g)) / N
+    np.testing.assert_allclose(np.array(v), expected, atol=1e-4)
+
+
+def test_noise_statistics_after_matched_filter():
+    """Projected noise must be N(0, sigma_w^2 I_d) (Eq. 7)."""
+    d, T = 8, 32
+    s = wf.shaping_waveforms(d, T)
+    keys = jax.random.split(jax.random.key(0), 2000)
+    sigma = 0.7
+
+    def one(k):
+        noise = sigma * jax.random.normal(k, (T,))
+        return wf.matched_filter(noise, s)
+
+    w = jax.vmap(one)(keys)  # (2000, d)
+    np.testing.assert_allclose(float(w.mean()), 0.0, atol=0.02)
+    np.testing.assert_allclose(np.array(w.var(axis=0)),
+                               sigma**2 * np.ones(d), rtol=0.2)
