@@ -10,16 +10,19 @@
       "no power control" choice costs/gains.
   (d) multi-antenna edge receiver (related work [12]): the fading-distortion
       floor should fall as 1/M with M receive antennas.
+
+Every sweep runs through the Monte Carlo engine. (a) is a single vmapped
+call over the five phase configs — a one-config-list change, no new loop
+code; (b) needs one call per fading family (the family is a static compile
+choice); (d) uses the engine's `n_antennas`.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import MSDProblem, average_runs
-from repro.core.baselines import PowerControlOTA
+from benchmarks.common import MSDProblem
 from repro.core.channel import ChannelConfig
-from repro.core.gbma import GBMASimulator
+from repro.core.montecarlo import run_mc
 from repro.core.theory import stepsize_theorem1
 
 N = 200
@@ -27,36 +30,29 @@ STEPS = 300
 SEEDS = 3
 
 
-def _excess(prob, runner):
-    def one(key):
-        traj = runner.run(jnp.zeros(prob.pc.dim), STEPS, key)
-        return prob.excess_risk(traj)
-
-    return average_runs(one, SEEDS)
-
-
 def run(verbose: bool = True) -> list[str]:
     rows = []
     prob = MSDProblem.make(N)
+    mc = prob.to_mc()
 
-    # ---- (a) phase-error sweep ------------------------------------------
-    for frac in (0.0, 0.125, 0.25, 0.4, 0.49):
-        
-        phi = frac * np.pi  # phi_max up to ~pi/2
-        ch = ChannelConfig(fading="rayleigh", noise_std=0.5,
-                           phase_error_max=max(phi, 1e-9))
-        beta = stepsize_theorem1(prob.pc, ch, N, safety=0.8)
-        emp = _excess(prob, GBMASimulator(prob.grad_fn(), ch, beta))
+    # ---- (a) phase-error sweep: one batched engine call -------------------
+    phis = [max(frac * np.pi, 1e-9)
+            for frac in (0.0, 0.125, 0.25, 0.4, 0.49)]
+    chs = [ChannelConfig(fading="rayleigh", noise_std=0.5,
+                         phase_error_max=phi) for phi in phis]
+    betas = [stepsize_theorem1(prob.pc, ch, N, safety=0.8) for ch in chs]
+    res = run_mc(mc, chs, "gbma", betas, STEPS, SEEDS)
+    for ch, phi, emp in zip(chs, phis, res.mean):
         rows.append(f"ablation_phase,phi_max={phi:.3f}rad,mu_h={ch.mu_h:.3f},"
                     f"final={emp[-1]:.4e}")
 
-    # ---- (b) fading families ---------------------------------------------
+    # ---- (b) fading families (one compile per family) ---------------------
     for fading, kw in (("equal", {}), ("rayleigh", {}),
                        ("rician", {"rician_k": 4.0}),
                        ("lognormal", {"scale": 0.5})):
         ch = ChannelConfig(fading=fading, noise_std=0.5, **kw)
         beta = stepsize_theorem1(prob.pc, ch, N, safety=0.8)
-        emp = _excess(prob, GBMASimulator(prob.grad_fn(), ch, beta))
+        emp = run_mc(mc, [ch], "gbma", [beta], STEPS, SEEDS).mean[0]
         rows.append(f"ablation_fading,{fading},D={ch.dispersion:.3f},"
                     f"final={emp[-1]:.4e}")
 
@@ -64,19 +60,14 @@ def run(verbose: bool = True) -> list[str]:
     ch = ChannelConfig(fading="rayleigh", noise_std=0.5,
                        energy=float(N) ** (-1.0))
     beta = stepsize_theorem1(prob.pc, ch, N, safety=0.8)
-    emp_g = _excess(prob, GBMASimulator(prob.grad_fn(), ch, beta))
-    emp_p = _excess(prob, PowerControlOTA(prob.grad_fn(), ch,
-                                          beta * ch.mu_h, h_min=0.3))
+    emp_g = run_mc(mc, [ch], "gbma", [beta], STEPS, SEEDS).mean[0]
+    emp_p = run_mc(mc, [ch], "power_control", [beta * ch.mu_h], STEPS, SEEDS,
+                   h_min=0.3).mean[0]
     rows.append(f"ablation_powerctl,gbma,final={emp_g[-1]:.4e}")
     rows.append(f"ablation_powerctl,truncated_inversion,final={emp_p[-1]:.4e}")
 
-    # ---- (d) multi-antenna edge --------------------------------------------
-    import dataclasses as _dc
-    import jax as _jax
-    from repro.core.gbma import ota_aggregate_multiantenna
-
+    # ---- (d) multi-antenna edge -------------------------------------------
     ch = ChannelConfig(fading="rayleigh", noise_std=0.5)
-    gfn = prob.grad_fn()
     pc = prob.pc
     for m_ant in (1, 4, 16):
         # fair comparison: each M uses the Theorem-1 stepsize designed for
@@ -87,20 +78,8 @@ def run(verbose: bool = True) -> list[str]:
               / (sh2 * pc.L_bar**2 * (1.0 + 2.0 * pc.delta)
                  * (pc.mu + pc.L)))
         beta = 0.8 * min(b1, b2)
-
-        def run_one(key, m_ant=m_ant, beta=beta):
-            def body(theta, k):
-                v = ota_aggregate_multiantenna(gfn(theta), k, ch, m_ant)
-                return theta - beta * v, theta
-
-            keys = _jax.random.split(key, 2 * STEPS)
-            theta_fin, traj = _jax.lax.scan(body, jnp.zeros(prob.pc.dim),
-                                            keys)
-            import numpy as _np
-            return prob.excess_risk(_np.concatenate(
-                [_np.asarray(traj), _np.asarray(theta_fin)[None]]))
-
-        emp = average_runs(run_one, SEEDS)
+        emp = run_mc(mc, [ch], "gbma", [beta], 2 * STEPS, SEEDS,
+                     n_antennas=m_ant).mean[0]
         rows.append(f"ablation_antennas,M={m_ant},final={emp[-1]:.4e}")
     if verbose:
         print("\n".join(rows))

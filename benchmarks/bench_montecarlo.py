@@ -1,0 +1,93 @@
+"""Timed comparison: batched Monte Carlo engine vs the seed per-seed Python
+loop (`average_runs` + host-side `MSDProblem.excess_risk`), emitted to
+`benchmarks/BENCH_montecarlo.json` so the speedup is tracked across PRs.
+
+Workload: the paper's Fig. 3 operating point — MSD regression, N=500 nodes,
+Rayleigh fading, 300 GBMA steps, SEEDS=4 (the figure scripts' setting). Both
+paths get one untimed warm-up call (the engine compiles once; the legacy
+path re-traces its scan every call, which is part of what it costs and is
+measured)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import MSDProblem, average_runs
+from repro.core.channel import ChannelConfig
+from repro.core.gbma import GBMASimulator
+from repro.core.montecarlo import run_mc
+from repro.core.theory import stepsize_theorem1
+
+N = 500
+STEPS = 300
+SEEDS = 4
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_montecarlo.json")
+
+
+def _time(fn, reps: int = 3) -> tuple[float, np.ndarray]:
+    fn()  # warm-up (engine: compile; legacy: first trace)
+    best = float("inf")
+    out = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run(verbose: bool = True) -> list[str]:
+    prob = MSDProblem.make(N)
+    ch = ChannelConfig(fading="rayleigh", scale=1.0, noise_std=1.0,
+                       energy=1.0)
+    beta = stepsize_theorem1(prob.pc, ch, N, safety=0.9)
+
+    sim = GBMASimulator(prob.grad_fn(), ch, beta)
+
+    def seed_loop():
+        def one(key):
+            traj = sim.run(jnp.zeros(prob.pc.dim), STEPS, key)
+            return prob.excess_risk(traj)
+
+        return average_runs(one, SEEDS)
+
+    mc = prob.to_mc()
+
+    def engine():
+        return run_mc(mc, [ch], "gbma", [beta], STEPS, SEEDS).mean[0]
+
+    t_seed, curve_seed = _time(seed_loop)
+    t_engine, curve_engine = _time(engine)
+    rel = float(np.max(np.abs(curve_engine - curve_seed)
+                       / np.maximum(np.abs(curve_seed), 1e-12)))
+    record = {
+        "workload": {"problem": "msd_regression", "n_nodes": N,
+                     "steps": STEPS, "seeds": SEEDS, "fading": "rayleigh"},
+        "seed_loop_s": round(t_seed, 4),
+        "engine_s": round(t_engine, 4),
+        "speedup": round(t_seed / t_engine, 2),
+        "max_rel_curve_diff": rel,
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    rows = [
+        f"bench_montecarlo,seed_loop_s,{t_seed:.4f}",
+        f"bench_montecarlo,engine_s,{t_engine:.4f}",
+        f"bench_montecarlo,speedup,{t_seed / t_engine:.2f}",
+        f"bench_montecarlo,max_rel_curve_diff,{rel:.2e}",
+        f"bench_montecarlo,json,{OUT_PATH}",
+    ]
+    if verbose:
+        print("\n".join(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -8,9 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.baselines import CentralizedGD, FDMGD
-from repro.core.channel import ChannelConfig
-from repro.core.gbma import GBMASimulator
+from repro.core.montecarlo import MCProblem, quadratic_mc_problem
 from repro.core.theory import ProblemConstants
 from repro.data.synthetic import msd_like_regression
 
@@ -58,9 +56,20 @@ class MSDProblem:
         f_star = self.objective(self.theta_star)
         return np.array([self.objective(t) - f_star for t in np.asarray(traj)])
 
+    def to_mc(self) -> MCProblem:
+        """On-device problem for `repro.core.montecarlo.run_mc` (closed-form
+        quadratic excess risk; numerically equivalent to `excess_risk`)."""
+        return quadratic_mc_problem(self.X, self.y, LAMBDA, self.theta_star)
+
 
 def average_runs(run_fn, seeds: int) -> np.ndarray:
-    """Averages excess-risk curves over seeds (the expectation in Eq. 14)."""
+    """Averages excess-risk curves over seeds (the expectation in Eq. 14).
+
+    Legacy sequential path: Python loop over seeds, per-step host-side
+    objective evaluation. The figures now run through
+    `repro.core.montecarlo.run_mc`; this stays as the timing baseline for
+    `benchmarks/bench_montecarlo.py` and as an independent oracle in tests.
+    """
     curves = [run_fn(jax.random.key(s)) for s in range(seeds)]
     return np.mean(np.stack(curves), axis=0)
 

@@ -1,15 +1,15 @@
 """Paper Fig. 2: federated MSD-like regression, EQUAL channel gains.
 (a) error vs iterations for N in logspace; (b) error for E_N = N^{eps-2}.
-Empirical curves are overlaid with the Theorem 1 bound."""
+Empirical curves are overlaid with the Theorem 1 bound. All Monte Carlo
+trajectories run through the batched engine (`repro.core.montecarlo`)."""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import MSDProblem, average_runs
+from benchmarks.common import MSDProblem
 from repro.core.channel import ChannelConfig
-from repro.core.gbma import GBMASimulator
-from repro.core.theory import (contraction_c, stepsize_theorem1,
-                               theorem1_bound)
+from repro.core.montecarlo import run_mc
+from repro.core.theory import stepsize_theorem1
 
 STEPS = 300
 SEEDS = 4
@@ -17,43 +17,29 @@ SEEDS = 4
 
 def run(verbose: bool = True) -> list[str]:
     rows = []
-    ks = np.arange(1, STEPS + 2)
-    # ---- (a) varying N at E_N = 1 -------------------------------------
+    # ---- (a) varying N at E_N = 1: one compile per N (shapes differ) ------
     for n in (50, 160, 500):
         prob = MSDProblem.make(n)
         ch = ChannelConfig(fading="equal", scale=1.0, noise_std=1.0,
                            energy=1.0)
         beta = stepsize_theorem1(prob.pc, ch, n, safety=0.9)
-        sim = GBMASimulator(prob.grad_fn(), ch, beta)
-
-        def one(key, sim=sim, prob=prob):
-            import jax.numpy as jnp
-            traj = sim.run(jnp.zeros(prob.pc.dim), STEPS, key)
-            return prob.excess_risk(traj)
-
-        emp = average_runs(one, SEEDS)
-        bound = theorem1_bound(ks, beta, prob.pc, ch, n)
+        res = run_mc(prob.to_mc(), [ch], "gbma", [beta], STEPS, SEEDS,
+                     pc=prob.pc)
+        emp, bound = res.mean[0], res.bounds[0]
         rows.append(f"fig2a,N={n},final_emp,{emp[-1]:.6e}")
         rows.append(f"fig2a,N={n},final_bound,{bound[-1]:.6e}")
         rows.append(f"fig2a,N={n},bound_holds,{int(np.all(emp <= bound * 1.05))}")
-    # ---- (b) E_N = N^{eps-2} at N = 500 --------------------------------
+    # ---- (b) E_N = N^{eps-2} at N = 500: one vmapped call over energies ---
     n = 500
     prob = MSDProblem.make(n)
-    for eps in (0.5, 1.0, 1.5):
-        ch = ChannelConfig(fading="equal", scale=1.0, noise_std=1.0,
-                           energy=float(n) ** (eps - 2.0))
-        beta = stepsize_theorem1(prob.pc, ch, n, safety=0.9)
-        sim = GBMASimulator(prob.grad_fn(), ch, beta)
-
-        def one(key, sim=sim, prob=prob):
-            import jax.numpy as jnp
-            traj = sim.run(jnp.zeros(prob.pc.dim), STEPS, key)
-            return prob.excess_risk(traj)
-
-        emp = average_runs(one, SEEDS)
-        bound = theorem1_bound(ks, beta, prob.pc, ch, n)
-        rows.append(f"fig2b,eps={eps},final_emp,{emp[-1]:.6e}")
-        rows.append(f"fig2b,eps={eps},final_bound,{bound[-1]:.6e}")
+    eps_grid = (0.5, 1.0, 1.5)
+    chs = [ChannelConfig(fading="equal", scale=1.0, noise_std=1.0,
+                         energy=float(n) ** (eps - 2.0)) for eps in eps_grid]
+    betas = [stepsize_theorem1(prob.pc, ch, n, safety=0.9) for ch in chs]
+    res = run_mc(prob.to_mc(), chs, "gbma", betas, STEPS, SEEDS, pc=prob.pc)
+    for i, eps in enumerate(eps_grid):
+        rows.append(f"fig2b,eps={eps},final_emp,{res.mean[i][-1]:.6e}")
+        rows.append(f"fig2b,eps={eps},final_bound,{res.bounds[i][-1]:.6e}")
     if verbose:
         print("\n".join(rows))
     return rows

@@ -1,13 +1,14 @@
 """Paper Fig. 3: same as Fig. 2 under i.i.d. Rayleigh fading — the gradient
-is now distorted (sigma_h^2 > 0) as well as noisy."""
+is now distorted (sigma_h^2 > 0) as well as noisy. Runs on the batched Monte
+Carlo engine."""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import MSDProblem, average_runs
+from benchmarks.common import MSDProblem
 from repro.core.channel import ChannelConfig
-from repro.core.gbma import GBMASimulator
-from repro.core.theory import stepsize_theorem1, theorem1_bound
+from repro.core.montecarlo import run_mc
+from repro.core.theory import stepsize_theorem1
 
 STEPS = 300
 SEEDS = 4
@@ -15,41 +16,27 @@ SEEDS = 4
 
 def run(verbose: bool = True) -> list[str]:
     rows = []
-    ks = np.arange(1, STEPS + 2)
     for n in (50, 160, 500):
         prob = MSDProblem.make(n)
         ch = ChannelConfig(fading="rayleigh", scale=1.0, noise_std=1.0,
                            energy=1.0)
         beta = stepsize_theorem1(prob.pc, ch, n, safety=0.9)
-        sim = GBMASimulator(prob.grad_fn(), ch, beta)
-
-        def one(key, sim=sim, prob=prob):
-            import jax.numpy as jnp
-            traj = sim.run(jnp.zeros(prob.pc.dim), STEPS, key)
-            return prob.excess_risk(traj)
-
-        emp = average_runs(one, SEEDS)
-        bound = theorem1_bound(ks, beta, prob.pc, ch, n)
+        res = run_mc(prob.to_mc(), [ch], "gbma", [beta], STEPS, SEEDS,
+                     pc=prob.pc)
+        emp, bound = res.mean[0], res.bounds[0]
         rows.append(f"fig3a,N={n},final_emp,{emp[-1]:.6e}")
         rows.append(f"fig3a,N={n},final_bound,{bound[-1]:.6e}")
         rows.append(f"fig3a,N={n},bound_holds,{int(np.all(emp <= bound * 1.05))}")
     n = 500
     prob = MSDProblem.make(n)
-    for eps in (0.5, 1.0, 1.5):
-        ch = ChannelConfig(fading="rayleigh", scale=1.0, noise_std=1.0,
-                           energy=float(n) ** (eps - 2.0))
-        beta = stepsize_theorem1(prob.pc, ch, n, safety=0.9)
-        sim = GBMASimulator(prob.grad_fn(), ch, beta)
-
-        def one(key, sim=sim, prob=prob):
-            import jax.numpy as jnp
-            traj = sim.run(jnp.zeros(prob.pc.dim), STEPS, key)
-            return prob.excess_risk(traj)
-
-        emp = average_runs(one, SEEDS)
-        bound = theorem1_bound(ks, beta, prob.pc, ch, n)
-        rows.append(f"fig3b,eps={eps},final_emp,{emp[-1]:.6e}")
-        rows.append(f"fig3b,eps={eps},final_bound,{bound[-1]:.6e}")
+    eps_grid = (0.5, 1.0, 1.5)
+    chs = [ChannelConfig(fading="rayleigh", scale=1.0, noise_std=1.0,
+                         energy=float(n) ** (eps - 2.0)) for eps in eps_grid]
+    betas = [stepsize_theorem1(prob.pc, ch, n, safety=0.9) for ch in chs]
+    res = run_mc(prob.to_mc(), chs, "gbma", betas, STEPS, SEEDS, pc=prob.pc)
+    for i, eps in enumerate(eps_grid):
+        rows.append(f"fig3b,eps={eps},final_emp,{res.mean[i][-1]:.6e}")
+        rows.append(f"fig3b,eps={eps},final_bound,{res.bounds[i][-1]:.6e}")
     if verbose:
         print("\n".join(rows))
     return rows

@@ -1,17 +1,16 @@
 """Paper Fig. 5: acoustic source localization with N=200 sensors, -10 dB,
 GBMA vs FDM-GD vs centralized GD. The local losses are non-convex and
 non-Lipschitz — Theorems 1/2 do not apply — yet GBMA converges from a good
-initialization (paper §VI-B)."""
+initialization (paper §VI-B). Runs on the Monte Carlo engine with the
+on-device squared-position-error metric."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import average_runs
-from repro.core.baselines import CentralizedGD, FDMGD
 from repro.core.channel import ChannelConfig
-from repro.core.gbma import GBMASimulator, slot_energy
+from repro.core.gbma import slot_energy
+from repro.core.montecarlo import localization_mc_problem, run_mc
 
 N = 200
 STEPS = 3000
@@ -24,43 +23,26 @@ def make_problem(seed=0):
 
     r, x, src, noise_std = localization_field(N, signal_a=A, snr_db=-10.0,
                                               seed=seed)
-    rj, xj = jnp.array(r), jnp.array(x)
-
-    def grad_fn(theta):
-        diff = theta[None, :] - rj  # (N, 2)
-        d2 = jnp.sum(diff**2, axis=1)
-        s = A / d2
-        resid = xj - s  # (N,)
-        # d/dtheta (x_n - A/d2)^2 = 2 resid * (A * 2 diff / d2^2)
-        return (4.0 * A * resid / d2**2)[:, None] * diff
-
-    def err(theta):
-        return float(np.sum((np.asarray(theta) - src) ** 2))
-
-    return grad_fn, err, src
+    return localization_mc_problem(r, x, src, A), src
 
 
 def run(verbose: bool = True) -> list[str]:
     rows = []
-    grad_fn, err, src = make_problem()
-    theta0 = jnp.array([45.0, 45.0])
+    mc, src = make_problem()
+    theta0 = np.array([45.0, 45.0])
     beta = 1.0
     ch_gbma = ChannelConfig(fading="rayleigh", scale=1.0, noise_std=0.3,
                             energy=float(N) ** (-1.5))
     ch_fdm = ChannelConfig(fading="rayleigh", scale=1.0, noise_std=0.3,
                            energy=1.0)
 
-    def curve(runner):
-        def one(key):
-            traj = runner.run(theta0, STEPS, key)
-            return np.array([err(t) for t in np.asarray(traj)])
-
-        return average_runs(one, SEEDS)
-
-    e_g = curve(GBMASimulator(grad_fn, ch_gbma, beta / ch_gbma.mu_h))
-    e_f = curve(FDMGD(grad_fn, ch_fdm, beta / ch_gbma.mu_h, invert_channel=False))
-    e_c = curve(CentralizedGD(grad_fn, beta))
-    g0 = grad_fn(theta0)
+    e_g = run_mc(mc, [ch_gbma], "gbma", [beta / ch_gbma.mu_h], STEPS, SEEDS,
+                 theta0=theta0).mean[0]
+    e_f = run_mc(mc, [ch_fdm], "fdm", [beta / ch_gbma.mu_h], STEPS, SEEDS,
+                 theta0=theta0, invert_channel=False).mean[0]
+    e_c = run_mc(mc, [ch_gbma], "centralized", [beta], STEPS, SEEDS,
+                 theta0=theta0).mean[0]
+    g0 = mc.grad_fn(jnp.asarray(theta0, jnp.float32))
     rows.append(f"fig5,final_sq_err,gbma,{e_g[-1]:.4e}")
     rows.append(f"fig5,final_sq_err,fdm,{e_f[-1]:.4e}")
     rows.append(f"fig5,final_sq_err,centralized,{e_c[-1]:.4e}")

@@ -7,7 +7,7 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (ablations, fig2_equal_gains,
+    from benchmarks import (ablations, bench_montecarlo, fig2_equal_gains,
                             fig3_rayleigh, fig4_fdm_comparison,
                             fig5_localization, fig6_energy_scaling,
                             roofline)
@@ -20,6 +20,7 @@ def main() -> None:
         ("fig6_energy_scaling (paper Fig. 6)", fig6_energy_scaling),
         ("ablations (beyond-paper: phase error / fading / power control)",
          ablations),
+        ("bench_montecarlo (engine vs seed per-seed loop)", bench_montecarlo),
         ("roofline (EXPERIMENTS §Roofline)", roofline),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None

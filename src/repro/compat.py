@@ -1,0 +1,66 @@
+"""JAX version-portability layer.
+
+The repo targets both JAX 0.4.x and >= 0.5 APIs. The moved/renamed symbols
+used by the codebase are resolved here, once, so call sites never touch
+`jax.experimental` or version-sniff on their own:
+
+  * `shard_map`  — top-level `jax.shard_map` (>= 0.4.35 on some builds /
+    >= 0.5) with fallback to `jax.experimental.shard_map.shard_map`.
+  * `make_mesh`  — top-level `jax.make_mesh` (>= 0.4.35) with fallback to
+    building a `Mesh` from `mesh_utils.create_device_mesh`.
+  * `tree_map` / `tree_leaves` / `tree_flatten` / `tree_unflatten` /
+    `tree_structure` — the `jax.tree_util` spellings (stable across both
+    lines; re-exported so future renames are one-line fixes here).
+
+Policy (see docs/montecarlo.md): production modules and tests import these
+from `repro.compat`; only this file may probe `jax.experimental` or the JAX
+version string.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = [
+    "JAX_VERSION",
+    "shard_map",
+    "make_mesh",
+    "tree_map",
+    "tree_leaves",
+    "tree_flatten",
+    "tree_unflatten",
+    "tree_structure",
+]
+
+JAX_VERSION: tuple[int, ...] = tuple(
+    int(p) for p in jax.__version__.split(".")[:3] if p.isdigit()
+)
+
+# ---- shard_map -----------------------------------------------------------
+if hasattr(jax, "shard_map"):  # JAX >= 0.5 (also late 0.4.x nightlies)
+    shard_map = jax.shard_map
+else:  # JAX 0.4.x: the experimental location
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+# ---- make_mesh -----------------------------------------------------------
+if hasattr(jax, "make_mesh"):
+    make_mesh = jax.make_mesh
+else:  # pre-0.4.35
+
+    def make_mesh(axis_shapes, axis_names, *, devices=None):
+        from jax.experimental import mesh_utils
+        from jax.sharding import Mesh
+
+        if devices is None:
+            devices = jax.devices()
+        return Mesh(
+            mesh_utils.create_device_mesh(axis_shapes, devices=list(devices)),
+            axis_names,
+        )
+
+
+# ---- tree utils ----------------------------------------------------------
+tree_map = jax.tree_util.tree_map
+tree_leaves = jax.tree_util.tree_leaves
+tree_flatten = jax.tree_util.tree_flatten
+tree_unflatten = jax.tree_util.tree_unflatten
+tree_structure = jax.tree_util.tree_structure

@@ -10,10 +10,24 @@ from repro.core.gbma import (
     shard_map_aggregate,
 )
 from repro.core.baselines import CentralizedGD, FDMGD, PowerControlOTA
+from repro.core.montecarlo import (
+    ChannelBatch,
+    MCProblem,
+    MCResult,
+    localization_mc_problem,
+    quadratic_mc_problem,
+    run_mc,
+)
 from repro.core import theory, waveform
 
 __all__ = [
+    "ChannelBatch",
     "ChannelConfig",
+    "MCProblem",
+    "MCResult",
+    "localization_mc_problem",
+    "quadratic_mc_problem",
+    "run_mc",
     "GBMAConfig",
     "GBMASimulator",
     "CentralizedGD",

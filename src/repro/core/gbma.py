@@ -27,6 +27,7 @@ from typing import Any, Callable, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import tree_flatten, tree_map, tree_unflatten
 from repro.core.channel import ChannelConfig, edge_noise_std, sample_gains
 
 Array = jax.Array
@@ -161,13 +162,13 @@ def perturb_gradients(
     if dtype is None:
         dtype = jnp.dtype(gcfg.noise_dtype)
     std = edge_noise_std(gcfg.channel, gcfg.n_nodes)
-    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    leaves, treedef = tree_flatten(grads)
     keys = jax.random.split(key, len(leaves))
     noisy = [
         (g + std * jax.random.normal(k, g.shape, dtype=dtype).astype(g.dtype))
         for g, k in zip(leaves, keys)
     ]
-    return jax.tree_util.tree_unflatten(treedef, noisy)
+    return tree_unflatten(treedef, noisy)
 
 
 # --------------------------------------------------------------------------
@@ -180,7 +181,8 @@ def shard_map_aggregate(
     gcfg: GBMAConfig,
     axis_names: Sequence[str] = ("data",),
 ) -> PyTree:
-    """Explicit OTA protocol body — call inside shard_map.
+    """Explicit OTA protocol body — call inside `repro.compat.shard_map`
+    (the version-portable spelling; `jax.shard_map` does not exist on 0.4.x).
 
     Each device scales its local gradient by its own slot gain (the analog
     amplification sqrt(E_N) h g after phase correction and matched filtering),
@@ -195,7 +197,7 @@ def shard_map_aggregate(
             s = jax.lax.psum(s, ax)
         return s / n
 
-    v = jax.tree_util.tree_map(superpose, local_grad)
+    v = tree_map(superpose, local_grad)
     return perturb_gradients(v, key, gcfg)
 
 

@@ -1,0 +1,357 @@
+"""Batched, jitted Monte Carlo engine for the paper experiments (Figs. 2–6).
+
+The figures reproduce the expectation in Eq. (14) by averaging excess-risk
+curves over seeds. The seed implementation looped over seeds in Python and
+evaluated the objective per trajectory point on the host (numpy); this engine
+runs the whole sweep as one compiled call:
+
+    vmap(channel configs) ∘ vmap(seeds) ∘ scan(steps)
+
+with the excess-risk curve computed **on-device inside the scan**. For the
+quadratic objective (27) the excess risk is the closed form
+``0.5 (θ-θ*)ᵀ H (θ-θ*)`` (H = A + λI), which is exact — no cancellation
+against F* — so the trajectory of estimates never leaves the device.
+
+Algorithms (``algo=``) mirror the reference simulators step-for-step,
+including their PRNG split order, so a fixed seed reproduces the trajectory
+of `GBMASimulator.run` / `FDMGD.run` / `PowerControlOTA.run` up to float32
+rounding (~1e-7 relative; a few host-side f64 scalar constants round
+differently when computed in traced f32):
+
+  * ``gbma``          — Eq. (8)–(9); an integer ``n_antennas`` gives the
+                        MRC multi-antenna edge of related work [12].
+  * ``centralized``   — noiseless benchmark GD.
+  * ``fdm``           — orthogonal-channel GD (``invert_channel`` as in
+                        `FDMGD`).
+  * ``power_control`` — CA-DSGD-style truncated channel inversion [11].
+
+Channel configs are batched with `ChannelBatch.stack`: any mix of scale,
+noise_std, energy (e.g. the paper's E_N = N^{ε-2} sweep), phase error and
+Rician K vmaps in one compile as long as the fading *family* is shared (the
+family picks the sampling code path and is a static argument). A node-count
+sweep changes array shapes, hence one compile per N.
+
+Adding a new channel scenario = building new `ChannelConfig`s and calling
+`run_mc`; no new per-figure script code (see docs/montecarlo.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel import ChannelConfig
+from repro.core.theory import ProblemConstants, theorem1_bound
+
+Array = jax.Array
+
+ALGOS = ("gbma", "centralized", "fdm", "power_control")
+
+
+# --------------------------------------------------------------------------
+# problems
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MCProblem:
+    """On-device problem: per-node gradients plus a scalar risk metric.
+
+    grad_fn: theta (d,) -> (N, d) all nodes' local gradients.
+    risk_fn: theta (d,) -> scalar excess risk / error, fully traceable.
+    """
+
+    grad_fn: Callable[[Array], Array]
+    risk_fn: Callable[[Array], Array]
+    dim: int
+    n_nodes: int
+
+
+def quadratic_mc_problem(
+    X: np.ndarray, y: np.ndarray, lam: float, theta_star: np.ndarray
+) -> MCProblem:
+    """Regularized least squares (Eq. 27), one sample per node.
+
+    The excess risk uses the exact quadratic form around the minimizer:
+    F(θ) - F* = 0.5 (θ-θ*)ᵀ (A + λI) (θ-θ*) with A = XᵀX/N — closed form,
+    no F* cancellation, safe in f32.
+    """
+    n, d = X.shape
+    H64 = X.T.astype(np.float64) @ X.astype(np.float64) / n + lam * np.eye(d)
+    Xj, yj = jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32)
+    Hj = jnp.asarray(H64, jnp.float32)
+    ts = jnp.asarray(theta_star, jnp.float32)
+
+    def grad_fn(theta):
+        return (Xj @ theta - yj)[:, None] * Xj + lam * theta[None, :]
+
+    def risk_fn(theta):
+        diff = theta - ts
+        return 0.5 * diff @ (Hj @ diff)
+
+    return MCProblem(grad_fn=grad_fn, risk_fn=risk_fn, dim=d, n_nodes=n)
+
+
+def localization_mc_problem(
+    r: np.ndarray, x: np.ndarray, src: np.ndarray, signal_a: float
+) -> MCProblem:
+    """Source localization of paper §VI-B; risk = squared position error."""
+    rj, xj = jnp.asarray(r, jnp.float32), jnp.asarray(x, jnp.float32)
+    srcj = jnp.asarray(src, jnp.float32)
+
+    def grad_fn(theta):
+        diff = theta[None, :] - rj  # (N, 2)
+        d2 = jnp.sum(diff**2, axis=1)
+        resid = xj - signal_a / d2
+        return (4.0 * signal_a * resid / d2**2)[:, None] * diff
+
+    def risk_fn(theta):
+        return jnp.sum((theta - srcj) ** 2)
+
+    return MCProblem(grad_fn=grad_fn, risk_fn=risk_fn, dim=2,
+                     n_nodes=r.shape[0])
+
+
+# --------------------------------------------------------------------------
+# batched channel parameters
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ChannelBatch:
+    """Stack of C `ChannelConfig`s sharing one fading family.
+
+    The family string is static (it selects the gain-sampling code path);
+    everything else is a (C,) f32 array and vmaps in a single compile.
+    """
+
+    fading: str
+    params: dict  # {'scale','noise_std','energy','phase_error_max','rician_k'}
+    configs: tuple  # the original ChannelConfigs (host side, for bounds)
+
+    @classmethod
+    def stack(cls, cfgs: Sequence[ChannelConfig]) -> "ChannelBatch":
+        fams = {c.fading for c in cfgs}
+        if len(fams) != 1:
+            raise ValueError(
+                f"one ChannelBatch = one fading family, got {sorted(fams)}; "
+                "issue one run_mc call per family")
+        arr = lambda name: jnp.asarray(
+            [getattr(c, name) for c in cfgs], jnp.float32)
+        return cls(
+            fading=cfgs[0].fading,
+            params={
+                "scale": arr("scale"),
+                "noise_std": arr("noise_std"),
+                "energy": arr("energy"),
+                "phase_error_max": arr("phase_error_max"),
+                "rician_k": arr("rician_k"),
+            },
+            configs=tuple(cfgs),
+        )
+
+    def __len__(self) -> int:
+        return len(self.configs)
+
+
+def _sample_gains(key: Array, fading: str, p: dict, shape: tuple) -> Array:
+    """Traceable twin of `channel.sample_gains` over dynamic scalar params.
+
+    Split order and draw shapes match `sample_gains` exactly, so a fixed key
+    yields the same random draws as the reference simulators (trajectories
+    then agree to f32 rounding). The phase factor is applied
+    unconditionally: with phase_error_max == 0 the uniform draw is 0 and
+    cos(0) == 1, identical to the skipped branch.
+    """
+    k_mag, k_ph = jax.random.split(key)
+    scale = p["scale"]
+    if fading == "equal":
+        h = jnp.broadcast_to(scale.astype(jnp.float32), shape)
+    elif fading == "rayleigh":
+        u = jax.random.uniform(k_mag, shape, minval=1e-12, maxval=1.0)
+        h = scale * jnp.sqrt(-2.0 * jnp.log(u))
+    elif fading == "rician":
+        nu = jnp.sqrt(p["rician_k"] * 2.0) * scale
+        xy = jax.random.normal(k_mag, shape + (2,)) * scale
+        h = jnp.sqrt((xy[..., 0] + nu) ** 2 + xy[..., 1] ** 2)
+    elif fading == "lognormal":
+        h = jnp.exp(scale * jax.random.normal(k_mag, shape))
+    else:
+        raise ValueError(f"unknown fading model: {fading}")
+    phi = jax.random.uniform(k_ph, shape, minval=-p["phase_error_max"],
+                             maxval=p["phase_error_max"])
+    return (h * jnp.cos(phi)).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# per-slot aggregation (mirrors the reference simulators' RNG usage)
+# --------------------------------------------------------------------------
+def _ota_slot(g: Array, key: Array, fading: str, p: dict) -> Array:
+    n = g.shape[0]
+    k_h, k_w = jax.random.split(key)
+    h = _sample_gains(k_h, fading, p, (n,))
+    v = jnp.einsum("n,nd->d", h, g) / n
+    std = p["noise_std"] / (n * jnp.sqrt(p["energy"]))
+    return v + std * jax.random.normal(k_w, v.shape, dtype=v.dtype)
+
+
+def _slot_update(g: Array, key: Array, *, algo: str, fading: str, p: dict,
+                 n_antennas: int, invert_channel: bool, h_min: float) -> Array:
+    """One MAC slot: local gradients (N, d) -> received update direction (d,)."""
+    n = g.shape[0]
+    if algo == "centralized":
+        return jnp.mean(g, axis=0)
+    if algo == "gbma":
+        # n_antennas=None: single-antenna edge, RNG-identical to
+        # `GBMASimulator`. An integer (1 included) takes the MRC path of
+        # `ota_aggregate_multiantenna`, whose extra key split changes the
+        # stream even for M=1 — mirrored so fixed seeds reproduce exactly.
+        if n_antennas is None:
+            return _ota_slot(g, key, fading, p)
+        keys = jax.random.split(key, n_antennas)
+        v = jax.vmap(lambda k: _ota_slot(g, k, fading, p))(keys)
+        return jnp.mean(v, axis=0)
+    if algo == "fdm":
+        k_h, k_w = jax.random.split(key)
+        noise = p["noise_std"] / jnp.sqrt(p["energy"]) * jax.random.normal(
+            k_w, g.shape, dtype=g.dtype)
+        if invert_channel:
+            rx = g + noise
+        else:
+            h = _sample_gains(k_h, fading, p, (n,))
+            rx = h[:, None] * g + noise
+        return jnp.mean(rx, axis=0)
+    if algo == "power_control":
+        k_h, k_w = jax.random.split(key)
+        h = _sample_gains(k_h, fading, p, (n,))
+        active = (h >= h_min).astype(g.dtype)
+        n_active = jnp.maximum(jnp.sum(active), 1.0)
+        sup = jnp.einsum("n,nd->d", active, g)
+        w = p["noise_std"] / (n_active * jnp.sqrt(p["energy"])) * (
+            jax.random.normal(k_w, (g.shape[1],), dtype=g.dtype))
+        return sup / n_active + w
+    raise ValueError(f"unknown algo {algo!r}; expected one of {ALGOS}")
+
+
+# --------------------------------------------------------------------------
+# engine
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class MCResult:
+    """Host-side result of one engine call.
+
+    risks:      (C, S, steps+1) per-config per-seed excess-risk curves.
+    mean:       (C, steps+1) seed average (the Eq. 14 expectation estimate).
+    ci95:       (C, steps+1) 1.96 * standard error over seeds (0 if S == 1).
+    cum_energy: (C, S, steps) cumulative transmitted energy Σ E_N ||g_k||².
+    bounds:     (C, steps+1) Theorem-1 bound per config (None unless the
+                problem constants were supplied and algo == 'gbma').
+    """
+
+    risks: np.ndarray
+    mean: np.ndarray
+    ci95: np.ndarray
+    cum_energy: np.ndarray
+    bounds: Optional[np.ndarray]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("grad_fn", "risk_fn", "algo", "fading", "steps",
+                     "n_antennas", "invert_channel", "h_min"),
+)
+def _mc_core(params, betas, theta0, seed_keys, *, grad_fn, risk_fn, algo,
+             fading, steps, n_antennas, invert_channel, h_min):
+    """(C,)-batched channel params × (S,) seed keys × scan(steps)."""
+
+    def trajectory(p, beta, key):
+        def body(carry, k):
+            theta, cum_e = carry
+            g = grad_fn(theta)
+            risk = risk_fn(theta)
+            cum_e = cum_e + p["energy"] * jnp.sum(g.astype(jnp.float32) ** 2)
+            v = _slot_update(g, k, algo=algo, fading=fading, p=p,
+                             n_antennas=n_antennas,
+                             invert_channel=invert_channel, h_min=h_min)
+            return (theta - beta * v, cum_e), (risk, cum_e)
+
+        step_keys = jax.random.split(key, steps)
+        (theta_fin, _), (risks, cum_e) = jax.lax.scan(
+            body, (theta0, jnp.float32(0.0)), step_keys)
+        risks = jnp.concatenate([risks, risk_fn(theta_fin)[None]])
+        return risks, cum_e  # (steps+1,), (steps,)
+
+    per_config = jax.vmap(
+        lambda p, b: jax.vmap(lambda k: trajectory(p, b, k))(seed_keys))
+    risks, cum_e = per_config(params, betas)  # (C,S,steps+1), (C,S,steps)
+    mean = jnp.mean(risks, axis=1)
+    n_seeds = risks.shape[1]
+    if n_seeds > 1:
+        ci95 = 1.96 * jnp.std(risks, axis=1, ddof=1) / jnp.sqrt(n_seeds)
+    else:
+        ci95 = jnp.zeros_like(mean)
+    return risks, mean, ci95, cum_e
+
+
+def run_mc(
+    problem: MCProblem,
+    channels: Sequence[ChannelConfig] | ChannelBatch,
+    algo: str,
+    betas: Sequence[float] | np.ndarray,
+    steps: int,
+    seeds: int,
+    *,
+    theta0: Optional[np.ndarray] = None,
+    seed0: int = 0,
+    n_antennas: Optional[int] = None,
+    invert_channel: bool = False,
+    h_min: float = 0.3,
+    pc: Optional[ProblemConstants] = None,
+) -> MCResult:
+    """Run `seeds` Monte Carlo trajectories for each channel config.
+
+    Seed s uses `jax.random.key(seed0 + s)` — the same stream the sequential
+    reference path (`benchmarks.common.average_runs`) consumes, so results
+    are directly comparable. With `pc` supplied and algo='gbma' the Theorem-1
+    bound for each config rides along in the result.
+    """
+    batch = channels if isinstance(channels, ChannelBatch) \
+        else ChannelBatch.stack(list(channels))
+    betas = jnp.asarray(betas, jnp.float32)
+    if betas.shape != (len(batch),):
+        raise ValueError(f"need one stepsize per config: "
+                         f"{betas.shape} vs C={len(batch)}")
+    t0 = jnp.zeros((problem.dim,), jnp.float32) if theta0 is None \
+        else jnp.asarray(theta0, jnp.float32)
+    seed_keys = jnp.stack([jax.random.key(seed0 + s) for s in range(seeds)])
+    risks, mean, ci95, cum_e = _mc_core(
+        batch.params, betas, t0, seed_keys,
+        grad_fn=problem.grad_fn, risk_fn=problem.risk_fn, algo=algo,
+        fading=batch.fading, steps=steps, n_antennas=n_antennas,
+        invert_channel=invert_channel, h_min=h_min)
+    bounds = None
+    if pc is not None and algo == "gbma" and n_antennas is None:
+        ks = np.arange(1, steps + 2)
+        bounds = np.stack([
+            theorem1_bound(ks, float(b), pc, cfg, problem.n_nodes)
+            for b, cfg in zip(np.asarray(betas), batch.configs)])
+    return MCResult(
+        risks=np.asarray(risks), mean=np.asarray(mean),
+        ci95=np.asarray(ci95), cum_energy=np.asarray(cum_e), bounds=bounds)
+
+
+def energy_to_target(res: MCResult, target: float) -> np.ndarray:
+    """Per-config mean (over seeds) total transmitted energy until the risk
+    curve first hits `target` (paper Fig. 6). Seeds that never hit spend the
+    full-horizon energy."""
+    c, s, kp1 = res.risks.shape
+    out = np.zeros((c,))
+    for ci in range(c):
+        per_seed = []
+        for si in range(s):
+            risks = res.risks[ci, si]
+            hit = int(np.argmax(risks <= target)) if np.any(risks <= target) \
+                else kp1 - 1
+            per_seed.append(res.cum_energy[ci, si, min(hit, kp1 - 2)])
+        out[ci] = float(np.mean(per_seed))
+    return out

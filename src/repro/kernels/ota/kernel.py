@@ -50,7 +50,8 @@ def _ota_kernel(g_ref, h_ref, w_ref, o_ref, acc_ref, *, n_nodes: int,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("noise_scale", "node_blk", "lane_blk", "interpret"),
+    static_argnames=("noise_scale", "n_nodes", "node_blk", "lane_blk",
+                     "interpret"),
 )
 def ota_edge_aggregate_kernel(
     grads: jax.Array,  # (N, d)
@@ -58,11 +59,19 @@ def ota_edge_aggregate_kernel(
     noise: jax.Array,  # (d,) standard-normal draws (edge noise, pre-scaled by 1)
     *,
     noise_scale: float,
+    n_nodes: int | None = None,
     node_blk: int = DEFAULT_NODE_BLK,
     lane_blk: int = DEFAULT_LANE_BLK,
     interpret: bool = False,
 ) -> jax.Array:
+    """`n_nodes` is the matched-filter normalization N (Eq. 8). Callers that
+    zero-pad the node dimension pass the TRUE node count here: padded rows
+    have zero gain and add nothing to the superposition, so normalizing by
+    the true N inside the kernel is exact — no host-side rescaling (which
+    would double-round the noise term through the output dtype)."""
     n, d = grads.shape
+    if n_nodes is None:
+        n_nodes = n
     node_blk = min(node_blk, n)
     lane_blk = min(lane_blk, d)
     if n % node_blk or d % lane_blk:
@@ -72,7 +81,7 @@ def ota_edge_aggregate_kernel(
 
     kernel = functools.partial(
         _ota_kernel,
-        n_nodes=n,
+        n_nodes=n_nodes,
         noise_scale=noise_scale,
         n_node_blocks=n_node_blocks,
     )

@@ -41,15 +41,16 @@ def ota_edge_aggregate(
     g = jnp.pad(grads, ((0, pad_n), (0, pad_d)))
     h = jnp.pad(gains, (0, pad_n))
     w = jnp.pad(noise, (0, pad_d))
-    # padded rows have zero gain -> contribute nothing; fix normalization
+    # padded rows have zero gain -> contribute nothing to the superposition;
+    # the kernel normalizes by the TRUE n (not n + pad_n), so no host-side
+    # un-scaling of the noise term is needed (the old rescale-then-subtract
+    # double-rounded the noise through the output dtype — lossy for bf16).
     out = ota_edge_aggregate_kernel(
         g, h, w,
         noise_scale=noise_scale,
+        n_nodes=n,
         node_blk=node_blk,
         lane_blk=lane_blk,
         interpret=interpret,
     )
-    out = out[:d].astype(jnp.float32) * ((n + pad_n) / n)
-    # the noise term was scaled too; undo for the noise component
-    out = out - noise_scale * noise.astype(jnp.float32) * ((n + pad_n) / n - 1.0)
-    return out.astype(grads.dtype)
+    return out[:d]

@@ -22,6 +22,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.models.layers import activation, dense_init
 from repro.sharding.specs import (axis_size, current_mesh, data_axes, shard,
@@ -66,8 +67,8 @@ def _a2a_reshard(x: Array, *, invert: bool) -> Array:
             return jax.lax.all_to_all(xl, tp, split_axis=0, concat_axis=1,
                                       tiled=True)
 
-    return jax.shard_map(body, mesh=mesh, in_specs=(in_spec,),
-                         out_specs=out_spec)(x)
+    return shard_map(body, mesh=mesh, in_specs=(in_spec,),
+                     out_specs=out_spec)(x)
 
 
 def moe_params(key: Array, cfg: ModelConfig, lead=()) -> dict:

@@ -1,0 +1,89 @@
+"""Offline stand-in for the tiny slice of the `hypothesis` API these tests use.
+
+The test container has no network access and `hypothesis` is not baked into
+the image, so the property tests import `given` / `settings` / `strategies`
+from here. When the real library is installed it is preferred (full shrinking
+and example databases); otherwise a deterministic, seeded sampler with the
+same decorator surface runs each property on `max_examples` pseudo-random
+draws. Supported strategies: `integers`, `floats`, `sampled_from` — exactly
+what the suite needs; extend `_Strategy` factories if a test needs more.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is available
+    from hypothesis import given, settings, strategies
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: "np.random.Generator"):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 - mimics the `hypothesis.strategies` module
+        @staticmethod
+        def integers(min_value=None, max_value=None):
+            lo = -(2**31) if min_value is None else int(min_value)
+            hi = 2**31 - 1 if max_value is None else int(max_value)
+            return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+        @staticmethod
+        def floats(min_value=None, max_value=None, **_):
+            lo = -1e9 if min_value is None else float(min_value)
+            hi = 1e9 if max_value is None else float(max_value)
+            return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+    def settings(max_examples: int = 10, **_):
+        """Records `max_examples`; `deadline` etc. are accepted and ignored."""
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        """Runs the test on seeded draws; the seed derives from the test name
+        so every run (and every CI machine) sees the same examples."""
+
+        def deco(fn):
+            n_examples = getattr(fn, "_compat_max_examples", 10)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                seed = np.frombuffer(
+                    f"{fn.__module__}.{fn.__qualname__}".encode(), np.uint8
+                ).sum()
+                rng = np.random.default_rng(int(seed))
+                for i in range(n_examples):
+                    drawn = {k: s.draw(rng) for k, s in strats.items()}
+                    try:
+                        fn(*args, **drawn, **kwargs)
+                    except Exception as e:  # attach the failing example
+                        raise AssertionError(
+                            f"falsifying example ({i + 1}/{n_examples}): {drawn}"
+                        ) from e
+
+            # pytest resolves fixtures through __wrapped__; the strategy
+            # params are filled here, not by fixtures, so hide the original
+            # signature.
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco
+
+
+__all__ = ["given", "settings", "strategies", "HAVE_HYPOTHESIS"]

@@ -7,6 +7,36 @@ import pytest
 jax.config.update("jax_default_matmul_precision", "highest")
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="also run tests marked @pytest.mark.slow (the full per-arch "
+             "matrix and other long-runners; tier-1 skips them)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="long-runner; re-enable with --runslow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.key(0)
+
+
+@pytest.fixture(scope="session")
+def olmo_reduced():
+    """Shared reduced olmo-1b model + params: several modules smoke-test
+    against the same tiny dense transformer; building (and jitting around)
+    it once per session trims repeated setup cost."""
+    from repro.configs.registry import get_config
+    from repro.models.model import build_model
+
+    cfg = get_config("olmo-1b").reduced()
+    m = build_model(cfg)
+    params = m.init_params(jax.random.key(0))
+    return m, params

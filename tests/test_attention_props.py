@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs.registry import get_config
 from repro.models.attention import (blockwise_attention, cache_write,
@@ -19,7 +19,7 @@ from repro.models.attention import (blockwise_attention, cache_write,
     window=st.sampled_from([None, 16, 64]),
     softcap=st.sampled_from([None, 20.0]),
 )
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=6, deadline=None)
 def test_blockwise_equals_full(sq, h, g, window, softcap):
     d = 16
     ks = jax.random.split(jax.random.key(sq * h * g), 3)

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import make_mesh, shard_map
 from repro.core.channel import ChannelConfig, sample_gains
 from repro.core.gbma import (GBMAConfig, gbma_value_and_grad, node_weights,
                              ota_aggregate, perturb_gradients,
@@ -59,7 +60,7 @@ def test_shard_map_tier_matches_loss_weighting():
     _, g1 = vg(params, (X, y), weights)
     g1 = perturb_gradients(g1, k_w, gcfg)
 
-    mesh = jax.make_mesh((1,), ("data",))
+    mesh = make_mesh((1,), ("data",))
     local_gain = sample_gains(k_h, ch, (n_nodes,))[0]
 
     @jax.jit
@@ -68,9 +69,9 @@ def test_shard_map_tier_matches_loss_weighting():
             g = jax.grad(lambda p: jnp.mean(_quad_loss(p, (xb, yb))))(params)
             return shard_map_aggregate(g, local_gain, k_w, gcfg, ("data",))
 
-        return jax.shard_map(body, mesh=mesh,
-                             in_specs=(jax.sharding.PartitionSpec("data"),) * 2,
-                             out_specs=jax.sharding.PartitionSpec())(X, y)
+        return shard_map(body, mesh=mesh,
+                         in_specs=(jax.sharding.PartitionSpec("data"),) * 2,
+                         out_specs=jax.sharding.PartitionSpec())(X, y)
 
     g2 = protocol()
     np.testing.assert_allclose(np.array(g1["w"]), np.array(g2["w"]),

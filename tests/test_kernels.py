@@ -28,6 +28,32 @@ def test_ota_kernel_matches_ref(n, d, dtype):
                                rtol=1e-2)
 
 
+@pytest.mark.parametrize("n,d", [(5, 7), (1, 90), (130, 513), (200, 90)])
+def test_ota_kernel_padding_path_odd_shapes(n, d):
+    """Regression for the non-divisible (N, d) path: padded node rows carry
+    zero gain and the kernel normalizes by the TRUE N, so both the
+    superposition normalization and the edge-noise scale must come out
+    exact — no residual (N+pad)/N factor on either term."""
+    k = jax.random.key(n * 1000 + d)
+    kg, kh, kw = jax.random.split(k, 3)
+    g = jax.random.normal(kg, (n, d))
+    h = jax.random.uniform(kh, (n,))
+    w = jax.random.normal(kw, (d,))
+    ref = ota_edge_aggregate_ref(g, h, w, noise_scale=0.37)
+    ker = ota_edge_aggregate(g, h, w, noise_scale=0.37, impl="pallas",
+                             interpret=True)
+    np.testing.assert_allclose(np.array(ker), np.array(ref), atol=1e-6,
+                               rtol=1e-5)
+    # noise-only probe: zero gradients isolate the noise term, which must be
+    # exactly noise_scale * w (the old wrapper rescaled it by (N+pad)/N and
+    # subtracted the excess after an output-dtype round-trip)
+    noise_only = ota_edge_aggregate(jnp.zeros_like(g), h, w,
+                                    noise_scale=0.37, impl="pallas",
+                                    interpret=True)
+    np.testing.assert_allclose(np.array(noise_only), 0.37 * np.array(w),
+                               atol=1e-7)
+
+
 # ---------------------------------------------------------- attention kernel
 @pytest.mark.parametrize("b,hq,hkv,s,d,kw", [
     (2, 4, 4, 256, 64, {}),

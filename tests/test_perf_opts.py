@@ -23,6 +23,7 @@ def _setup(arch="olmo-1b", **cfg_kw):
     return m, params, batch
 
 
+@pytest.mark.slow
 def test_microbatch_accumulation_matches_full_batch():
     m, params, batch = _setup()
     gcfg = GBMAConfig(n_nodes=4, channel=ChannelConfig(noise_std=0.05))
@@ -40,8 +41,11 @@ def test_microbatch_accumulation_matches_full_batch():
                                    atol=5e-5, rtol=1e-4)
 
 
-@pytest.mark.parametrize("arch", ["minitron-4b", "hymba-1.5b",
-                                  "whisper-small"])
+@pytest.mark.parametrize("arch", [
+    "minitron-4b",
+    pytest.param("hymba-1.5b", marks=pytest.mark.slow),
+    pytest.param("whisper-small", marks=pytest.mark.slow),
+])
 def test_pad_heads_preserves_loss(arch):
     cfg = get_config(arch).reduced()
     m0 = build_model(cfg)
@@ -68,8 +72,10 @@ def test_dp_over_model_context_is_scoped():
     assert tp_axis() == "model"
 
 
-def test_rng_impl_rbg_trains():
-    m, params, batch = _setup()
+def test_rng_impl_rbg_trains(olmo_reduced):
+    m, params = olmo_reduced  # session-shared reduced model (conftest)
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (8, 17), 0,
+                                          m.cfg.vocab_size)}
     gcfg = GBMAConfig(n_nodes=4, channel=ChannelConfig(noise_std=0.05))
     opt = gd(0.1)
     step = jax.jit(build_train_step(

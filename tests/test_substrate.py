@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.checkpoint import ckpt
 from repro.configs.registry import get_config
@@ -100,13 +100,11 @@ def test_checkpoint_shape_mismatch_raises(tmp_path):
 
 
 # ----------------------------------------------------------------- serving
-def test_engine_greedy_generation_deterministic():
-    cfg = get_config("olmo-1b").reduced()
-    m = build_model(cfg)
-    params = m.init_params(jax.random.key(0))
+def test_engine_greedy_generation_deterministic(olmo_reduced):
+    m, params = olmo_reduced  # session-shared reduced model (conftest)
     eng = Engine(m, params, ServeConfig(max_new_tokens=5))
     prompt = {"tokens": jax.random.randint(jax.random.key(1), (2, 8), 0,
-                                           cfg.vocab_size)}
+                                           m.cfg.vocab_size)}
     out1 = eng.generate(prompt)
     out2 = eng.generate(prompt)
     assert out1.shape == (2, 5)

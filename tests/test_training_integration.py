@@ -47,12 +47,14 @@ def test_gbma_training_converges():
     assert last < first * 0.9
 
 
+@pytest.mark.slow
 def test_gbma_tracks_centralized_at_high_snr():
     _, last_gbma = _run("gbma", noise_std=1e-4)
     _, last_cent = _run("centralized", noise_std=0.0)
     assert abs(last_gbma - last_cent) / last_cent < 0.15
 
 
+@pytest.mark.slow
 def test_low_snr_hurts_more_than_high_snr():
     _, hi = _run("gbma", noise_std=1e-3, seed=1)
     _, lo = _run("gbma", noise_std=0.5, seed=1)
