@@ -10,11 +10,16 @@
       "no power control" choice costs/gains.
   (d) multi-antenna edge receiver (related work [12]): the fading-distortion
       floor should fall as 1/M with M receive antennas.
+  (e) accelerated GD over the MAC (Paul, Friedman & Cohen 2021): heavy-ball
+      and Nesterov momentum on the same OTA superposition, vs vanilla GBMA
+      at the same stepsize — the engine's `algo="momentum"/"nesterov"`
+      scan-carry variants, swept over the momentum coefficient γ.
 
 Every sweep runs through the Monte Carlo engine. (a) is a single vmapped
 call over the five phase configs — a one-config-list change, no new loop
 code; (b) needs one call per fading family (the family is a static compile
-choice); (d) uses the engine's `n_antennas`.
+choice); (d) uses the engine's `n_antennas`; (e) batches the three
+algorithms per-row in one compile.
 """
 from __future__ import annotations
 
@@ -81,6 +86,21 @@ def run(verbose: bool = True) -> list[str]:
         emp = run_mc(mc, [ch], "gbma", [beta], 2 * STEPS, SEEDS,
                      n_antennas=m_ant).mean[0]
         rows.append(f"ablation_antennas,M={m_ant},final={emp[-1]:.4e}")
+
+    # ---- (e) accelerated GD over the MAC (momentum / Nesterov) ------------
+    # one engine call per γ: vanilla + heavy-ball + Nesterov batched per-row
+    ch = ChannelConfig(fading="rayleigh", noise_std=0.5)
+    beta = stepsize_theorem1(prob.pc, ch, N, safety=0.8)
+    for gamma in (0.5, 0.9):
+        res = run_mc(mc, [ch, ch, ch], ("gbma", "momentum", "nesterov"),
+                     # heavy-ball/Nesterov apply β to the momentum sum
+                     # Σ γ^j v: rescale by (1-γ) to match vanilla's
+                     # effective per-step magnitude
+                     [beta, beta * (1 - gamma), beta * (1 - gamma)],
+                     STEPS, SEEDS, momentum=gamma)
+        for a, emp in zip(("gbma", "momentum", "nesterov"), res.mean):
+            rows.append(f"ablation_accel,gamma={gamma},{a},"
+                        f"final={emp[-1]:.4e}")
     if verbose:
         print("\n".join(rows))
     return rows

@@ -1,12 +1,19 @@
-"""Timed comparison: batched Monte Carlo engine vs the seed per-seed Python
-loop (`average_runs` + host-side `MSDProblem.excess_risk`), emitted to
-`benchmarks/BENCH_montecarlo.json` so the speedup is tracked across PRs.
+"""Timed comparisons for the Monte Carlo engine, emitted to
+`benchmarks/BENCH_montecarlo.json` so the speedups are tracked across PRs.
 
-Workload: the paper's Fig. 3 operating point — MSD regression, N=500 nodes,
-Rayleigh fading, 300 GBMA steps, SEEDS=4 (the figure scripts' setting). Both
-paths get one untimed warm-up call (the engine compiles once; the legacy
-path re-traces its scan every call, which is part of what it costs and is
-measured)."""
+1. engine vs the seed per-seed Python loop (`average_runs` + host-side
+   `MSDProblem.excess_risk`) at the paper's Fig. 3 operating point — MSD
+   regression, N=500 nodes, Rayleigh fading, 300 GBMA steps, SEEDS=4. Both
+   paths get one untimed warm-up call (the engine compiles once; the legacy
+   path re-traces its scan every call, which is part of what it costs and is
+   measured).
+
+2. node-count sweep: ONE padded/masked engine call over all N (a single
+   `_mc_core` compile) vs the pre-PR-2 path of one engine call — hence one
+   XLA compile — per N. Both are timed cold (the jit cache is cleared
+   first): compile time is precisely what the padded N axis removes, so it
+   belongs in the measurement.
+"""
 from __future__ import annotations
 
 import json
@@ -20,12 +27,13 @@ import numpy as np
 from benchmarks.common import MSDProblem, average_runs
 from repro.core.channel import ChannelConfig
 from repro.core.gbma import GBMASimulator
-from repro.core.montecarlo import run_mc
+from repro.core.montecarlo import clear_cache, run_mc, trace_count
 from repro.core.theory import stepsize_theorem1
 
 N = 500
 STEPS = 300
 SEEDS = 4
+SWEEP_N_GRID = (100, 200, 400)
 OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_montecarlo.json")
 
 
@@ -40,7 +48,16 @@ def _time(fn, reps: int = 3) -> tuple[float, np.ndarray]:
     return best, out
 
 
-def run(verbose: bool = True) -> list[str]:
+def _time_cold(fn) -> tuple[float, object, int]:
+    """One cold wall-clock measurement, XLA compiles included."""
+    clear_cache()
+    c0 = trace_count()
+    t0 = time.perf_counter()
+    out = fn()
+    return time.perf_counter() - t0, out, trace_count() - c0
+
+
+def bench_single_config() -> dict:
     prob = MSDProblem.make(N)
     ch = ChannelConfig(fading="rayleigh", scale=1.0, noise_std=1.0,
                        energy=1.0)
@@ -64,13 +81,56 @@ def run(verbose: bool = True) -> list[str]:
     t_engine, curve_engine = _time(engine)
     rel = float(np.max(np.abs(curve_engine - curve_seed)
                        / np.maximum(np.abs(curve_seed), 1e-12)))
-    record = {
+    return {
         "workload": {"problem": "msd_regression", "n_nodes": N,
                      "steps": STEPS, "seeds": SEEDS, "fading": "rayleigh"},
         "seed_loop_s": round(t_seed, 4),
         "engine_s": round(t_engine, 4),
         "speedup": round(t_seed / t_engine, 2),
         "max_rel_curve_diff": rel,
+    }
+
+
+def bench_n_sweep() -> dict:
+    probs = [MSDProblem.make(n) for n in SWEEP_N_GRID]
+    chs = [ChannelConfig(fading="rayleigh", scale=1.0, noise_std=1.0,
+                         energy=float(n) ** (-1.5)) for n in SWEEP_N_GRID]
+    betas = [stepsize_theorem1(p.pc, ch, n, safety=0.9)
+             for p, ch, n in zip(probs, chs, SWEEP_N_GRID)]
+    mcs = [p.to_mc() for p in probs]
+
+    def per_n():
+        return [run_mc(mc, [ch], "gbma", [b], STEPS, SEEDS).mean[0]
+                for mc, ch, b in zip(mcs, chs, betas)]
+
+    def one_compile():
+        return run_mc(mcs, chs, "gbma", betas, STEPS, SEEDS).mean
+
+    t_per_n, curves_per_n, compiles_per_n = _time_cold(per_n)
+    t_padded, curves_padded, compiles_padded = _time_cold(one_compile)
+    rel = float(max(
+        np.max(np.abs(cp - cs) / np.maximum(np.abs(cs), 1e-12))
+        for cp, cs in zip(curves_padded, curves_per_n)))
+    return {
+        "workload": {"problem": "msd_regression",
+                     "n_grid": list(SWEEP_N_GRID), "steps": STEPS,
+                     "seeds": SEEDS, "fading": "rayleigh",
+                     "timing": "cold, compiles included"},
+        "per_n_compile_s": round(t_per_n, 4),
+        "per_n_compiles": compiles_per_n,
+        "one_compile_s": round(t_padded, 4),
+        "one_compile_compiles": compiles_padded,
+        "speedup": round(t_per_n / t_padded, 2),
+        "max_rel_curve_diff": rel,
+    }
+
+
+def run(verbose: bool = True) -> list[str]:
+    single = bench_single_config()
+    sweep = bench_n_sweep()
+    record = {
+        **single,
+        "n_sweep": sweep,
         "jax_version": jax.__version__,
         "backend": jax.default_backend(),
     }
@@ -78,10 +138,17 @@ def run(verbose: bool = True) -> list[str]:
         json.dump(record, f, indent=2)
         f.write("\n")
     rows = [
-        f"bench_montecarlo,seed_loop_s,{t_seed:.4f}",
-        f"bench_montecarlo,engine_s,{t_engine:.4f}",
-        f"bench_montecarlo,speedup,{t_seed / t_engine:.2f}",
-        f"bench_montecarlo,max_rel_curve_diff,{rel:.2e}",
+        f"bench_montecarlo,seed_loop_s,{single['seed_loop_s']:.4f}",
+        f"bench_montecarlo,engine_s,{single['engine_s']:.4f}",
+        f"bench_montecarlo,speedup,{single['speedup']:.2f}",
+        f"bench_montecarlo,max_rel_curve_diff,{single['max_rel_curve_diff']:.2e}",
+        f"bench_montecarlo,n_sweep_per_n_s,{sweep['per_n_compile_s']:.4f}"
+        f",compiles={sweep['per_n_compiles']}",
+        f"bench_montecarlo,n_sweep_one_compile_s,{sweep['one_compile_s']:.4f}"
+        f",compiles={sweep['one_compile_compiles']}",
+        f"bench_montecarlo,n_sweep_speedup,{sweep['speedup']:.2f}",
+        f"bench_montecarlo,n_sweep_max_rel_curve_diff,"
+        f"{sweep['max_rel_curve_diff']:.2e}",
         f"bench_montecarlo,json,{OUT_PATH}",
     ]
     if verbose:

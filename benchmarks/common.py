@@ -83,10 +83,64 @@ def timed(fn, *args, reps: int = 3):
     return out, (time.perf_counter() - t0) / reps * 1e6
 
 
-def fmt_curve(name: str, ks: np.ndarray, values: np.ndarray,
-              every: int = 50) -> list[str]:
+def run_msd_figure(fading: str, prefix: str, n_grid, eps_grid,
+                   steps: int, seeds: int) -> list[str]:
+    """Shared body of paper Figs. 2 (equal gains) and 3 (Rayleigh):
+    (a) a node-count sweep at E_N = 1 — ONE padded/masked engine compile,
+    one (problem, channel, stepsize) row per N — and (b) an energy sweep
+    E_N = N^{eps-2} at the largest N, one vmapped call over energies.
+    Both overlay the Theorem-1 bound and emit mean ± ci95 curve rows."""
+    from repro.core.channel import ChannelConfig
+    from repro.core.montecarlo import run_mc
+    from repro.core.theory import stepsize_theorem1
+
     rows = []
-    for i in range(0, len(ks), every):
-        rows.append(f"{name},k={int(ks[i])},{values[i]:.6e}")
-    rows.append(f"{name},k={int(ks[-1])},{values[-1]:.6e}")
+    probs = [MSDProblem.make(n) for n in n_grid]
+    chs = [ChannelConfig(fading=fading, scale=1.0, noise_std=1.0,
+                         energy=1.0) for _ in n_grid]
+    betas = [stepsize_theorem1(p.pc, ch, n, safety=0.9)
+             for p, ch, n in zip(probs, chs, n_grid)]
+    res = run_mc([p.to_mc() for p in probs], chs, "gbma", betas, steps,
+                 seeds, pc=[p.pc for p in probs])
+    ks = np.arange(steps + 1)
+    for i, n in enumerate(n_grid):
+        emp, bound = res.mean[i], res.bounds[i]
+        rows.append(f"{prefix}a,N={n},final_emp,{emp[-1]:.6e}")
+        rows.append(f"{prefix}a,N={n},final_bound,{bound[-1]:.6e}")
+        rows.append(f"{prefix}a,N={n},bound_holds,"
+                    f"{int(np.all(emp <= bound * 1.05))}")
+        rows += fmt_curve(f"{prefix}a_curve,N={n}", ks, emp, every=100,
+                          ci95=res.ci95[i])
+    n = n_grid[-1]
+    prob = probs[-1]
+    chs = [ChannelConfig(fading=fading, scale=1.0, noise_std=1.0,
+                         energy=float(n) ** (eps - 2.0))
+           for eps in eps_grid]
+    betas = [stepsize_theorem1(prob.pc, ch, n, safety=0.9) for ch in chs]
+    res = run_mc(prob.to_mc(), chs, "gbma", betas, steps, seeds,
+                 pc=prob.pc)
+    for i, eps in enumerate(eps_grid):
+        rows.append(f"{prefix}b,eps={eps},final_emp,{res.mean[i][-1]:.6e}")
+        rows.append(f"{prefix}b,eps={eps},final_bound,"
+                    f"{res.bounds[i][-1]:.6e}")
+        rows += fmt_curve(f"{prefix}b_curve,eps={eps}", ks, res.mean[i],
+                          every=100, ci95=res.ci95[i])
+    return rows
+
+
+def fmt_curve(name: str, ks: np.ndarray, values: np.ndarray,
+              every: int = 50, ci95: np.ndarray | None = None) -> list[str]:
+    """CSV rows `name,k=K,value[,±ci95]`, subsampled every `every` points.
+
+    `ci95` (same length as `values`, e.g. `MCResult.ci95[row]`) appends the
+    seed-averaging 95% confidence half-width as a `±x` column."""
+    idx = list(range(0, len(ks), every))
+    if idx[-1] != len(ks) - 1:
+        idx.append(len(ks) - 1)
+    rows = []
+    for i in idx:
+        row = f"{name},k={int(ks[i])},{values[i]:.6e}"
+        if ci95 is not None:
+            row += f",±{ci95[i]:.2e}"
+        rows.append(row)
     return rows

@@ -1,45 +1,20 @@
 """Paper Fig. 2: federated MSD-like regression, EQUAL channel gains.
 (a) error vs iterations for N in logspace; (b) error for E_N = N^{eps-2}.
-Empirical curves are overlaid with the Theorem 1 bound. All Monte Carlo
-trajectories run through the batched engine (`repro.core.montecarlo`)."""
+Empirical curves are overlaid with the Theorem 1 bound. The node-count
+sweep of (a) runs in ONE padded/masked engine compile; shared body in
+`benchmarks.common.run_msd_figure` (Fig. 3 is the Rayleigh twin)."""
 from __future__ import annotations
 
-import numpy as np
+from benchmarks.common import run_msd_figure
 
-from benchmarks.common import MSDProblem
-from repro.core.channel import ChannelConfig
-from repro.core.montecarlo import run_mc
-from repro.core.theory import stepsize_theorem1
-
+N_GRID = (50, 160, 500)
+EPS_GRID = (0.5, 1.0, 1.5)
 STEPS = 300
 SEEDS = 4
 
 
 def run(verbose: bool = True) -> list[str]:
-    rows = []
-    # ---- (a) varying N at E_N = 1: one compile per N (shapes differ) ------
-    for n in (50, 160, 500):
-        prob = MSDProblem.make(n)
-        ch = ChannelConfig(fading="equal", scale=1.0, noise_std=1.0,
-                           energy=1.0)
-        beta = stepsize_theorem1(prob.pc, ch, n, safety=0.9)
-        res = run_mc(prob.to_mc(), [ch], "gbma", [beta], STEPS, SEEDS,
-                     pc=prob.pc)
-        emp, bound = res.mean[0], res.bounds[0]
-        rows.append(f"fig2a,N={n},final_emp,{emp[-1]:.6e}")
-        rows.append(f"fig2a,N={n},final_bound,{bound[-1]:.6e}")
-        rows.append(f"fig2a,N={n},bound_holds,{int(np.all(emp <= bound * 1.05))}")
-    # ---- (b) E_N = N^{eps-2} at N = 500: one vmapped call over energies ---
-    n = 500
-    prob = MSDProblem.make(n)
-    eps_grid = (0.5, 1.0, 1.5)
-    chs = [ChannelConfig(fading="equal", scale=1.0, noise_std=1.0,
-                         energy=float(n) ** (eps - 2.0)) for eps in eps_grid]
-    betas = [stepsize_theorem1(prob.pc, ch, n, safety=0.9) for ch in chs]
-    res = run_mc(prob.to_mc(), chs, "gbma", betas, STEPS, SEEDS, pc=prob.pc)
-    for i, eps in enumerate(eps_grid):
-        rows.append(f"fig2b,eps={eps},final_emp,{res.mean[i][-1]:.6e}")
-        rows.append(f"fig2b,eps={eps},final_bound,{res.bounds[i][-1]:.6e}")
+    rows = run_msd_figure("equal", "fig2", N_GRID, EPS_GRID, STEPS, SEEDS)
     if verbose:
         print("\n".join(rows))
     return rows

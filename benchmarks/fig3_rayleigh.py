@@ -1,42 +1,20 @@
 """Paper Fig. 3: same as Fig. 2 under i.i.d. Rayleigh fading — the gradient
-is now distorted (sigma_h^2 > 0) as well as noisy. Runs on the batched Monte
-Carlo engine."""
+is now distorted (sigma_h^2 > 0) as well as noisy. The node-count sweep of
+(a) runs in ONE padded/masked engine compile; shared body in
+`benchmarks.common.run_msd_figure` (Fig. 2 is the equal-gains twin)."""
 from __future__ import annotations
 
-import numpy as np
+from benchmarks.common import run_msd_figure
 
-from benchmarks.common import MSDProblem
-from repro.core.channel import ChannelConfig
-from repro.core.montecarlo import run_mc
-from repro.core.theory import stepsize_theorem1
-
+N_GRID = (50, 160, 500)
+EPS_GRID = (0.5, 1.0, 1.5)
 STEPS = 300
 SEEDS = 4
 
 
 def run(verbose: bool = True) -> list[str]:
-    rows = []
-    for n in (50, 160, 500):
-        prob = MSDProblem.make(n)
-        ch = ChannelConfig(fading="rayleigh", scale=1.0, noise_std=1.0,
-                           energy=1.0)
-        beta = stepsize_theorem1(prob.pc, ch, n, safety=0.9)
-        res = run_mc(prob.to_mc(), [ch], "gbma", [beta], STEPS, SEEDS,
-                     pc=prob.pc)
-        emp, bound = res.mean[0], res.bounds[0]
-        rows.append(f"fig3a,N={n},final_emp,{emp[-1]:.6e}")
-        rows.append(f"fig3a,N={n},final_bound,{bound[-1]:.6e}")
-        rows.append(f"fig3a,N={n},bound_holds,{int(np.all(emp <= bound * 1.05))}")
-    n = 500
-    prob = MSDProblem.make(n)
-    eps_grid = (0.5, 1.0, 1.5)
-    chs = [ChannelConfig(fading="rayleigh", scale=1.0, noise_std=1.0,
-                         energy=float(n) ** (eps - 2.0)) for eps in eps_grid]
-    betas = [stepsize_theorem1(prob.pc, ch, n, safety=0.9) for ch in chs]
-    res = run_mc(prob.to_mc(), chs, "gbma", betas, STEPS, SEEDS, pc=prob.pc)
-    for i, eps in enumerate(eps_grid):
-        rows.append(f"fig3b,eps={eps},final_emp,{res.mean[i][-1]:.6e}")
-        rows.append(f"fig3b,eps={eps},final_bound,{res.bounds[i][-1]:.6e}")
+    rows = run_msd_figure("rayleigh", "fig3", N_GRID, EPS_GRID, STEPS,
+                          SEEDS)
     if verbose:
         print("\n".join(rows))
     return rows

@@ -1,7 +1,8 @@
 """Paper Fig. 5: acoustic source localization with N=200 sensors, -10 dB,
 GBMA vs FDM-GD vs centralized GD. The local losses are non-convex and
 non-Lipschitz — Theorems 1/2 do not apply — yet GBMA converges from a good
-initialization (paper §VI-B). Runs on the Monte Carlo engine with the
+initialization (paper §VI-B). All three algorithms run as ONE engine call
+(per-row `algo` batching) — a single `_mc_core` compile — with the
 on-device squared-position-error metric."""
 from __future__ import annotations
 
@@ -36,12 +37,11 @@ def run(verbose: bool = True) -> list[str]:
     ch_fdm = ChannelConfig(fading="rayleigh", scale=1.0, noise_std=0.3,
                            energy=1.0)
 
-    e_g = run_mc(mc, [ch_gbma], "gbma", [beta / ch_gbma.mu_h], STEPS, SEEDS,
-                 theta0=theta0).mean[0]
-    e_f = run_mc(mc, [ch_fdm], "fdm", [beta / ch_gbma.mu_h], STEPS, SEEDS,
-                 theta0=theta0, invert_channel=False).mean[0]
-    e_c = run_mc(mc, [ch_gbma], "centralized", [beta], STEPS, SEEDS,
-                 theta0=theta0).mean[0]
+    res = run_mc(mc, [ch_gbma, ch_fdm, ch_gbma],
+                 ("gbma", "fdm", "centralized"),
+                 [beta / ch_gbma.mu_h, beta / ch_gbma.mu_h, beta],
+                 STEPS, SEEDS, theta0=theta0, invert_channel=False)
+    e_g, e_f, e_c = res.mean
     g0 = mc.grad_fn(jnp.asarray(theta0, jnp.float32))
     rows.append(f"fig5,final_sq_err,gbma,{e_g[-1]:.4e}")
     rows.append(f"fig5,final_sq_err,fdm,{e_f[-1]:.4e}")

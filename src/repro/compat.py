@@ -11,10 +11,16 @@ used by the codebase are resolved here, once, so call sites never touch
   * `tree_map` / `tree_leaves` / `tree_flatten` / `tree_unflatten` /
     `tree_structure` — the `jax.tree_util` spellings (stable across both
     lines; re-exported so future renames are one-line fixes here).
+  * `threefry2x32` — the raw Threefry-2x32 hash primitive (private
+    `jax._src.prng` location), used by the Monte Carlo engine to draw
+    node-count-dependent random vectors with static shapes (counts as
+    data). `None` when the internals moved; callers must fall back to
+    shaped draws. `threefry_is_default()` reports whether `jax.random.key`
+    produces threefry keys (the bit-level replication is only valid then).
 
 Policy (see docs/montecarlo.md): production modules and tests import these
-from `repro.compat`; only this file may probe `jax.experimental` or the JAX
-version string.
+from `repro.compat`; only this file may probe `jax.experimental`,
+`jax._src`, or the JAX version string.
 """
 from __future__ import annotations
 
@@ -29,6 +35,8 @@ __all__ = [
     "tree_flatten",
     "tree_unflatten",
     "tree_structure",
+    "threefry2x32",
+    "threefry_is_default",
 ]
 
 JAX_VERSION: tuple[int, ...] = tuple(
@@ -56,6 +64,27 @@ else:  # pre-0.4.35
             mesh_utils.create_device_mesh(axis_shapes, devices=list(devices)),
             axis_names,
         )
+
+
+# ---- threefry primitive --------------------------------------------------
+try:
+    from jax._src.prng import threefry2x32_p as _threefry2x32_p
+
+    def threefry2x32(k1, k2, x0, x1):
+        """Raw Threefry-2x32 hash: two uint32 key words, two equal-length
+        uint32 count vectors -> the two hashed output vectors."""
+        return _threefry2x32_p.bind(k1, k2, x0, x1)
+
+except Exception:  # pragma: no cover - future JAX moved the primitive
+    threefry2x32 = None
+
+
+def threefry_is_default() -> bool:
+    """Whether `jax.random.key` uses the threefry2x32 impl (the default
+    unless `jax_default_prng_impl` was overridden). Evaluated fresh each
+    call — it guards trace-time decisions and the config can change
+    between traces."""
+    return "fry" in str(jax.random.key(0).dtype)
 
 
 # ---- tree utils ----------------------------------------------------------

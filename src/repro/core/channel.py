@@ -99,8 +99,6 @@ class ChannelConfig:
 
 
 def _bessel_i0(x: float) -> float:
-    import math
-
     # series expansion, adequate for the moderate K factors used here
     s, term = 1.0, 1.0
     for k in range(1, 30):
@@ -110,8 +108,6 @@ def _bessel_i0(x: float) -> float:
 
 
 def _bessel_i1(x: float) -> float:
-    import math
-
     s, term = 0.0, x / 2.0
     for k in range(0, 30):
         s += term

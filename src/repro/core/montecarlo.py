@@ -5,7 +5,7 @@ curves over seeds. The seed implementation looped over seeds in Python and
 evaluated the objective per trajectory point on the host (numpy); this engine
 runs the whole sweep as one compiled call:
 
-    vmap(channel configs) ∘ vmap(seeds) ∘ scan(steps)
+    shard_map(seeds over 'mc' devices) ∘ vmap(rows) ∘ vmap(seeds) ∘ scan(steps)
 
 with the excess-risk curve computed **on-device inside the scan**. For the
 quadratic objective (27) the excess risk is the closed form
@@ -24,12 +24,31 @@ differently when computed in traced f32):
   * ``fdm``           — orthogonal-channel GD (``invert_channel`` as in
                         `FDMGD`).
   * ``power_control`` — CA-DSGD-style truncated channel inversion [11].
+  * ``momentum``      — GBMA aggregation + heavy-ball step
+                        θ_{k+1} = θ_k − β m_{k+1}, m_{k+1} = γ m_k + v_k
+                        (accelerated GD over MAC, Paul/Friedman/Cohen 2021).
+  * ``nesterov``      — GBMA aggregation + Nesterov lookahead: the gradient
+                        is evaluated at θ_k − βγ m_k.
 
-Channel configs are batched with `ChannelBatch.stack`: any mix of scale,
-noise_std, energy (e.g. the paper's E_N = N^{ε-2} sweep), phase error and
-Rician K vmaps in one compile as long as the fading *family* is shared (the
-family picks the sampling code path and is a static argument). A node-count
-sweep changes array shapes, hence one compile per N.
+A batch row is a (problem, channel params, algo, stepsize) tuple:
+
+  * `ChannelBatch.stack` batches any mix of scale, noise_std, energy
+    (e.g. the paper's E_N = N^{ε-2} sweep), phase error and Rician K;
+    the fading *family* stays static (it picks the sampling code path).
+  * `MCProblemBatch.stack` batches problems with *different node counts*:
+    per-node arrays are zero-padded to N_max with a validity mask, and the
+    random draws per row go through a `lax.switch` over the distinct true
+    node counts so each row consumes *exactly* the draws the unpadded
+    per-N run would (threefry streams are shape-dependent, so plain padded
+    sampling would change the trajectories).
+  * a per-row `algo` tuple batches algorithms the same way (one
+    `lax.switch` per slot); RNG per branch matches the per-algo reference.
+
+Hence fig2–fig6 N-sweeps and algorithm comparisons each run in ONE
+`_mc_core` compile (`trace_count()` exposes the compile counter). The seed
+axis is sharded over devices with `repro.compat.shard_map` on a `'mc'` mesh
+axis when the seed count divides the device count — transparent (bit-equal,
+no-op) on a single device.
 
 Adding a new channel scenario = building new `ChannelConfig`s and calling
 `run_mc`; no new per-figure script code (see docs/montecarlo.md).
@@ -38,18 +57,23 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.channel import ChannelConfig
 from repro.core.theory import ProblemConstants, theorem1_bound
 
 Array = jax.Array
 
-ALGOS = ("gbma", "centralized", "fdm", "power_control")
+ALGOS = ("gbma", "centralized", "fdm", "power_control", "momentum",
+         "nesterov")
+# algos that receive the OTA superposition of Eq. (8) (MAC slot is shared)
+_OTA_ALGOS = ("gbma", "momentum", "nesterov")
 
 
 # --------------------------------------------------------------------------
@@ -61,12 +85,20 @@ class MCProblem:
 
     grad_fn: theta (d,) -> (N, d) all nodes' local gradients.
     risk_fn: theta (d,) -> scalar excess risk / error, fully traceable.
+
+    `kind`/`data` are filled by the library constructors
+    (`quadratic_mc_problem`, `localization_mc_problem`) and let
+    `MCProblemBatch.stack` pad several problems with different node counts
+    into one batch. Hand-built problems may leave them unset; they then run
+    on the closure path (single node count per call).
     """
 
     grad_fn: Callable[[Array], Array]
     risk_fn: Callable[[Array], Array]
     dim: int
     n_nodes: int
+    kind: str = ""
+    data: Optional[dict] = None
 
 
 def quadratic_mc_problem(
@@ -91,7 +123,10 @@ def quadratic_mc_problem(
         diff = theta - ts
         return 0.5 * diff @ (Hj @ diff)
 
-    return MCProblem(grad_fn=grad_fn, risk_fn=risk_fn, dim=d, n_nodes=n)
+    data = {"X": Xj, "y": yj, "H": Hj, "theta_star": ts,
+            "lam": jnp.float32(lam)}
+    return MCProblem(grad_fn=grad_fn, risk_fn=risk_fn, dim=d, n_nodes=n,
+                     kind="quadratic", data=data)
 
 
 def localization_mc_problem(
@@ -110,8 +145,103 @@ def localization_mc_problem(
     def risk_fn(theta):
         return jnp.sum((theta - srcj) ** 2)
 
+    data = {"r": rj, "x": xj, "src": srcj, "signal_a": jnp.float32(signal_a)}
     return MCProblem(grad_fn=grad_fn, risk_fn=risk_fn, dim=2,
-                     n_nodes=r.shape[0])
+                     n_nodes=r.shape[0], kind="localization", data=data)
+
+
+# per-node leaves to pad when stacking, and the pad value. Localization
+# sensor positions pad far from the search region so the padded rows'
+# 1/d² terms stay finite (they are masked to zero afterwards, but inf·0
+# would poison the row).
+_PER_NODE_FIELDS = {
+    "quadratic": {"X": 0.0, "y": 0.0},
+    "localization": {"r": 1.0e6, "x": 0.0},
+}
+
+# module-level row-based grad/risk functions: stable identities keep the
+# jit cache of `_mc_core` stable across `run_mc` calls.
+def _quadratic_grad_row(row: dict, theta: Array) -> Array:
+    resid = row["X"] @ theta - row["y"]
+    g = resid[:, None] * row["X"] + row["lam"] * theta[None, :]
+    return g * row["mask"][:, None]
+
+
+def _quadratic_risk_row(row: dict, theta: Array) -> Array:
+    diff = theta - row["theta_star"]
+    return 0.5 * diff @ (row["H"] @ diff)
+
+
+def _localization_grad_row(row: dict, theta: Array) -> Array:
+    diff = theta[None, :] - row["r"]
+    d2 = jnp.sum(diff**2, axis=1)
+    resid = row["x"] - row["signal_a"] / d2
+    g = (4.0 * row["signal_a"] * resid / d2**2)[:, None] * diff
+    return g * row["mask"][:, None]
+
+
+def _localization_risk_row(row: dict, theta: Array) -> Array:
+    return jnp.sum((theta - row["src"]) ** 2)
+
+
+_ROW_FNS = {
+    "quadratic": (_quadratic_grad_row, _quadratic_risk_row),
+    "localization": (_localization_grad_row, _localization_risk_row),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MCProblemBatch:
+    """C problems stacked along a batch axis, node dims padded to N_max.
+
+    data leaves carry a leading (C,) axis; per-node leaves are zero-padded
+    to `n_max` and `data['mask']` (C, n_max) marks the valid rows. grad/risk
+    take (row, theta) and are the module-level `_ROW_FNS[kind]`.
+    """
+
+    kind: str
+    grad_fn: Callable[[dict, Array], Array]
+    risk_fn: Callable[[dict, Array], Array]
+    data: dict
+    n_nodes: tuple  # true node count per row (host ints)
+    dim: int
+    n_max: int
+
+    @classmethod
+    def stack(cls, problems: Sequence[MCProblem]) -> "MCProblemBatch":
+        kinds = {p.kind for p in problems}
+        if len(kinds) != 1 or "" in kinds or problems[0].data is None:
+            raise ValueError(
+                "MCProblemBatch.stack needs library-built problems of one "
+                f"kind (got kinds={sorted(kinds)}); hand-built MCProblems "
+                "run on the closure path, one node count per call")
+        kind = problems[0].kind
+        dims = {p.dim for p in problems}
+        if len(dims) != 1:
+            raise ValueError(f"problems must share dim, got {sorted(dims)}")
+        n_nodes = tuple(p.n_nodes for p in problems)
+        n_max = max(n_nodes)
+        pads = _PER_NODE_FIELDS[kind]
+        leaves = {}
+        for name in problems[0].data:
+            rows = []
+            for p in problems:
+                leaf = p.data[name]
+                if name in pads:
+                    pad = [(0, n_max - p.n_nodes)] + [(0, 0)] * (leaf.ndim - 1)
+                    leaf = jnp.pad(leaf, pad, constant_values=pads[name])
+                rows.append(leaf)
+            leaves[name] = jnp.stack(rows)
+        mask = np.zeros((len(problems), n_max), np.float32)
+        for i, n in enumerate(n_nodes):
+            mask[i, :n] = 1.0
+        leaves["mask"] = jnp.asarray(mask)
+        grad_fn, risk_fn = _ROW_FNS[kind]
+        return cls(kind=kind, grad_fn=grad_fn, risk_fn=risk_fn, data=leaves,
+                   n_nodes=n_nodes, dim=problems[0].dim, n_max=n_max)
+
+    def __len__(self) -> int:
+        return len(self.n_nodes)
 
 
 # --------------------------------------------------------------------------
@@ -183,48 +313,207 @@ def _sample_gains(key: Array, fading: str, p: dict, shape: tuple) -> Array:
     return (h * jnp.cos(phi)).astype(jnp.float32)
 
 
+def _sample_gains_padded(key: Array, fading: str, p: dict,
+                         n_sizes: tuple, n_max: int) -> Array:
+    """(n_max,) gains whose first n entries equal the unpadded (n,) draw.
+
+    Threefry streams depend on the draw shape, so sampling (n_max,) and
+    masking would NOT reproduce the per-N reference draws. Instead the
+    row's true node count (p['n_idx'] indexes the static `n_sizes`) selects
+    a branch that samples at the true static shape and zero-pads. With a
+    single full-size branch this is the plain sampler (no switch traced).
+    """
+    if len(n_sizes) == 1 and n_sizes[0] == n_max:
+        return _sample_gains(key, fading, p, (n_max,))
+    branches = [
+        (lambda k, n=n: jnp.pad(_sample_gains(k, fading, p, (n,)),
+                                (0, n_max - n)))
+        for n in n_sizes
+    ]
+    return jax.lax.switch(p["n_idx"], branches, key)
+
+
+def _normal_padded(key: Array, n_idx: Array, n_sizes: tuple, n_max: int,
+                   d: int, dtype) -> Array:
+    """(n_max, d) normal draw matching the unpadded (n, d) draw per row
+    (same shape-dependent-stream issue as `_sample_gains_padded`)."""
+    if len(n_sizes) == 1 and n_sizes[0] == n_max:
+        return jax.random.normal(key, (n_max, d), dtype=dtype)
+    branches = [
+        (lambda k, n=n: jnp.pad(jax.random.normal(k, (n, d), dtype=dtype),
+                                ((0, n_max - n), (0, 0))))
+        for n in n_sizes
+    ]
+    return jax.lax.switch(n_idx, branches, key)
+
+
+# --------------------------------------------------------------------------
+# dynamic-length draws with static shapes (node-count sweeps, fast path)
+#
+# Threefry draws depend on the requested shape: `uniform(key, (n,))` hashes
+# counter pairs (j, j + ceil(n/2)), so every distinct N needs its own draw
+# program, and the `lax.switch` over those programs is what makes the padded
+# sweep expensive to compile. But the counters are just uint32 DATA — by
+# calling the raw threefry2x32 primitive on counter vectors computed from a
+# *traced* n, one static-shape (n_max) program reproduces the (n,)-shaped
+# draw bit-for-bit in lanes [0, n). The bits->float transforms below are
+# copied from `jax._src.random._uniform` / `_normal_real` so the values
+# match exactly. Only valid for the default threefry PRNG — callers must
+# check `compat.threefry_is_default()` and fall back to the switch sampler.
+# --------------------------------------------------------------------------
+def _dynamic_bits(kd: Array, size: Array, out_max: int) -> Array:
+    """uint32 bits equal to `random_bits(key, 32, (size,))` in lanes
+    [0, size); `size` is traced (<= out_max), `out_max` static."""
+    m_max = (out_max + 1) // 2
+    m = (size + 1) // 2  # half-width of the counter vector (incl. odd pad)
+    i = jnp.arange(m_max, dtype=jnp.int32)
+    x0 = i.astype(jnp.uint32)
+    # second counter half: j + m, with the odd-size pad slot hashed on 0
+    x1 = jnp.where(i + m < size, i + m, 0).astype(jnp.uint32)
+    # merge batch dims BEFORE the bind: the primitive's batching rule
+    # mis-broadcasts when keys are vmapped over different axes (seeds,
+    # steps) than the counts (configs). `| zero` stamps every operand with
+    # the union of batch dims through ordinary elementwise batching (x1
+    # carries the config dims via `m`; kd carries the seed/step dims).
+    zero = (kd[0] & jnp.uint32(0)) | (x1 & jnp.uint32(0))
+    o0, o1 = compat.threefry2x32(kd[0] | zero, kd[1] | zero,
+                                 x0 | zero, x1 | zero)
+    j = jnp.arange(out_max, dtype=jnp.int32)
+    bits0 = o0[jnp.minimum(j, m_max - 1)]
+    bits1 = o1[jnp.clip(j - m, 0, m_max - 1)]
+    return jnp.where(j < m, bits0, bits1)
+
+
+_F32_ONE_BITS = np.float32(1.0).view(np.uint32)
+_NORMAL_LO = np.nextafter(np.float32(-1.0), np.float32(0.0))
+
+
+def _bits_to_u01(bits: Array) -> Array:
+    """uint32 bits -> uniform [0, 1) floats, as `_uniform` builds them."""
+    fb = (bits >> jnp.uint32(9)) | jnp.uint32(_F32_ONE_BITS)
+    return jax.lax.bitcast_convert_type(fb, jnp.float32) - jnp.float32(1.0)
+
+
+def _u01_to_uniform(u01: Array, minval, maxval) -> Array:
+    return jnp.maximum(minval, u01 * (maxval - minval) + minval)
+
+
+def _u01_to_normal(u01: Array) -> Array:
+    lo = jnp.float32(_NORMAL_LO)
+    u = jnp.maximum(lo, u01 * (jnp.float32(1.0) - lo) + lo)
+    return jnp.float32(np.sqrt(2.0)) * jax.lax.erf_inv(u)
+
+
+def _normal_dynamic_n(key: Array, n: Array, n_max: int, d: int) -> Array:
+    """Zero-padded (n_max, d) twin of `normal(key, (n, d))` for traced n
+    (the fdm per-node noise on node-count sweeps) — same counts-as-data
+    trick as `_sample_gains_dynamic_n`, so the scan body stays free of
+    per-N `lax.switch` branches."""
+    kd = jax.random.key_data(key)
+    z = _u01_to_normal(_bits_to_u01(_dynamic_bits(kd, n * d, n_max * d)))
+    z = jnp.where(jnp.arange(n_max * d) < n * d, z, jnp.float32(0.0))
+    return z.reshape(n_max, d)
+
+
+def _sample_gains_dynamic_n(key: Array, fading: str, p: dict,
+                            n_max: int) -> Array:
+    """Bit-exact twin of `_sample_gains(key, fading, p, (n,))` zero-padded
+    to (n_max,), with n = p['n_nodes'] traced — one static-shape program
+    covers every node count in the sweep."""
+    n = p["n_nodes"].astype(jnp.int32)
+    k_mag, k_ph = jax.random.split(key)
+    kd_mag = jax.random.key_data(k_mag)
+    kd_ph = jax.random.key_data(k_ph)
+    scale = p["scale"]
+    if fading == "equal":
+        h = jnp.broadcast_to(scale.astype(jnp.float32), (n_max,))
+    elif fading == "rayleigh":
+        u01 = _bits_to_u01(_dynamic_bits(kd_mag, n, n_max))
+        u = _u01_to_uniform(u01, jnp.float32(1e-12), jnp.float32(1.0))
+        h = scale * jnp.sqrt(-2.0 * jnp.log(u))
+    elif fading == "rician":
+        nu = jnp.sqrt(p["rician_k"] * 2.0) * scale
+        z = _u01_to_normal(_bits_to_u01(
+            _dynamic_bits(kd_mag, 2 * n, 2 * n_max)))
+        xy = z.reshape(n_max, 2) * scale
+        h = jnp.sqrt((xy[..., 0] + nu) ** 2 + xy[..., 1] ** 2)
+    elif fading == "lognormal":
+        z = _u01_to_normal(_bits_to_u01(_dynamic_bits(kd_mag, n, n_max)))
+        h = jnp.exp(scale * z)
+    else:
+        raise ValueError(f"unknown fading model: {fading}")
+    a = p["phase_error_max"]
+    phi = _u01_to_uniform(_bits_to_u01(_dynamic_bits(kd_ph, n, n_max)),
+                          -a, a)
+    h = (h * jnp.cos(phi)).astype(jnp.float32)
+    return jnp.where(jnp.arange(n_max) < n, h, jnp.float32(0.0))
+
+
 # --------------------------------------------------------------------------
 # per-slot aggregation (mirrors the reference simulators' RNG usage)
 # --------------------------------------------------------------------------
-def _ota_slot(g: Array, key: Array, fading: str, p: dict) -> Array:
-    n = g.shape[0]
+def _ota_slot(g: Array, key: Array, fading: str, p: dict,
+              n_sizes: tuple, n_max: int, h_slot=None) -> Array:
     k_h, k_w = jax.random.split(key)
-    h = _sample_gains(k_h, fading, p, (n,))
-    v = jnp.einsum("n,nd->d", h, g) / n
-    std = p["noise_std"] / (n * jnp.sqrt(p["energy"]))
+    h = _sample_gains_padded(k_h, fading, p, n_sizes, n_max) \
+        if h_slot is None else h_slot
+    v = jnp.einsum("n,nd->d", h, g) / p["n_nodes"]
+    std = p["noise_std"] / (p["n_nodes"] * jnp.sqrt(p["energy"]))
     return v + std * jax.random.normal(k_w, v.shape, dtype=v.dtype)
 
 
 def _slot_update(g: Array, key: Array, *, algo: str, fading: str, p: dict,
-                 n_antennas: int, invert_channel: bool, h_min: float) -> Array:
-    """One MAC slot: local gradients (N, d) -> received update direction (d,)."""
-    n = g.shape[0]
+                 mask: Array, n_sizes: tuple, n_antennas: int,
+                 invert_channel: bool, h_min: float, h_slot=None) -> Array:
+    """One MAC slot: local gradients (n_max, d) -> received update (d,).
+
+    Padded node rows carry exactly-zero gradients (the problem grad fns
+    mask them) and zero-padded channel gains, so every per-node reduction
+    normalizes by the row's true node count p['n_nodes'], and shaped noise
+    draws (fdm) are masked before the node average.
+
+    `h_slot` is this slot's pre-sampled gain vector when the caller hoisted
+    the gain sampling out of the scan (node-count sweeps: the per-N
+    `lax.switch` branches would otherwise be traced into the scan body and
+    dominate XLA compile time). It is drawn from exactly the k_h this
+    function would have split off, so the stream is unchanged.
+    """
+    n_max, n_true = g.shape[0], p["n_nodes"]
     if algo == "centralized":
-        return jnp.mean(g, axis=0)
-    if algo == "gbma":
+        return jnp.sum(g, axis=0) / n_true
+    if algo in _OTA_ALGOS:
         # n_antennas=None: single-antenna edge, RNG-identical to
         # `GBMASimulator`. An integer (1 included) takes the MRC path of
         # `ota_aggregate_multiantenna`, whose extra key split changes the
         # stream even for M=1 — mirrored so fixed seeds reproduce exactly.
         if n_antennas is None:
-            return _ota_slot(g, key, fading, p)
+            return _ota_slot(g, key, fading, p, n_sizes, n_max, h_slot)
         keys = jax.random.split(key, n_antennas)
-        v = jax.vmap(lambda k: _ota_slot(g, k, fading, p))(keys)
+        v = jax.vmap(
+            lambda k: _ota_slot(g, k, fading, p, n_sizes, n_max))(keys)
         return jnp.mean(v, axis=0)
     if algo == "fdm":
         k_h, k_w = jax.random.split(key)
-        noise = p["noise_std"] / jnp.sqrt(p["energy"]) * jax.random.normal(
-            k_w, g.shape, dtype=g.dtype)
+        if len(n_sizes) > 1 and compat.threefry2x32 is not None \
+                and compat.threefry_is_default():
+            raw = _normal_dynamic_n(
+                k_w, p["n_nodes"].astype(jnp.int32), n_max, g.shape[1])
+        else:
+            raw = _normal_padded(
+                k_w, p["n_idx"], n_sizes, n_max, g.shape[1], g.dtype)
+        noise = p["noise_std"] / jnp.sqrt(p["energy"]) * raw
         if invert_channel:
             rx = g + noise
         else:
-            h = _sample_gains(k_h, fading, p, (n,))
+            h = _sample_gains_padded(k_h, fading, p, n_sizes, n_max) \
+                if h_slot is None else h_slot
             rx = h[:, None] * g + noise
-        return jnp.mean(rx, axis=0)
+        return jnp.sum(rx * mask[:, None], axis=0) / n_true
     if algo == "power_control":
         k_h, k_w = jax.random.split(key)
-        h = _sample_gains(k_h, fading, p, (n,))
-        active = (h >= h_min).astype(g.dtype)
+        h = _sample_gains_padded(k_h, fading, p, n_sizes, n_max) \
+            if h_slot is None else h_slot
+        active = (h >= h_min).astype(g.dtype) * mask
         n_active = jnp.maximum(jnp.sum(active), 1.0)
         sup = jnp.einsum("n,nd->d", active, g)
         w = p["noise_std"] / (n_active * jnp.sqrt(p["energy"])) * (
@@ -240,12 +529,13 @@ def _slot_update(g: Array, key: Array, *, algo: str, fading: str, p: dict,
 class MCResult:
     """Host-side result of one engine call.
 
-    risks:      (C, S, steps+1) per-config per-seed excess-risk curves.
+    risks:      (C, S, steps+1) per-row per-seed excess-risk curves.
     mean:       (C, steps+1) seed average (the Eq. 14 expectation estimate).
     ci95:       (C, steps+1) 1.96 * standard error over seeds (0 if S == 1).
     cum_energy: (C, S, steps) cumulative transmitted energy Σ E_N ||g_k||².
-    bounds:     (C, steps+1) Theorem-1 bound per config (None unless the
-                problem constants were supplied and algo == 'gbma').
+    bounds:     (C, steps+1) Theorem-1 bound per row (None unless problem
+                constants were supplied AND every row is single-antenna
+                'gbma' — the setting Theorem 1 covers).
     """
 
     risks: np.ndarray
@@ -255,48 +545,150 @@ class MCResult:
     bounds: Optional[np.ndarray]
 
 
+_TRACE_COUNT = 0
+
+
+def trace_count() -> int:
+    """Number of times `_mc_core` has been traced (== XLA compiles of the
+    engine, since the python body runs once per jit cache miss)."""
+    return _TRACE_COUNT
+
+
+def clear_cache() -> bool:
+    """Drop the engine's compiled-program cache (compile-count tests, cold
+    benchmark timings). Returns False on JAX versions without jit
+    clear_cache support — callers should then skip compile-count asserts."""
+    if hasattr(_mc_core, "clear_cache"):
+        _mc_core.clear_cache()
+        return True
+    return False
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("grad_fn", "risk_fn", "algo", "fading", "steps",
-                     "n_antennas", "invert_channel", "h_min"),
+    static_argnames=("grad_fn", "risk_fn", "row_based", "algo_set", "fading",
+                     "steps", "n_sizes", "n_antennas", "invert_channel",
+                     "h_min", "n_shards"),
 )
-def _mc_core(params, betas, theta0, seed_keys, *, grad_fn, risk_fn, algo,
-             fading, steps, n_antennas, invert_channel, h_min):
-    """(C,)-batched channel params × (S,) seed keys × scan(steps)."""
+def _mc_core(params, betas, theta0, seeds, data, *, grad_fn, risk_fn,
+             row_based, algo_set, fading, steps, n_sizes, n_antennas,
+             invert_channel, h_min, n_shards):
+    """(C,)-batched rows × (S,) seeds × scan(steps), seeds sharded on 'mc'.
 
-    def trajectory(p, beta, key):
-        def body(carry, k):
-            theta, cum_e = carry
-            g = grad_fn(theta)
-            risk = risk_fn(theta)
-            cum_e = cum_e + p["energy"] * jnp.sum(g.astype(jnp.float32) ** 2)
-            v = _slot_update(g, k, algo=algo, fading=fading, p=p,
-                             n_antennas=n_antennas,
-                             invert_channel=invert_channel, h_min=h_min)
-            return (theta - beta * v, cum_e), (risk, cum_e)
+    `algo_set` is the deduped algorithm tuple; the row-to-algorithm
+    assignment is traced data (params['algo_idx']), so re-assigning rows
+    among the same algorithms reuses the compiled program. Rows sharing one
+    algorithm skip the dispatch switch. The momentum carry unifies all step
+    rules: m_{k+1} = γ m_k + v_k and θ_{k+1} = θ_k − β m_{k+1} reduce
+    bit-exactly to vanilla GD at γ = 0 (0·m = 0, 0 + v = v), and the
+    Nesterov lookahead θ − nest·βγ·m is exactly θ when the row's nest flag
+    is 0.
+    """
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1  # python side effect: runs once per trace/compile
+
+    # gains-consuming slot types, single-antenna: eligible for hoisting the
+    # per-N sampling switch out of the scan (see `hoist` below)
+    hoistable = n_antennas is None and any(
+        a in _OTA_ALGOS or a == "power_control"
+        or (a == "fdm" and not invert_channel) for a in algo_set)
+
+    def trajectory(p, beta, row, seed, t0):
+        key = jax.random.key(seed)
+
+        def slot(g, k, h_slot):
+            if len(algo_set) == 1:
+                return _slot_update(
+                    g, k, algo=algo_set[0], fading=fading, p=p,
+                    mask=row["mask"], n_sizes=n_sizes, n_antennas=n_antennas,
+                    invert_channel=invert_channel, h_min=h_min,
+                    h_slot=h_slot)
+            branches = [
+                (lambda kk, a=a: _slot_update(
+                    g, kk, algo=a, fading=fading, p=p, mask=row["mask"],
+                    n_sizes=n_sizes, n_antennas=n_antennas,
+                    invert_channel=invert_channel, h_min=h_min,
+                    h_slot=h_slot))
+                for a in algo_set
+            ]
+            return jax.lax.switch(p["algo_idx"], branches, k)
+
+        def body(carry, x):
+            k, h_slot = x
+            theta, m, cum_e = carry
+            theta_eval = theta - p["nest"] * beta * p["gamma"] * m
+            g = (grad_fn(row, theta_eval) if row_based
+                 else grad_fn(theta_eval))
+            risk = risk_fn(row, theta) if row_based else risk_fn(theta)
+            cum_e = cum_e + p["energy"] * jnp.sum(
+                g.astype(jnp.float32) ** 2)
+            v = slot(g, k, h_slot)
+            m = p["gamma"] * m + v
+            return (theta - beta * m, m, cum_e), (risk, cum_e)
 
         step_keys = jax.random.split(key, steps)
-        (theta_fin, _), (risks, cum_e) = jax.lax.scan(
-            body, (theta0, jnp.float32(0.0)), step_keys)
-        risks = jnp.concatenate([risks, risk_fn(theta_fin)[None]])
+        h_all = None
+        if len(n_sizes) > 1 and hoistable:
+            # Node-count sweep: sample every slot's gains up front, once,
+            # instead of tracing the per-N `lax.switch` branches into the
+            # scan body (which multiplies the XLA program and its compile
+            # time — the very cost the padded N axis exists to remove).
+            # Stream-identical: each step key is split exactly as
+            # `_slot_update` would split it, and the k_h half feeds the
+            # same padded sampler. The dynamic-count sampler (one
+            # static-shape threefry program for all N) is preferred; the
+            # per-N `lax.switch` sampler is the fallback when the raw
+            # primitive is unavailable or a non-threefry PRNG is active.
+            n_max_ = row["mask"].shape[0]
+            k_hs = jax.vmap(lambda k: jax.random.split(k)[0])(step_keys)
+            if compat.threefry2x32 is not None \
+                    and compat.threefry_is_default():
+                sample = lambda kh: _sample_gains_dynamic_n(
+                    kh, fading, p, n_max_)
+            else:
+                sample = lambda kh: _sample_gains_padded(
+                    kh, fading, p, n_sizes, n_max_)
+            h_all = jax.vmap(sample)(k_hs)
+        (theta_fin, _, _), (risks, cum_e) = jax.lax.scan(
+            body, (t0, jnp.zeros_like(t0), jnp.float32(0.0)),
+            (step_keys, h_all))
+        fin = risk_fn(row, theta_fin) if row_based else risk_fn(theta_fin)
+        risks = jnp.concatenate([risks, fin[None]])
         return risks, cum_e  # (steps+1,), (steps,)
 
-    per_config = jax.vmap(
-        lambda p, b: jax.vmap(lambda k: trajectory(p, b, k))(seed_keys))
-    risks, cum_e = per_config(params, betas)  # (C,S,steps+1), (C,S,steps)
-    mean = jnp.mean(risks, axis=1)
-    n_seeds = risks.shape[1]
-    if n_seeds > 1:
-        ci95 = 1.96 * jnp.std(risks, axis=1, ddof=1) / jnp.sqrt(n_seeds)
-    else:
-        ci95 = jnp.zeros_like(mean)
-    return risks, mean, ci95, cum_e
+    def seed_block(seeds_blk, params, betas, theta0, data):
+        per_config = jax.vmap(
+            lambda p, b, row: jax.vmap(
+                lambda s: trajectory(p, b, row, s, theta0))(seeds_blk))
+        return per_config(params, betas, data)
+
+    if n_shards > 0:
+        mesh = compat.make_mesh((n_shards,), ("mc",))
+        seed_block = compat.shard_map(
+            seed_block, mesh=mesh,
+            in_specs=(P("mc"), P(), P(), P(), P()),
+            out_specs=(P(None, "mc"), P(None, "mc")))
+    return seed_block(seeds, params, betas, theta0, data)
+
+
+def _resolve_n_shards(n_seeds: int, shard_seeds: Optional[bool]) -> int:
+    """0 = plain path; k > 0 = shard_map over a ('mc',) mesh of k devices."""
+    if shard_seeds is False:
+        return 0
+    ndev = jax.device_count()
+    if shard_seeds is None:
+        return ndev if (ndev > 1 and n_seeds % ndev == 0) else 0
+    if n_seeds % ndev != 0:
+        raise ValueError(
+            f"shard_seeds=True needs seeds ({n_seeds}) divisible by the "
+            f"device count ({ndev})")
+    return ndev
 
 
 def run_mc(
-    problem: MCProblem,
+    problem: Union[MCProblem, MCProblemBatch, Sequence[MCProblem]],
     channels: Sequence[ChannelConfig] | ChannelBatch,
-    algo: str,
+    algo: str | Sequence[str],
     betas: Sequence[float] | np.ndarray,
     steps: int,
     seeds: int,
@@ -306,52 +698,134 @@ def run_mc(
     n_antennas: Optional[int] = None,
     invert_channel: bool = False,
     h_min: float = 0.3,
-    pc: Optional[ProblemConstants] = None,
+    pc: Optional[Union[ProblemConstants,
+                       Sequence[ProblemConstants]]] = None,
+    momentum: float = 0.9,
+    shard_seeds: Optional[bool] = None,
 ) -> MCResult:
-    """Run `seeds` Monte Carlo trajectories for each channel config.
+    """Run `seeds` Monte Carlo trajectories for each batch row.
+
+    A row is a (problem, channel, algo, stepsize) tuple; `problem` and
+    `algo` broadcast when a single one is given. Passing a sequence of
+    problems (node counts may differ — they are padded to N_max) or a
+    sequence of algos runs the whole sweep in ONE engine compile.
 
     Seed s uses `jax.random.key(seed0 + s)` — the same stream the sequential
     reference path (`benchmarks.common.average_runs`) consumes, so results
-    are directly comparable. With `pc` supplied and algo='gbma' the Theorem-1
-    bound for each config rides along in the result.
+    are directly comparable. With `pc` supplied (one `ProblemConstants` or
+    one per row) the Theorem-1 bound rides along — only when every row is
+    single-antenna 'gbma', the setting Theorem 1 covers; mixed-algo calls
+    get `bounds=None`.
+    `shard_seeds` shards the seed axis over devices on a 'mc' mesh axis
+    (None: auto when divisible; no-op on one device).
     """
-    batch = channels if isinstance(channels, ChannelBatch) \
+    ch_batch = channels if isinstance(channels, ChannelBatch) \
         else ChannelBatch.stack(list(channels))
+    n_rows = len(ch_batch)
     betas = jnp.asarray(betas, jnp.float32)
-    if betas.shape != (len(batch),):
-        raise ValueError(f"need one stepsize per config: "
-                         f"{betas.shape} vs C={len(batch)}")
-    t0 = jnp.zeros((problem.dim,), jnp.float32) if theta0 is None \
+    if betas.shape != (n_rows,):
+        raise ValueError(f"need one stepsize per row: "
+                         f"{betas.shape} vs C={n_rows}")
+    algos = (algo,) * n_rows if isinstance(algo, str) else tuple(algo)
+    if len(algos) != n_rows:
+        raise ValueError(f"need one algo per row: {len(algos)} vs C={n_rows}")
+    for a in algos:
+        if a not in ALGOS:
+            raise ValueError(f"unknown algo {a!r}; expected one of {ALGOS}")
+
+    # ---- normalize the problem axis ------------------------------------
+    if isinstance(problem, MCProblemBatch):
+        batch_prob = problem
+    elif isinstance(problem, MCProblem):
+        batch_prob = None  # closure path: one problem shared by all rows
+    else:
+        probs = list(problem)
+        if len(probs) == 1:
+            batch_prob = None
+            problem = probs[0]
+        else:
+            if len(probs) != n_rows:
+                raise ValueError(
+                    f"need one problem per row: {len(probs)} vs C={n_rows}")
+            batch_prob = MCProblemBatch.stack(probs)
+
+    if batch_prob is not None:
+        row_based = True
+        grad_fn, risk_fn = batch_prob.grad_fn, batch_prob.risk_fn
+        data = dict(batch_prob.data)
+        n_nodes = batch_prob.n_nodes
+        dim, n_max = batch_prob.dim, batch_prob.n_max
+    else:
+        row_based = False
+        grad_fn, risk_fn = problem.grad_fn, problem.risk_fn
+        n_nodes = (problem.n_nodes,) * n_rows
+        dim, n_max = problem.dim, problem.n_nodes
+        data = {"mask": jnp.ones((n_rows, n_max), jnp.float32)}
+
+    n_sizes = tuple(sorted(set(n_nodes)))
+    algo_set = tuple(dict.fromkeys(algos))
+    params = dict(ch_batch.params)
+    params["n_nodes"] = jnp.asarray(n_nodes, jnp.float32)
+    params["n_idx"] = jnp.asarray(
+        [n_sizes.index(n) for n in n_nodes], jnp.int32)
+    params["algo_idx"] = jnp.asarray(
+        [algo_set.index(a) for a in algos], jnp.int32)
+    params["gamma"] = jnp.asarray(
+        [momentum if a in ("momentum", "nesterov") else 0.0 for a in algos],
+        jnp.float32)
+    params["nest"] = jnp.asarray(
+        [1.0 if a == "nesterov" else 0.0 for a in algos], jnp.float32)
+
+    t0 = jnp.zeros((dim,), jnp.float32) if theta0 is None \
         else jnp.asarray(theta0, jnp.float32)
-    seed_keys = jnp.stack([jax.random.key(seed0 + s) for s in range(seeds)])
-    risks, mean, ci95, cum_e = _mc_core(
-        batch.params, betas, t0, seed_keys,
-        grad_fn=problem.grad_fn, risk_fn=problem.risk_fn, algo=algo,
-        fading=batch.fading, steps=steps, n_antennas=n_antennas,
-        invert_channel=invert_channel, h_min=h_min)
+    seed_ints = jnp.arange(seed0, seed0 + seeds, dtype=jnp.int32)
+    n_shards = _resolve_n_shards(seeds, shard_seeds)
+    risks, cum_e = _mc_core(
+        params, betas, t0, seed_ints, data,
+        grad_fn=grad_fn, risk_fn=risk_fn, row_based=row_based,
+        algo_set=algo_set, fading=ch_batch.fading, steps=steps,
+        n_sizes=n_sizes, n_antennas=n_antennas,
+        invert_channel=invert_channel, h_min=h_min, n_shards=n_shards)
+    risks = np.asarray(risks)
+    mean = np.mean(risks, axis=1)
+    if seeds > 1:
+        ci95 = 1.96 * np.std(risks, axis=1, ddof=1) / np.sqrt(seeds)
+    else:
+        ci95 = np.zeros_like(mean)
     bounds = None
-    if pc is not None and algo == "gbma" and n_antennas is None:
-        ks = np.arange(1, steps + 2)
-        bounds = np.stack([
-            theorem1_bound(ks, float(b), pc, cfg, problem.n_nodes)
-            for b, cfg in zip(np.asarray(betas), batch.configs)])
+    if pc is not None:
+        pcs = [pc] * n_rows if isinstance(pc, ProblemConstants) else list(pc)
+        if len(pcs) != n_rows:
+            raise ValueError(f"need one ProblemConstants per row: "
+                             f"{len(pcs)} vs C={n_rows}")
+        if all(a == "gbma" for a in algos) and n_antennas is None:
+            ks = np.arange(1, steps + 2)
+            bounds = np.stack([
+                theorem1_bound(ks, float(b), row_pc, cfg, n)
+                for b, cfg, row_pc, n in zip(
+                    np.asarray(betas), ch_batch.configs, pcs, n_nodes)])
     return MCResult(
-        risks=np.asarray(risks), mean=np.asarray(mean),
-        ci95=np.asarray(ci95), cum_energy=np.asarray(cum_e), bounds=bounds)
+        risks=risks, mean=mean.astype(np.float32),
+        ci95=ci95.astype(np.float32), cum_energy=np.asarray(cum_e),
+        bounds=bounds)
 
 
 def energy_to_target(res: MCResult, target: float) -> np.ndarray:
-    """Per-config mean (over seeds) total transmitted energy until the risk
-    curve first hits `target` (paper Fig. 6). Seeds that never hit spend the
-    full-horizon energy."""
+    """Per-row mean (over seeds) total transmitted energy until the risk
+    curve first hits `target` (paper Fig. 6).
+
+    risks[k] is the risk of θ_k, reached after k transmission slots, and
+    cum_energy[j] is the energy of slots 1..j+1 — so a first hit at index
+    k costs cum_energy[k-1], and a target already met at initialization
+    (k == 0) costs nothing. Seeds that never hit spend the full-horizon
+    energy.
+    """
     c, s, kp1 = res.risks.shape
-    out = np.zeros((c,))
-    for ci in range(c):
-        per_seed = []
-        for si in range(s):
-            risks = res.risks[ci, si]
-            hit = int(np.argmax(risks <= target)) if np.any(risks <= target) \
-                else kp1 - 1
-            per_seed.append(res.cum_energy[ci, si, min(hit, kp1 - 2)])
-        out[ci] = float(np.mean(per_seed))
-    return out
+    hit_mask = res.risks <= target
+    hit = np.argmax(hit_mask, axis=2)  # first True, 0 when none
+    hit = np.where(hit_mask.any(axis=2), hit, kp1 - 1)
+    # prepend the zero-cost column so index k charges cum_energy[k-1]
+    ce = np.concatenate(
+        [np.zeros((c, s, 1), res.cum_energy.dtype), res.cum_energy], axis=2)
+    per_seed = np.take_along_axis(ce, hit[:, :, None], axis=2)[..., 0]
+    return per_seed.mean(axis=1)

@@ -1,0 +1,53 @@
+"""Tier-1 smoke coverage of the figure scripts: every `benchmarks/fig*.py`
+`run()` (plus the ablation sweeps) executes end to end at tiny, monkeypatched
+module constants, so figure-script regressions surface without `--runslow` —
+including the per-figure one-compile guarantee (each script's N-sweep /
+algorithm comparison must stay a single `_mc_core` compile).
+
+The scripts expose their operating points as module constants (STEPS, SEEDS,
+N / N_GRID, EPS_GRID) precisely so this test can shrink them.
+"""
+import importlib
+
+import pytest
+
+from repro.core import montecarlo as mc_mod
+
+TINY = {
+    "STEPS": 6,
+    "SEEDS": 2,
+    "N": 16,
+    "N_GRID": (8, 13),   # odd size: exercises the padded sweep's odd branch
+    "EPS_GRID": (1.0, 1.5),
+}
+
+# engine compiles each run() is allowed: the N-sweep (a) and, for fig2/fig3,
+# the energy sweep (b) — never one compile per N / per algorithm
+FIG_MODULES = [
+    ("fig2_equal_gains", 2),
+    ("fig3_rayleigh", 2),
+    ("fig4_fdm_comparison", 1),
+    ("fig5_localization", 1),
+    ("fig6_energy_scaling", 1),
+    # ablations sweeps ~a dozen engine compiles even at tiny scale — worth
+    # smoke coverage, but only under --runslow
+    pytest.param("ablations", None, marks=pytest.mark.slow),
+]
+
+
+@pytest.mark.parametrize("name,max_compiles", FIG_MODULES)
+def test_figure_script_runs_at_tiny_scale(name, max_compiles, monkeypatch):
+    mod = importlib.import_module(f"benchmarks.{name}")
+    for attr, val in TINY.items():
+        if hasattr(mod, attr):
+            monkeypatch.setattr(mod, attr, val)
+    cleared = mc_mod.clear_cache()
+    c0 = mc_mod.trace_count()
+    rows = mod.run(verbose=False)
+    assert rows, f"{name}.run() returned no rows"
+    assert all(isinstance(r, str) and r for r in rows)
+    if max_compiles is not None and cleared:
+        compiles = mc_mod.trace_count() - c0
+        assert compiles <= max_compiles, (
+            f"{name}.run() compiled _mc_core {compiles}x "
+            f"(allowed {max_compiles}) — per-N/per-algo compile regression")

@@ -5,19 +5,29 @@
     mirrors their PRNG split order;
   * on-device closed-form excess risk == the numpy objective-difference
     oracle (`benchmarks.common.MSDProblem.excess_risk`);
-  * a batched (vmapped) config sweep == the same configs run one at a time.
+  * a batched (vmapped) config sweep == the same configs run one at a time;
+  * a padded/masked NODE-COUNT sweep compiles `_mc_core` exactly once and
+    reproduces the per-N runs; per-row algo batching likewise;
+  * `_sample_gains` (the engine's traceable twin) == `channel.sample_gains`
+    across all fading families × phase-error settings (property test);
+  * energy bookkeeping: `energy_to_target` charges exactly the slots before
+    the first target hit (hand-computed regression).
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, strategies as st
 
 from benchmarks.common import MSDProblem
+from repro.core import channel as channel_mod
+from repro.core import montecarlo as mc_mod
 from repro.core.baselines import CentralizedGD, FDMGD, PowerControlOTA
 from repro.core.channel import ChannelConfig
-from repro.core.gbma import GBMASimulator
-from repro.core.montecarlo import (ChannelBatch, energy_to_target,
-                                   quadratic_mc_problem, run_mc)
+from repro.core.gbma import GBMASimulator, ota_aggregate
+from repro.core.montecarlo import (ChannelBatch, MCProblem, MCProblemBatch,
+                                   MCResult, energy_to_target,
+                                   quadratic_mc_problem, run_mc, trace_count)
 from repro.core.theory import stepsize_theorem1
 
 N, STEPS, SEEDS = 40, 60, 2
@@ -123,7 +133,8 @@ def test_channel_batch_rejects_mixed_fading():
 
 def test_energy_accounting_and_target(prob, mc):
     """cum_energy is a per-step cumsum of E_N ||g_k||²; energy_to_target
-    picks the hit step on the risk curve."""
+    charges exactly the slots transmitted before the risk first hits the
+    target (a hit at index k has consumed k slots -> cum_energy[k-1])."""
     ch = _ch(fading="equal", noise_std=0.0, energy=0.5)
     beta = stepsize_theorem1(prob.pc, ch, N, safety=0.8)
     res = run_mc(mc, [ch], "gbma", [beta], STEPS, 1)
@@ -137,4 +148,234 @@ def test_energy_accounting_and_target(prob, mc):
     target = float(res.risks[0, 0, STEPS // 2])
     tot = energy_to_target(res, target)[0]
     hit = int(np.argmax(res.risks[0, 0] <= target))
-    np.testing.assert_allclose(tot, cum[min(hit, STEPS - 1)], rtol=1e-6)
+    assert hit > 0
+    np.testing.assert_allclose(tot, cum[hit - 1], rtol=1e-6)
+
+
+def _fake_result(risks, cum_energy):
+    risks = np.asarray(risks, np.float64)
+    mean = risks.mean(axis=1)
+    return MCResult(risks=risks, mean=mean, ci95=np.zeros_like(mean),
+                    cum_energy=np.asarray(cum_energy, np.float64),
+                    bounds=None)
+
+
+def test_energy_to_target_hand_computed():
+    """3-step trajectory, all hit cases: risks [4, 2, 1, .5] with per-slot
+    cumulative energy [3, 5, 6]. A first hit at index k costs the first k
+    slots; a hit at initialization costs nothing; a never-hit seed spends
+    the full horizon."""
+    res = _fake_result([[[4.0, 2.0, 1.0, 0.5]]], [[[3.0, 5.0, 6.0]]])
+    assert energy_to_target(res, 2.0)[0] == 3.0   # hit at k=1: slot 1 only
+    assert energy_to_target(res, 1.0)[0] == 5.0   # hit at k=2: slots 1-2
+    assert energy_to_target(res, 0.5)[0] == 6.0   # hit at final k=3
+    assert energy_to_target(res, 4.0)[0] == 0.0   # already met at theta_0
+    assert energy_to_target(res, 0.1)[0] == 6.0   # never hit: full horizon
+
+
+def test_nsweep_one_compile_matches_per_n():
+    """A node-count sweep (padded/masked to N_max) compiles `_mc_core`
+    exactly once and reproduces each per-N run within 1e-5 relative."""
+    grid = (12, 19, 32)  # odd size included: exercises the threefry pad
+    probs = [MSDProblem.make(n, dim=16) for n in grid]
+    chs = [_ch(energy=float(n) ** (-1.0)) for n in grid]
+    betas = [stepsize_theorem1(p.pc, c, n, safety=0.8)
+             for p, c, n in zip(probs, chs, grid)]
+    mcs = [p.to_mc() for p in probs]
+    singles = [run_mc(mc, [c], "gbma", [b], STEPS, SEEDS, pc=p.pc)
+               for mc, c, b, p in zip(mcs, chs, betas, probs)]
+    mc_mod.clear_cache()
+    c0 = trace_count()
+    sweep = run_mc(mcs, chs, "gbma", betas, STEPS, SEEDS,
+                   pc=[p.pc for p in probs])
+    assert trace_count() - c0 == 1
+    for i, single in enumerate(singles):
+        np.testing.assert_allclose(sweep.risks[i], single.risks[0],
+                                   rtol=1e-5, atol=1e-9)
+        np.testing.assert_allclose(sweep.cum_energy[i],
+                                   single.cum_energy[0], rtol=1e-5)
+        np.testing.assert_allclose(sweep.bounds[i], single.bounds[0],
+                                   rtol=1e-6)
+
+
+def test_nsweep_localization_problems():
+    """The localization problem batches/pads too (far-away pad sensors keep
+    the padded rows' 1/d² terms finite)."""
+    from repro.core.montecarlo import localization_mc_problem
+    from repro.data.synthetic import localization_field
+
+    parts = [localization_field(n, signal_a=100.0, snr_db=-10.0, seed=i)
+             for i, n in enumerate((10, 17))]
+    locs = [localization_mc_problem(r, x, src, 100.0)
+            for r, x, src, _ in parts]
+    ch = _ch(noise_std=0.3)
+    theta0 = np.array([45.0, 45.0])
+    sweep = run_mc(locs, [ch, ch], "gbma", [0.5, 0.5], STEPS, SEEDS,
+                   theta0=theta0)
+    assert np.all(np.isfinite(sweep.risks))
+    for i, loc in enumerate(locs):
+        single = run_mc(loc, [ch], "gbma", [0.5], STEPS, SEEDS,
+                        theta0=theta0)
+        np.testing.assert_allclose(sweep.risks[i], single.risks[0],
+                                   rtol=1e-5, atol=1e-9)
+
+
+def test_algo_batch_one_compile_matches_individual(prob, mc):
+    """Per-row algos (the fig4/fig5 shape) run in one `_mc_core` compile
+    and match the per-algo runs."""
+    ch = _ch()
+    beta = stepsize_theorem1(prob.pc, ch, N, safety=0.5)
+    algos = ("gbma", "fdm", "centralized")
+    mc_mod.clear_cache()
+    c0 = trace_count()
+    multi = run_mc(mc, [ch] * 3, algos, [beta] * 3, STEPS, SEEDS)
+    assert trace_count() - c0 == 1
+    for i, a in enumerate(algos):
+        single = run_mc(mc, [ch], a, [beta], STEPS, SEEDS)
+        np.testing.assert_allclose(multi.risks[i], single.risks[0],
+                                   rtol=1e-5, atol=1e-9)
+
+
+def test_momentum_matches_reference_recursion(prob, mc):
+    """algo='momentum'/'nesterov' == a hand-rolled heavy-ball / Nesterov
+    loop over the reference OTA slot (`gbma.ota_aggregate`), same keys."""
+    ch = _ch()
+    beta = 0.5 * stepsize_theorem1(prob.pc, ch, N, safety=0.5)
+    gamma = 0.6
+    g = prob.grad_fn()
+    for algo, nest in (("momentum", 0.0), ("nesterov", 1.0)):
+        res = run_mc(mc, [ch], algo, [beta], STEPS, 1, momentum=gamma)
+
+        def body(carry, k):
+            theta, m = carry
+            g_k = g(theta - nest * beta * gamma * m)
+            v = ota_aggregate(g_k, k, ch)
+            m = gamma * m + v
+            return (theta - beta * m, m), theta
+
+        keys = jax.random.split(jax.random.key(0), STEPS)
+        (theta_fin, _), traj = jax.lax.scan(
+            body, (jnp.zeros(prob.pc.dim), jnp.zeros(prob.pc.dim)), keys)
+        traj = jnp.concatenate([traj, theta_fin[None]])
+        np.testing.assert_allclose(res.risks[0, 0], prob.excess_risk(traj),
+                                   rtol=1e-4, atol=1e-8)
+
+
+def test_momentum_zero_gamma_is_vanilla(prob, mc):
+    ch = _ch()
+    beta = stepsize_theorem1(prob.pc, ch, N, safety=0.8)
+    r_mom = run_mc(mc, [ch], "momentum", [beta], STEPS, SEEDS, momentum=0.0)
+    r_van = run_mc(mc, [ch], "gbma", [beta], STEPS, SEEDS)
+    np.testing.assert_array_equal(r_mom.risks, r_van.risks)
+
+
+def test_shard_seeds_matches_plain(prob, mc):
+    """The shard_map('mc' mesh) seed axis is transparent: forcing it on the
+    available devices reproduces the plain path bit-for-bit."""
+    ch = _ch()
+    beta = stepsize_theorem1(prob.pc, ch, N, safety=0.8)
+    plain = run_mc(mc, [ch], "gbma", [beta], STEPS, SEEDS,
+                   shard_seeds=False)
+    sharded = run_mc(mc, [ch], "gbma", [beta], STEPS, SEEDS,
+                     shard_seeds=True)
+    np.testing.assert_array_equal(plain.risks, sharded.risks)
+    np.testing.assert_array_equal(plain.cum_energy, sharded.cum_energy)
+
+
+def test_problem_batch_rejects_unstackable():
+    handbuilt = MCProblem(grad_fn=lambda t: t[None, :], risk_fn=jnp.sum,
+                          dim=3, n_nodes=1)
+    with pytest.raises(ValueError):
+        MCProblemBatch.stack([handbuilt, handbuilt])
+    q = quadratic_mc_problem(np.eye(3, dtype=np.float32),
+                             np.zeros(3, np.float32), 0.1, np.zeros(3))
+    with pytest.raises(ValueError):
+        MCProblemBatch.stack([q, handbuilt])
+
+
+@settings(max_examples=24, deadline=None)
+@given(fading=st.sampled_from(["equal", "rayleigh", "rician", "lognormal"]),
+       scale=st.floats(0.2, 2.0),
+       phase=st.sampled_from([0.0, 0.3, 0.78]),
+       rician_k=st.floats(0.5, 8.0),
+       seed=st.integers(0, 2**16))
+def test_sample_gains_twin_matches_reference(fading, scale, phase, rician_k,
+                                             seed):
+    """The engine's traceable sampler must never drift from the reference
+    `channel.sample_gains` (same key -> same draws), across all four fading
+    families × phase-error settings."""
+    cfg = ChannelConfig(fading=fading, scale=scale, rician_k=rician_k,
+                        phase_error_max=phase)
+    p = {"scale": jnp.float32(scale), "rician_k": jnp.float32(rician_k),
+         "phase_error_max": jnp.float32(phase)}
+    key = jax.random.key(seed)
+    ref = channel_mod.sample_gains(key, cfg, (23,))
+    twin = mc_mod._sample_gains(key, fading, p, (23,))
+    np.testing.assert_allclose(np.asarray(twin), np.asarray(ref), rtol=1e-5,
+                               atol=1e-7)
+
+
+@settings(max_examples=16, deadline=None)
+@given(fading=st.sampled_from(["equal", "rayleigh", "rician", "lognormal"]),
+       n=st.sampled_from([5, 8, 23, 31, 32]),
+       seed=st.integers(0, 2**16))
+def test_dynamic_n_sampler_matches_shaped_draws(fading, n, seed):
+    """`_sample_gains_dynamic_n` (static-shape counts-as-data threefry)
+    reproduces the (n,)-shaped draw in lanes [0, n) — to float rounding
+    (fused-multiply-add differences only) — and zero-pads the rest."""
+    from repro import compat
+
+    if compat.threefry2x32 is None or not compat.threefry_is_default():
+        pytest.skip("raw threefry primitive unavailable")
+    p = {"scale": jnp.float32(0.9), "rician_k": jnp.float32(4.0),
+         "phase_error_max": jnp.float32(0.4), "n_nodes": jnp.float32(n)}
+    key = jax.random.key(seed)
+    ref = mc_mod._sample_gains(key, fading, p, (n,))
+    dyn = mc_mod._sample_gains_dynamic_n(key, fading, p, 32)
+    np.testing.assert_allclose(np.asarray(dyn[:n]), np.asarray(ref),
+                               rtol=5e-7, atol=0)
+    assert np.all(np.asarray(dyn[n:]) == 0.0)
+
+
+def test_nsweep_fdm_matches_per_n():
+    """fdm node-count sweeps (the per-node noise draw is shape-dependent
+    too, handled by `_normal_dynamic_n`) reproduce the per-N runs."""
+    probs = [MSDProblem.make(n, dim=12) for n in (10, 17)]
+    chs = [_ch() for _ in probs]
+    mcs = [p.to_mc() for p in probs]
+    for invert in (False, True):
+        sweep = run_mc(mcs, chs, "fdm", [0.01, 0.01], STEPS, SEEDS,
+                       invert_channel=invert)
+        for i, mc in enumerate(mcs):
+            single = run_mc(mc, [chs[i]], "fdm", [0.01], STEPS, SEEDS,
+                            invert_channel=invert)
+            np.testing.assert_allclose(sweep.risks[i], single.risks[0],
+                                       rtol=1e-5, atol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([5, 8, 13]), d=st.sampled_from([3, 7]),
+       seed=st.integers(0, 2**16))
+def test_dynamic_normal_matches_shaped_draws(n, d, seed):
+    from repro import compat
+
+    if compat.threefry2x32 is None or not compat.threefry_is_default():
+        pytest.skip("raw threefry primitive unavailable")
+    key = jax.random.key(seed)
+    ref = jax.random.normal(key, (n, d))
+    dyn = mc_mod._normal_dynamic_n(key, jnp.int32(n), 16, d)
+    np.testing.assert_allclose(np.asarray(dyn[:n]), np.asarray(ref),
+                               rtol=5e-7, atol=1e-7)
+    assert np.all(np.asarray(dyn[n:]) == 0.0)
+
+
+def test_energy_to_target_vectorizes_over_configs_and_seeds():
+    res = _fake_result(
+        [[[4.0, 2.0, 1.0, 0.5], [4.0, 3.0, 2.0, 1.0]],
+         [[9.0, 8.0, 7.0, 6.0], [0.5, 0.4, 0.3, 0.2]]],
+        [[[3.0, 5.0, 6.0], [1.0, 2.0, 10.0]],
+         [[1.0, 2.0, 3.0], [4.0, 8.0, 12.0]]])
+    out = energy_to_target(res, 2.0)
+    # config 0: seed 0 hits at k=1 (3.0), seed 1 at k=2 (2.0) -> mean 2.5
+    # config 1: seed 0 never hits (3.0), seed 1 at k=0 (0.0)  -> mean 1.5
+    np.testing.assert_allclose(out, [2.5, 1.5])
