@@ -13,6 +13,11 @@
    XLA compile — per N. Both are timed cold (the jit cache is cleared
    first): compile time is precisely what the padded N axis removes, so it
    belongs in the measurement.
+
+3. fig7 antenna sweep: ONE per-row-`n_antennas` engine call (antenna counts
+   as data, a single compile) vs one engine call — one compile — per
+   antenna count M. Timed cold, like 2.: the antenna count is a draw-shape
+   choice, so without the counts-as-data key split every M costs a compile.
 """
 from __future__ import annotations
 
@@ -34,6 +39,7 @@ N = 500
 STEPS = 300
 SEEDS = 4
 SWEEP_N_GRID = (100, 200, 400)
+SWEEP_M_GRID = (2, 8, 32)
 OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_montecarlo.json")
 
 
@@ -125,12 +131,52 @@ def bench_n_sweep() -> dict:
     }
 
 
+def bench_m_sweep() -> dict:
+    """fig7's antenna sweep (blind transmitters): per-row antenna counts
+    batch every M into one compile vs one compile per static M."""
+    n = 100
+    prob = MSDProblem.make(n)
+    ch = ChannelConfig(fading="rayleigh", scale=1.0, noise_std=1.0,
+                       energy=1.0 / n)
+    beta = stepsize_theorem1(prob.pc, ch, n, safety=0.9) * ch.mu_h
+    mc = prob.to_mc()
+
+    def per_m():
+        return [run_mc(mc, [ch], "blind", [beta], STEPS, SEEDS,
+                       n_antennas=m).mean[0] for m in SWEEP_M_GRID]
+
+    def one_compile():
+        return list(run_mc(mc, [ch] * len(SWEEP_M_GRID), "blind",
+                           [beta] * len(SWEEP_M_GRID), STEPS, SEEDS,
+                           n_antennas=SWEEP_M_GRID).mean)
+
+    t_per_m, curves_per_m, compiles_per_m = _time_cold(per_m)
+    t_one, curves_one, compiles_one = _time_cold(one_compile)
+    rel = float(max(
+        np.max(np.abs(cp - cs) / np.maximum(np.abs(cs), 1e-12))
+        for cp, cs in zip(curves_one, curves_per_m)))
+    return {
+        "workload": {"problem": "msd_regression", "n_nodes": n,
+                     "m_grid": list(SWEEP_M_GRID), "algo": "blind",
+                     "steps": STEPS, "seeds": SEEDS, "fading": "rayleigh",
+                     "timing": "cold, compiles included"},
+        "per_m_compile_s": round(t_per_m, 4),
+        "per_m_compiles": compiles_per_m,
+        "one_compile_s": round(t_one, 4),
+        "one_compile_compiles": compiles_one,
+        "speedup": round(t_per_m / t_one, 2),
+        "max_rel_curve_diff": rel,
+    }
+
+
 def run(verbose: bool = True) -> list[str]:
     single = bench_single_config()
     sweep = bench_n_sweep()
+    m_sweep = bench_m_sweep()
     record = {
         **single,
         "n_sweep": sweep,
+        "fig7_m_sweep": m_sweep,
         "jax_version": jax.__version__,
         "backend": jax.default_backend(),
     }
@@ -149,6 +195,15 @@ def run(verbose: bool = True) -> list[str]:
         f"bench_montecarlo,n_sweep_speedup,{sweep['speedup']:.2f}",
         f"bench_montecarlo,n_sweep_max_rel_curve_diff,"
         f"{sweep['max_rel_curve_diff']:.2e}",
+        f"bench_montecarlo,fig7_m_sweep_per_m_s,"
+        f"{m_sweep['per_m_compile_s']:.4f}"
+        f",compiles={m_sweep['per_m_compiles']}",
+        f"bench_montecarlo,fig7_m_sweep_one_compile_s,"
+        f"{m_sweep['one_compile_s']:.4f}"
+        f",compiles={m_sweep['one_compile_compiles']}",
+        f"bench_montecarlo,fig7_m_sweep_speedup,{m_sweep['speedup']:.2f}",
+        f"bench_montecarlo,fig7_m_sweep_max_rel_curve_diff,"
+        f"{m_sweep['max_rel_curve_diff']:.2e}",
         f"bench_montecarlo,json,{OUT_PATH}",
     ]
     if verbose:

@@ -11,6 +11,7 @@ N_GRID = (50, 160, 500)
 EPS_GRID = (0.5, 1.0, 1.5)
 STEPS = 300
 SEEDS = 4
+SMOKE_COMPILES = 2  # engine compiles per run(), asserted by the smoke test
 
 
 def run(verbose: bool = True) -> list[str]:

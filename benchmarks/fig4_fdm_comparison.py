@@ -19,6 +19,7 @@ from repro.core.theory import stepsize_theorem1
 N = 800
 STEPS = 300
 SEEDS = 4
+SMOKE_COMPILES = 1  # engine compiles per run(), asserted by the smoke test
 
 
 def run(verbose: bool = True) -> list[str]:

@@ -16,6 +16,7 @@ from repro.core.montecarlo import localization_mc_problem, run_mc
 N = 200
 STEPS = 3000
 SEEDS = 3
+SMOKE_COMPILES = 1  # engine compiles per run(), asserted by the smoke test
 A = 100.0
 
 

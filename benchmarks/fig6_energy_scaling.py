@@ -14,6 +14,7 @@ from repro.core.theory import stepsize_theorem1
 N_GRID = (100, 200, 400, 800)
 STEPS = 400
 SEEDS = 3
+SMOKE_COMPILES = 1  # engine compiles per run(), asserted by the smoke test
 TARGET = 1e-2
 
 

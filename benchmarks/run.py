@@ -10,7 +10,7 @@ def main() -> None:
     from benchmarks import (ablations, bench_montecarlo, fig2_equal_gains,
                             fig3_rayleigh, fig4_fdm_comparison,
                             fig5_localization, fig6_energy_scaling,
-                            roofline)
+                            fig7_blind_transmitters, roofline)
 
     modules = [
         ("fig2_equal_gains (paper Fig. 2)", fig2_equal_gains),
@@ -18,6 +18,8 @@ def main() -> None:
         ("fig4_fdm_comparison (paper Fig. 4)", fig4_fdm_comparison),
         ("fig5_localization (paper Fig. 5)", fig5_localization),
         ("fig6_energy_scaling (paper Fig. 6)", fig6_energy_scaling),
+        ("fig7_blind_transmitters (beyond-paper: Amiri/Duman/Gündüz "
+         "no-CSI baseline)", fig7_blind_transmitters),
         ("ablations (beyond-paper: phase error / fading / power control)",
          ablations),
         ("bench_montecarlo (engine vs seed per-seed loop)", bench_montecarlo),

@@ -37,6 +37,7 @@ __all__ = [
     "tree_structure",
     "threefry2x32",
     "threefry_is_default",
+    "threefry_split_is_original",
 ]
 
 JAX_VERSION: tuple[int, ...] = tuple(
@@ -85,6 +86,40 @@ def threefry_is_default() -> bool:
     call — it guards trace-time decisions and the config can change
     between traces."""
     return "fry" in str(jax.random.key(0).dtype)
+
+
+import functools as _functools
+
+
+@_functools.lru_cache(maxsize=None)
+def _split_layout_is_original(_partitionable: bool, _impl: str) -> bool:
+    # cache key = the two config knobs that can change the split layout at
+    # runtime; `ensure_compile_time_eval` keeps the probe concrete even
+    # when the first call happens inside a jit/scan trace
+    import jax.numpy as jnp
+
+    with jax.ensure_compile_time_eval():
+        key = jax.random.key(0)
+        kd = jax.random.key_data(key)
+        ref = jax.random.key_data(jax.random.split(key, 3)).ravel()
+        x0 = jnp.arange(3, dtype=jnp.uint32)
+        o0, o1 = threefry2x32(kd[0], kd[1], x0, x0 + jnp.uint32(3))
+        return bool(jnp.all(jnp.concatenate([o0, o1]) == ref))
+
+
+def threefry_split_is_original() -> bool:
+    """Whether `jax.random.split` produces the ORIGINAL threefry layout:
+    `threefry2x32(key, iota(2*num))` in `random_bits` counter order,
+    reshaped to `(num, 2)`. The Monte Carlo engine's counts-as-data key
+    splitting (per-row antenna counts with static shapes) replicates that
+    layout; `jax_threefry_partitionable` (default on newer JAX) changes it,
+    so the layout is *verified empirically* — one tiny concrete split,
+    cached per PRNG-config state — rather than version-sniffed. Callers
+    fall back to a `lax.switch` over per-count splits when False."""
+    if threefry2x32 is None or not threefry_is_default():
+        return False
+    part = bool(getattr(jax.config, "jax_threefry_partitionable", False))
+    return _split_layout_is_original(part, str(jax.random.key(0).dtype))
 
 
 # ---- tree utils ----------------------------------------------------------

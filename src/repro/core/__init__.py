@@ -1,7 +1,14 @@
 """Core contribution of the paper: GBMA over-the-air gradient aggregation."""
-from repro.core.channel import ChannelConfig, edge_noise_std, received_snr_db, sample_gains
+from repro.core.channel import (
+    ChannelConfig,
+    edge_noise_std,
+    received_snr_db,
+    sample_complex_gains,
+    sample_gains,
+)
 from repro.core.gbma import (
     GBMAConfig,
+    blind_ota_aggregate,
     GBMASimulator,
     gbma_value_and_grad,
     node_weights,
@@ -35,7 +42,9 @@ __all__ = [
     "PowerControlOTA",
     "edge_noise_std",
     "received_snr_db",
+    "sample_complex_gains",
     "sample_gains",
+    "blind_ota_aggregate",
     "gbma_value_and_grad",
     "node_weights",
     "ota_aggregate",

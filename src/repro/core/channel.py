@@ -97,6 +97,25 @@ class ChannelConfig:
         """Channel index of dispersion D = sigma_h^2 / mu_h (paper Eq. 24)."""
         return self.sigma_h2 / self.mu_h
 
+    @property
+    def magnitude_m2(self) -> float:
+        """E[h²] of the raw *magnitude* gain — no phase-error factor.
+
+        This is the normalizer of the blind-transmitter MRC combiner
+        (Amiri-Duman-Gündüz): with h~ = h e^{jφ}, E[|h~|²] = E[h²]
+        regardless of the phase distribution."""
+        import math
+
+        if self.fading == "equal":
+            return self.scale**2
+        if self.fading == "rayleigh":
+            return 2.0 * self.scale**2
+        if self.fading == "rician":
+            return 2.0 * self.scale**2 * (1.0 + self.rician_k)
+        if self.fading == "lognormal":
+            return math.exp(2.0 * self.scale**2)
+        raise ValueError(f"unknown fading model: {self.fading}")
+
 
 def _bessel_i0(x: float) -> float:
     # series expansion, adequate for the moderate K factors used here
@@ -115,13 +134,8 @@ def _bessel_i1(x: float) -> float:
     return s
 
 
-def sample_gains(key: Array, cfg: ChannelConfig, shape: tuple) -> Array:
-    """Sample effective real channel gains h_eff for `shape` node slots.
-
-    Includes the residual-phase-error factor cos(phi_err). Shapes are
-    typically (N,) for one slot or (steps, N).
-    """
-    k_mag, k_ph = jax.random.split(key)
+def _sample_magnitude(k_mag: Array, cfg: ChannelConfig, shape: tuple) -> Array:
+    """Magnitude gains h = |h~| for `shape` slots (no phase factor)."""
     if cfg.fading == "equal":
         h = jnp.full(shape, cfg.scale, dtype=jnp.float32)
     elif cfg.fading == "rayleigh":
@@ -138,12 +152,43 @@ def sample_gains(key: Array, cfg: ChannelConfig, shape: tuple) -> Array:
         h = jnp.exp(cfg.scale * jax.random.normal(k_mag, shape))
     else:
         raise ValueError(f"unknown fading model: {cfg.fading}")
+    return h
+
+
+def sample_gains(key: Array, cfg: ChannelConfig, shape: tuple) -> Array:
+    """Sample effective real channel gains h_eff for `shape` node slots.
+
+    Includes the residual-phase-error factor cos(phi_err). Shapes are
+    typically (N,) for one slot or (steps, N).
+    """
+    k_mag, k_ph = jax.random.split(key)
+    h = _sample_magnitude(k_mag, cfg, shape)
     if cfg.phase_error_max > 0.0:
         phi = jax.random.uniform(
             k_ph, shape, minval=-cfg.phase_error_max, maxval=cfg.phase_error_max
         )
         h = h * jnp.cos(phi)
     return h.astype(jnp.float32)
+
+
+def sample_complex_gains(
+    key: Array, cfg: ChannelConfig, shape: tuple
+) -> tuple[Array, Array]:
+    """Sample complex channel gains h~ = h e^{jφ} as (real, imag) parts.
+
+    The blind-transmitter setting: nodes apply NO phase correction, so the
+    full uniform phase φ ~ Unif[-π, π) survives (vs `sample_gains`, whose
+    residual phase error is bounded by `phase_error_max` after precoding).
+    The magnitude reuses the per-family sampler of `sample_gains` — same
+    key split order, so the magnitude draws coincide for a fixed key.
+    """
+    import math
+
+    k_mag, k_ph = jax.random.split(key)
+    h = _sample_magnitude(k_mag, cfg, shape)
+    phi = jax.random.uniform(k_ph, shape, minval=-math.pi, maxval=math.pi)
+    return ((h * jnp.cos(phi)).astype(jnp.float32),
+            (h * jnp.sin(phi)).astype(jnp.float32))
 
 
 def edge_noise_std(cfg: ChannelConfig, n_nodes: int) -> float:

@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import tree_flatten, tree_map, tree_unflatten
-from repro.core.channel import ChannelConfig, edge_noise_std, sample_gains
+from repro.core.channel import (ChannelConfig, edge_noise_std,
+                                sample_complex_gains, sample_gains)
 
 Array = jax.Array
 PyTree = Any
@@ -216,6 +217,47 @@ def ota_aggregate_multiantenna(
     keys = jax.random.split(key, n_antennas)
     v = jax.vmap(lambda k: ota_aggregate(grads, k, cfg))(keys)
     return jnp.mean(v, axis=0)
+
+
+def blind_ota_aggregate(
+    grads: Array,  # (N, d) transmitted analog vectors (no precoding)
+    key: Array,
+    cfg: ChannelConfig,
+    n_antennas: int,
+) -> Array:
+    """Blind-transmitter OTA slot (Amiri, Duman & Gündüz, arXiv:1907.03909).
+
+    Nodes transmit sqrt(E_N) g_n with NO channel state information — no
+    channel-inversion precoding, no phase correction — so antenna m of the
+    edge receives the complex superposition
+    ``y_m = Σ_n h~_{n,m} sqrt(E_N) g_n + z~_m`` with i.i.d. complex gains
+    h~ = h e^{jφ}, φ ~ Unif[-π, π). The edge (which does know the channel —
+    receiver CSI only) MRC-combines over its M antennas:
+
+        v = 1/(N M E[h²]) Σ_m Re{ (Σ_n h~*_{n,m}) y_m } / sqrt(E_N)
+
+    Channel hardening makes the per-node coefficient
+    c_n = Σ_m(a_{n,m} A_m + b_{n,m} B_m)/(M E[h²]) concentrate on 1: the
+    cross-node interference and the noise both vanish as 1/M, so v → the
+    equal-gain (scale 1) GBMA update as M grows — no transmitter CSI
+    needed. Effective noise variance ≈ σ_w²/(E_N N M E[h²]) per coordinate
+    (vs σ_w²/(E_N N²) for precoded GBMA).
+    """
+    n = grads.shape[0]
+    m2 = cfg.magnitude_m2
+    std = cfg.noise_std / math.sqrt(cfg.energy)
+
+    def antenna(k):
+        k_h, k_w = jax.random.split(k)
+        a, b = sample_complex_gains(k_h, cfg, (n,))
+        z = jax.random.normal(k_w, (2,) + grads.shape[1:], dtype=grads.dtype)
+        y_r = jnp.einsum("n,nd->d", a, grads) + std * z[0]
+        y_i = jnp.einsum("n,nd->d", b, grads) + std * z[1]
+        return jnp.sum(a) * y_r + jnp.sum(b) * y_i
+
+    keys = jax.random.split(key, n_antennas)
+    s = jax.vmap(antenna)(keys)
+    return jnp.sum(s, axis=0) / (n_antennas * n * m2)
 
 
 # --------------------------------------------------------------------------

@@ -29,6 +29,21 @@ differently when computed in traced f32):
                         (accelerated GD over MAC, Paul/Friedman/Cohen 2021).
   * ``nesterov``      — GBMA aggregation + Nesterov lookahead: the gradient
                         is evaluated at θ_k − βγ m_k.
+  * ``blind``         — NO transmitter CSI (Amiri/Duman/Gündüz,
+                        arXiv:1907.03909): nodes send the raw analog
+                        gradient, the M-antenna edge MRC-combines with
+                        receiver CSI; interference and noise vanish as 1/M
+                        (channel hardening). Needs ``n_antennas``.
+  * ``blind_ec``      — ``blind`` + local error accumulation
+                        (arXiv:1907.09769): each node carries the part of
+                        its update that the per-slot power budget
+                        (``power_budget``, squared-norm units) truncated
+                        and re-adds it next slot.
+
+``n_antennas`` may be a per-row sequence: the antenna axis is padded to
+M_max and each row's key split replays ``jax.random.split(key, m)`` for its
+true m with the count as data, so an M-sweep batches in the same single
+compile as everything else (see `_antenna_keys`).
 
 A batch row is a (problem, channel params, algo, stepsize) tuple:
 
@@ -71,9 +86,11 @@ from repro.core.theory import ProblemConstants, theorem1_bound
 Array = jax.Array
 
 ALGOS = ("gbma", "centralized", "fdm", "power_control", "momentum",
-         "nesterov")
+         "nesterov", "blind", "blind_ec")
 # algos that receive the OTA superposition of Eq. (8) (MAC slot is shared)
 _OTA_ALGOS = ("gbma", "momentum", "nesterov")
+# no-CSI transmitters, M-antenna MRC edge (Amiri/Duman/Gündüz)
+_BLIND_ALGOS = ("blind", "blind_ec")
 
 
 # --------------------------------------------------------------------------
@@ -284,6 +301,41 @@ class ChannelBatch:
         return len(self.configs)
 
 
+def _sample_magnitude(k_mag: Array, fading: str, p: dict,
+                      shape: tuple) -> Array:
+    """Traceable twin of `channel._sample_magnitude` over dynamic scalar
+    params: the per-family |h~| draw, shared by the precoded sampler
+    (`_sample_gains`) and the complex no-CSI one (`_sample_complex_gains`)."""
+    scale = p["scale"]
+    if fading == "equal":
+        return jnp.broadcast_to(scale.astype(jnp.float32), shape)
+    if fading == "rayleigh":
+        u = jax.random.uniform(k_mag, shape, minval=1e-12, maxval=1.0)
+        return scale * jnp.sqrt(-2.0 * jnp.log(u))
+    if fading == "rician":
+        nu = jnp.sqrt(p["rician_k"] * 2.0) * scale
+        xy = jax.random.normal(k_mag, shape + (2,)) * scale
+        return jnp.sqrt((xy[..., 0] + nu) ** 2 + xy[..., 1] ** 2)
+    if fading == "lognormal":
+        return jnp.exp(scale * jax.random.normal(k_mag, shape))
+    raise ValueError(f"unknown fading model: {fading}")
+
+
+def _magnitude_m2(fading: str, p: dict) -> Array:
+    """Traceable twin of `ChannelConfig.magnitude_m2`: E[h²] of the raw
+    magnitude gain — the blind-MRC combiner's normalizer."""
+    scale = p["scale"]
+    if fading == "equal":
+        return scale**2
+    if fading == "rayleigh":
+        return 2.0 * scale**2
+    if fading == "rician":
+        return 2.0 * scale**2 * (1.0 + p["rician_k"])
+    if fading == "lognormal":
+        return jnp.exp(2.0 * scale**2)
+    raise ValueError(f"unknown fading model: {fading}")
+
+
 def _sample_gains(key: Array, fading: str, p: dict, shape: tuple) -> Array:
     """Traceable twin of `channel.sample_gains` over dynamic scalar params.
 
@@ -294,23 +346,23 @@ def _sample_gains(key: Array, fading: str, p: dict, shape: tuple) -> Array:
     cos(0) == 1, identical to the skipped branch.
     """
     k_mag, k_ph = jax.random.split(key)
-    scale = p["scale"]
-    if fading == "equal":
-        h = jnp.broadcast_to(scale.astype(jnp.float32), shape)
-    elif fading == "rayleigh":
-        u = jax.random.uniform(k_mag, shape, minval=1e-12, maxval=1.0)
-        h = scale * jnp.sqrt(-2.0 * jnp.log(u))
-    elif fading == "rician":
-        nu = jnp.sqrt(p["rician_k"] * 2.0) * scale
-        xy = jax.random.normal(k_mag, shape + (2,)) * scale
-        h = jnp.sqrt((xy[..., 0] + nu) ** 2 + xy[..., 1] ** 2)
-    elif fading == "lognormal":
-        h = jnp.exp(scale * jax.random.normal(k_mag, shape))
-    else:
-        raise ValueError(f"unknown fading model: {fading}")
+    h = _sample_magnitude(k_mag, fading, p, shape)
     phi = jax.random.uniform(k_ph, shape, minval=-p["phase_error_max"],
                              maxval=p["phase_error_max"])
     return (h * jnp.cos(phi)).astype(jnp.float32)
+
+
+def _sample_complex_gains(key: Array, fading: str, p: dict,
+                          shape: tuple) -> tuple:
+    """Traceable twin of `channel.sample_complex_gains`: (real, imag) parts
+    of h~ = h e^{jφ} with the FULL uniform phase φ ~ Unif[-π, π) — no
+    precoding in the blind-transmitter setting, so nothing bounds the
+    phase. Same split order as the reference."""
+    k_mag, k_ph = jax.random.split(key)
+    h = _sample_magnitude(k_mag, fading, p, shape)
+    phi = jax.random.uniform(k_ph, shape, minval=-np.pi, maxval=np.pi)
+    return ((h * jnp.cos(phi)).astype(jnp.float32),
+            (h * jnp.sin(phi)).astype(jnp.float32))
 
 
 def _sample_gains_padded(key: Array, fading: str, p: dict,
@@ -331,6 +383,22 @@ def _sample_gains_padded(key: Array, fading: str, p: dict,
         for n in n_sizes
     ]
     return jax.lax.switch(p["n_idx"], branches, key)
+
+
+def _sample_complex_gains_padded(key: Array, fading: str, p: dict,
+                                 n_sizes: tuple, n_max: int) -> tuple:
+    """(a, b) complex-gain parts, zero-padded like `_sample_gains_padded`
+    (per-N branches sample at the true static shape)."""
+    if len(n_sizes) == 1 and n_sizes[0] == n_max:
+        return _sample_complex_gains(key, fading, p, (n_max,))
+    branches = [
+        (lambda k, n=n: jnp.pad(
+            jnp.stack(_sample_complex_gains(k, fading, p, (n,))),
+            ((0, 0), (0, n_max - n))))
+        for n in n_sizes
+    ]
+    ab = jax.lax.switch(p["n_idx"], branches, key)
+    return ab[0], ab[1]
 
 
 def _normal_padded(key: Array, n_idx: Array, n_sizes: tuple, n_max: int,
@@ -415,6 +483,29 @@ def _normal_dynamic_n(key: Array, n: Array, n_max: int, d: int) -> Array:
     return z.reshape(n_max, d)
 
 
+def _sample_magnitude_dynamic_n(kd_mag: Array, fading: str, p: dict,
+                                n: Array, n_max: int) -> Array:
+    """Dynamic-count twin of `_sample_magnitude` (traced n, static n_max);
+    lanes ≥ n are garbage until the caller masks them."""
+    scale = p["scale"]
+    if fading == "equal":
+        return jnp.broadcast_to(scale.astype(jnp.float32), (n_max,))
+    if fading == "rayleigh":
+        u01 = _bits_to_u01(_dynamic_bits(kd_mag, n, n_max))
+        u = _u01_to_uniform(u01, jnp.float32(1e-12), jnp.float32(1.0))
+        return scale * jnp.sqrt(-2.0 * jnp.log(u))
+    if fading == "rician":
+        nu = jnp.sqrt(p["rician_k"] * 2.0) * scale
+        z = _u01_to_normal(_bits_to_u01(
+            _dynamic_bits(kd_mag, 2 * n, 2 * n_max)))
+        xy = z.reshape(n_max, 2) * scale
+        return jnp.sqrt((xy[..., 0] + nu) ** 2 + xy[..., 1] ** 2)
+    if fading == "lognormal":
+        z = _u01_to_normal(_bits_to_u01(_dynamic_bits(kd_mag, n, n_max)))
+        return jnp.exp(scale * z)
+    raise ValueError(f"unknown fading model: {fading}")
+
+
 def _sample_gains_dynamic_n(key: Array, fading: str, p: dict,
                             n_max: int) -> Array:
     """Bit-exact twin of `_sample_gains(key, fading, p, (n,))` zero-padded
@@ -422,31 +513,86 @@ def _sample_gains_dynamic_n(key: Array, fading: str, p: dict,
     covers every node count in the sweep."""
     n = p["n_nodes"].astype(jnp.int32)
     k_mag, k_ph = jax.random.split(key)
-    kd_mag = jax.random.key_data(k_mag)
-    kd_ph = jax.random.key_data(k_ph)
-    scale = p["scale"]
-    if fading == "equal":
-        h = jnp.broadcast_to(scale.astype(jnp.float32), (n_max,))
-    elif fading == "rayleigh":
-        u01 = _bits_to_u01(_dynamic_bits(kd_mag, n, n_max))
-        u = _u01_to_uniform(u01, jnp.float32(1e-12), jnp.float32(1.0))
-        h = scale * jnp.sqrt(-2.0 * jnp.log(u))
-    elif fading == "rician":
-        nu = jnp.sqrt(p["rician_k"] * 2.0) * scale
-        z = _u01_to_normal(_bits_to_u01(
-            _dynamic_bits(kd_mag, 2 * n, 2 * n_max)))
-        xy = z.reshape(n_max, 2) * scale
-        h = jnp.sqrt((xy[..., 0] + nu) ** 2 + xy[..., 1] ** 2)
-    elif fading == "lognormal":
-        z = _u01_to_normal(_bits_to_u01(_dynamic_bits(kd_mag, n, n_max)))
-        h = jnp.exp(scale * z)
-    else:
-        raise ValueError(f"unknown fading model: {fading}")
+    h = _sample_magnitude_dynamic_n(jax.random.key_data(k_mag), fading, p,
+                                    n, n_max)
     a = p["phase_error_max"]
-    phi = _u01_to_uniform(_bits_to_u01(_dynamic_bits(kd_ph, n, n_max)),
-                          -a, a)
+    phi = _u01_to_uniform(
+        _bits_to_u01(_dynamic_bits(jax.random.key_data(k_ph), n, n_max)),
+        -a, a)
     h = (h * jnp.cos(phi)).astype(jnp.float32)
     return jnp.where(jnp.arange(n_max) < n, h, jnp.float32(0.0))
+
+
+def _sample_complex_gains_dynamic_n(key: Array, fading: str, p: dict,
+                                    n_max: int) -> tuple:
+    """Dynamic-count twin of `_sample_complex_gains(key, fading, p, (n,))`
+    zero-padded to (n_max,) — the blind family's per-antenna gain draw on
+    node-count sweeps."""
+    n = p["n_nodes"].astype(jnp.int32)
+    k_mag, k_ph = jax.random.split(key)
+    h = _sample_magnitude_dynamic_n(jax.random.key_data(k_mag), fading, p,
+                                    n, n_max)
+    phi = _u01_to_uniform(
+        _bits_to_u01(_dynamic_bits(jax.random.key_data(k_ph), n, n_max)),
+        jnp.float32(-np.pi), jnp.float32(np.pi))
+    lane = jnp.arange(n_max) < n
+    a = jnp.where(lane, (h * jnp.cos(phi)).astype(jnp.float32), 0.0)
+    b = jnp.where(lane, (h * jnp.sin(phi)).astype(jnp.float32), 0.0)
+    return a, b
+
+
+def _dynamic_threefry_ok() -> bool:
+    """Counts-as-data fast paths need the raw primitive AND the default
+    threefry PRNG (the bit-level replication is only valid then)."""
+    return compat.threefry2x32 is not None and compat.threefry_is_default()
+
+
+def _row_gains(key: Array, fading: str, p: dict, n_sizes: tuple,
+               n_max: int) -> Array:
+    """This row's (n_max,) zero-padded slot gains: dynamic-count program
+    when available (no per-N branches), per-N `lax.switch` otherwise."""
+    if len(n_sizes) > 1 and _dynamic_threefry_ok():
+        return _sample_gains_dynamic_n(key, fading, p, n_max)
+    return _sample_gains_padded(key, fading, p, n_sizes, n_max)
+
+
+def _row_complex_gains(key: Array, fading: str, p: dict, n_sizes: tuple,
+                       n_max: int) -> tuple:
+    """Complex counterpart of `_row_gains` for the blind family."""
+    if len(n_sizes) > 1 and _dynamic_threefry_ok():
+        return _sample_complex_gains_dynamic_n(key, fading, p, n_max)
+    return _sample_complex_gains_padded(key, fading, p, n_sizes, n_max)
+
+
+def _antenna_keys(key: Array, m_sizes: tuple, p: dict) -> Array:
+    """(m_max,) antenna keys whose first m entries (m = this row's true
+    antenna count, `p['n_antennas']`) equal `jax.random.split(key, m)`.
+
+    Antenna counts suffer the same shape-dependent-stream problem as node
+    counts: `split` is itself a threefry draw over `iota(2m)` counters, so
+    splitting at m_max and masking would change every row's stream. The
+    fast path replays the original split layout with the row's count as
+    DATA (`_dynamic_bits` over 2m counters, reshaped (m_max, 2)); its
+    validity is verified empirically by `compat.threefry_split_is_original`
+    (False under `jax_threefry_partitionable`). The fallback is a
+    `lax.switch` over the distinct static counts. Lanes ≥ m hold
+    well-formed garbage keys — callers mask the antenna axis."""
+    m_max = max(m_sizes)
+    if len(m_sizes) == 1:
+        return jax.random.split(key, m_max)
+    if compat.threefry2x32 is not None \
+            and compat.threefry_split_is_original():
+        m = p["n_antennas"].astype(jnp.int32)
+        bits = _dynamic_bits(jax.random.key_data(key), 2 * m, 2 * m_max)
+        return jax.random.wrap_key_data(bits.reshape(m_max, 2))
+    branches = [
+        (lambda k, m=m: jnp.pad(
+            jax.random.key_data(jax.random.split(k, m)),
+            ((0, m_max - m), (0, 0))))
+        for m in m_sizes
+    ]
+    return jax.random.wrap_key_data(
+        jax.lax.switch(p["m_idx"], branches, key))
 
 
 # --------------------------------------------------------------------------
@@ -455,7 +601,7 @@ def _sample_gains_dynamic_n(key: Array, fading: str, p: dict,
 def _ota_slot(g: Array, key: Array, fading: str, p: dict,
               n_sizes: tuple, n_max: int, h_slot=None) -> Array:
     k_h, k_w = jax.random.split(key)
-    h = _sample_gains_padded(k_h, fading, p, n_sizes, n_max) \
+    h = _row_gains(k_h, fading, p, n_sizes, n_max) \
         if h_slot is None else h_slot
     v = jnp.einsum("n,nd->d", h, g) / p["n_nodes"]
     std = p["noise_std"] / (p["n_nodes"] * jnp.sqrt(p["energy"]))
@@ -464,13 +610,24 @@ def _ota_slot(g: Array, key: Array, fading: str, p: dict,
 
 def _slot_update(g: Array, key: Array, *, algo: str, fading: str, p: dict,
                  mask: Array, n_sizes: tuple, n_antennas: int,
-                 invert_channel: bool, h_min: float, h_slot=None) -> Array:
-    """One MAC slot: local gradients (n_max, d) -> received update (d,).
+                 m_sizes: tuple, invert_channel: bool, h_min: float,
+                 h_slot=None) -> Array:
+    """One MAC slot: transmitted per-node vectors (n_max, d) -> received
+    update (d,).
 
-    Padded node rows carry exactly-zero gradients (the problem grad fns
+    `g` is whatever the nodes put on the channel this slot — the masked
+    local gradients for most algorithms; for `blind_ec` rows the scan body
+    has already folded in the local residual and the power-budget
+    truncation before calling here.
+
+    Padded node rows carry exactly-zero vectors (the problem grad fns
     mask them) and zero-padded channel gains, so every per-node reduction
     normalizes by the row's true node count p['n_nodes'], and shaped noise
     draws (fdm) are masked before the node average.
+
+    `m_sizes` non-empty means per-row antenna counts (`p['n_antennas']` is
+    data, the antenna axis is padded to max(m_sizes) and masked); otherwise
+    the static `n_antennas` broadcast applies.
 
     `h_slot` is this slot's pre-sampled gain vector when the caller hoisted
     the gain sampling out of the scan (node-count sweeps: the per-N
@@ -486,16 +643,49 @@ def _slot_update(g: Array, key: Array, *, algo: str, fading: str, p: dict,
         # `GBMASimulator`. An integer (1 included) takes the MRC path of
         # `ota_aggregate_multiantenna`, whose extra key split changes the
         # stream even for M=1 — mirrored so fixed seeds reproduce exactly.
+        # Per-row counts (m_sizes) take the masked-MRC path: each row
+        # consumes exactly the first m of its replayed split(key, m).
+        if m_sizes:
+            keys = _antenna_keys(key, m_sizes, p)
+            v = jax.vmap(
+                lambda k: _ota_slot(g, k, fading, p, n_sizes, n_max))(keys)
+            amask = (jnp.arange(v.shape[0]) < p["n_antennas"]).astype(
+                v.dtype)
+            return jnp.einsum("m,md->d", amask, v) / p["n_antennas"]
         if n_antennas is None:
             return _ota_slot(g, key, fading, p, n_sizes, n_max, h_slot)
         keys = jax.random.split(key, n_antennas)
         v = jax.vmap(
             lambda k: _ota_slot(g, k, fading, p, n_sizes, n_max))(keys)
         return jnp.mean(v, axis=0)
+    if algo in _BLIND_ALGOS:
+        # Blind transmitters (1907.03909): nodes send g uncoded; antenna m
+        # receives y_m = Σ_n h~_{n,m} g_n + z~_m (complex); the edge MRC-
+        # combines with receiver CSI, normalized by M·E[h²] — mirrors
+        # `gbma.blind_ota_aggregate` split-for-split.
+        m2 = _magnitude_m2(fading, p)
+        std = p["noise_std"] / jnp.sqrt(p["energy"])
+
+        def antenna(k):
+            k_h, k_w = jax.random.split(k)
+            a, b = _row_complex_gains(k_h, fading, p, n_sizes, n_max)
+            z = jax.random.normal(k_w, (2, g.shape[1]), dtype=g.dtype)
+            y_r = jnp.einsum("n,nd->d", a, g) + std * z[0]
+            y_i = jnp.einsum("n,nd->d", b, g) + std * z[1]
+            return jnp.sum(a) * y_r + jnp.sum(b) * y_i
+
+        if m_sizes:
+            keys = _antenna_keys(key, m_sizes, p)
+            m_true = p["n_antennas"]
+        else:
+            keys = jax.random.split(key, n_antennas)
+            m_true = jnp.float32(n_antennas)
+        s = jax.vmap(antenna)(keys)
+        amask = (jnp.arange(s.shape[0]) < m_true).astype(g.dtype)
+        return jnp.einsum("m,md->d", amask, s) / (m_true * n_true * m2)
     if algo == "fdm":
         k_h, k_w = jax.random.split(key)
-        if len(n_sizes) > 1 and compat.threefry2x32 is not None \
-                and compat.threefry_is_default():
+        if len(n_sizes) > 1 and _dynamic_threefry_ok():
             raw = _normal_dynamic_n(
                 k_w, p["n_nodes"].astype(jnp.int32), n_max, g.shape[1])
         else:
@@ -505,13 +695,13 @@ def _slot_update(g: Array, key: Array, *, algo: str, fading: str, p: dict,
         if invert_channel:
             rx = g + noise
         else:
-            h = _sample_gains_padded(k_h, fading, p, n_sizes, n_max) \
+            h = _row_gains(k_h, fading, p, n_sizes, n_max) \
                 if h_slot is None else h_slot
             rx = h[:, None] * g + noise
         return jnp.sum(rx * mask[:, None], axis=0) / n_true
     if algo == "power_control":
         k_h, k_w = jax.random.split(key)
-        h = _sample_gains_padded(k_h, fading, p, n_sizes, n_max) \
+        h = _row_gains(k_h, fading, p, n_sizes, n_max) \
             if h_slot is None else h_slot
         active = (h >= h_min).astype(g.dtype) * mask
         n_active = jnp.maximum(jnp.sum(active), 1.0)
@@ -532,7 +722,10 @@ class MCResult:
     risks:      (C, S, steps+1) per-row per-seed excess-risk curves.
     mean:       (C, steps+1) seed average (the Eq. 14 expectation estimate).
     ci95:       (C, steps+1) 1.96 * standard error over seeds (0 if S == 1).
-    cum_energy: (C, S, steps) cumulative transmitted energy Σ E_N ||g_k||².
+    cum_energy: (C, S, steps) cumulative transmitted energy Σ E_N ||x_k||²
+                of the actually-transmitted vectors — x_k = g_k for every
+                algorithm except `blind_ec`, whose power budget truncates
+                x_k = α(g_k + e_k).
     bounds:     (C, steps+1) Theorem-1 bound per row (None unless problem
                 constants were supplied AND every row is single-antenna
                 'gbma' — the setting Theorem 1 covers).
@@ -567,12 +760,12 @@ def clear_cache() -> bool:
 @functools.partial(
     jax.jit,
     static_argnames=("grad_fn", "risk_fn", "row_based", "algo_set", "fading",
-                     "steps", "n_sizes", "n_antennas", "invert_channel",
-                     "h_min", "n_shards"),
+                     "steps", "n_sizes", "n_antennas", "m_sizes",
+                     "invert_channel", "h_min", "n_shards"),
 )
 def _mc_core(params, betas, theta0, seeds, data, *, grad_fn, risk_fn,
              row_based, algo_set, fading, steps, n_sizes, n_antennas,
-             invert_channel, h_min, n_shards):
+             m_sizes, invert_channel, h_min, n_shards):
     """(C,)-batched rows × (S,) seeds × scan(steps), seeds sharded on 'mc'.
 
     `algo_set` is the deduped algorithm tuple; the row-to-algorithm
@@ -583,15 +776,26 @@ def _mc_core(params, betas, theta0, seeds, data, *, grad_fn, risk_fn,
     bit-exactly to vanilla GD at γ = 0 (0·m = 0, 0 + v = v), and the
     Nesterov lookahead θ − nest·βγ·m is exactly θ when the row's nest flag
     is 0.
+
+    When `algo_set` contains 'blind_ec' the scan carry additionally holds
+    the per-node residual e (n_max, d): rows flagged p['ec']=1 transmit
+    x = α(g + e) with the power-budget scaling α = min(1, √(B/‖g+e‖²))
+    per node and carry e ← (g+e) − x forward (error accumulation of
+    1907.09769); all other rows select α = 1 and reduce bit-exactly to
+    x = g — even when their own α expression is NaN (an overflowing row
+    under the default unbounded budget hits inf/inf). The transmitted
+    energy is always computed from x — identical to the g-based accounting
+    whenever no truncation happened.
     """
     global _TRACE_COUNT
     _TRACE_COUNT += 1  # python side effect: runs once per trace/compile
 
     # gains-consuming slot types, single-antenna: eligible for hoisting the
     # per-N sampling switch out of the scan (see `hoist` below)
-    hoistable = n_antennas is None and any(
+    hoistable = n_antennas is None and not m_sizes and any(
         a in _OTA_ALGOS or a == "power_control"
         or (a == "fdm" and not invert_channel) for a in algo_set)
+    use_ec = "blind_ec" in algo_set
 
     def trajectory(p, beta, row, seed, t0):
         key = jax.random.key(seed)
@@ -601,12 +805,12 @@ def _mc_core(params, betas, theta0, seeds, data, *, grad_fn, risk_fn,
                 return _slot_update(
                     g, k, algo=algo_set[0], fading=fading, p=p,
                     mask=row["mask"], n_sizes=n_sizes, n_antennas=n_antennas,
-                    invert_channel=invert_channel, h_min=h_min,
-                    h_slot=h_slot)
+                    m_sizes=m_sizes, invert_channel=invert_channel,
+                    h_min=h_min, h_slot=h_slot)
             branches = [
                 (lambda kk, a=a: _slot_update(
                     g, kk, algo=a, fading=fading, p=p, mask=row["mask"],
-                    n_sizes=n_sizes, n_antennas=n_antennas,
+                    n_sizes=n_sizes, n_antennas=n_antennas, m_sizes=m_sizes,
                     invert_channel=invert_channel, h_min=h_min,
                     h_slot=h_slot))
                 for a in algo_set
@@ -615,16 +819,35 @@ def _mc_core(params, betas, theta0, seeds, data, *, grad_fn, risk_fn,
 
         def body(carry, x):
             k, h_slot = x
-            theta, m, cum_e = carry
+            if use_ec:
+                theta, m, e_res, cum_e = carry
+            else:
+                theta, m, cum_e = carry
             theta_eval = theta - p["nest"] * beta * p["gamma"] * m
             g = (grad_fn(row, theta_eval) if row_based
                  else grad_fn(theta_eval))
             risk = risk_fn(row, theta) if row_based else risk_fn(theta)
+            if use_ec:
+                u = g + p["ec"] * e_res
+                sq = jnp.sum(u * u, axis=1)
+                alpha = jnp.minimum(1.0, jnp.sqrt(
+                    p["tx_budget"] / jnp.maximum(sq, 1e-30)))
+                # select, don't blend: inf/inf above is NaN (e.g. an
+                # overflowing row with the default unbounded budget) and
+                # 0*NaN would leak it into ec=0 rows
+                alpha = jnp.where(p["ec"] > 0, alpha, 1.0)
+                x_tx = alpha[:, None] * u
+                e_res = p["ec"] * (u - x_tx)
+            else:
+                x_tx = g
             cum_e = cum_e + p["energy"] * jnp.sum(
-                g.astype(jnp.float32) ** 2)
-            v = slot(g, k, h_slot)
+                x_tx.astype(jnp.float32) ** 2)
+            v = slot(x_tx, k, h_slot)
             m = p["gamma"] * m + v
-            return (theta - beta * m, m, cum_e), (risk, cum_e)
+            theta = theta - beta * m
+            carry = (theta, m, e_res, cum_e) if use_ec \
+                else (theta, m, cum_e)
+            return carry, (risk, cum_e)
 
         step_keys = jax.random.split(key, steps)
         h_all = None
@@ -641,17 +864,21 @@ def _mc_core(params, betas, theta0, seeds, data, *, grad_fn, risk_fn,
             # primitive is unavailable or a non-threefry PRNG is active.
             n_max_ = row["mask"].shape[0]
             k_hs = jax.vmap(lambda k: jax.random.split(k)[0])(step_keys)
-            if compat.threefry2x32 is not None \
-                    and compat.threefry_is_default():
+            if _dynamic_threefry_ok():
                 sample = lambda kh: _sample_gains_dynamic_n(
                     kh, fading, p, n_max_)
             else:
                 sample = lambda kh: _sample_gains_padded(
                     kh, fading, p, n_sizes, n_max_)
             h_all = jax.vmap(sample)(k_hs)
-        (theta_fin, _, _), (risks, cum_e) = jax.lax.scan(
-            body, (t0, jnp.zeros_like(t0), jnp.float32(0.0)),
-            (step_keys, h_all))
+        carry0 = (t0, jnp.zeros_like(t0), jnp.float32(0.0))
+        if use_ec:
+            carry0 = (t0, jnp.zeros_like(t0),
+                      jnp.zeros((row["mask"].shape[0], t0.shape[0]),
+                                jnp.float32), jnp.float32(0.0))
+        carry_fin, (risks, cum_e) = jax.lax.scan(
+            body, carry0, (step_keys, h_all))
+        theta_fin = carry_fin[0]
         fin = risk_fn(row, theta_fin) if row_based else risk_fn(theta_fin)
         risks = jnp.concatenate([risks, fin[None]])
         return risks, cum_e  # (steps+1,), (steps,)
@@ -695,12 +922,13 @@ def run_mc(
     *,
     theta0: Optional[np.ndarray] = None,
     seed0: int = 0,
-    n_antennas: Optional[int] = None,
+    n_antennas: Optional[Union[int, Sequence[int]]] = None,
     invert_channel: bool = False,
     h_min: float = 0.3,
     pc: Optional[Union[ProblemConstants,
                        Sequence[ProblemConstants]]] = None,
     momentum: float = 0.9,
+    power_budget: Optional[Union[float, Sequence[float]]] = None,
     shard_seeds: Optional[bool] = None,
 ) -> MCResult:
     """Run `seeds` Monte Carlo trajectories for each batch row.
@@ -716,6 +944,18 @@ def run_mc(
     one per row) the Theorem-1 bound rides along — only when every row is
     single-antenna 'gbma', the setting Theorem 1 covers; mixed-algo calls
     get `bounds=None`.
+
+    `n_antennas`: the edge antenna count M. An int broadcasts (static;
+    OTA algos take the MRC path, blind algos combine over M). A sequence
+    gives one M per row AS DATA — the antenna axis pads to max(M) and an
+    M-sweep batches into the same single compile (each row's key split
+    replays `split(key, m)` for its true m). Required for blind/blind_ec.
+
+    `power_budget`: per-slot, per-node transmit budget in squared-norm
+    units of the transmitted vector (scalar or one per row; default
+    unbounded). Only `blind_ec` rows enforce it, carrying the truncated
+    remainder in their local residual.
+
     `shard_seeds` shards the seed axis over devices on a 'mc' mesh axis
     (None: auto when divisible; no-op on one device).
     """
@@ -732,6 +972,25 @@ def run_mc(
     for a in algos:
         if a not in ALGOS:
             raise ValueError(f"unknown algo {a!r}; expected one of {ALGOS}")
+
+    # ---- normalize the antenna axis ------------------------------------
+    if n_antennas is None or isinstance(n_antennas, (int, np.integer)):
+        if n_antennas is not None:
+            n_antennas = int(n_antennas)
+        m_per_row, m_sizes = None, ()
+    else:
+        m_per_row = tuple(int(m) for m in n_antennas)
+        if len(m_per_row) != n_rows:
+            raise ValueError(f"need one antenna count per row: "
+                             f"{len(m_per_row)} vs C={n_rows}")
+        if any(m < 1 for m in m_per_row):
+            raise ValueError(f"antenna counts must be >= 1: {m_per_row}")
+        m_sizes = tuple(sorted(set(m_per_row)))
+        n_antennas = None  # the static broadcast arg is off in per-row mode
+    if any(a in _BLIND_ALGOS for a in algos) \
+            and n_antennas is None and not m_sizes:
+        raise ValueError(
+            "blind/blind_ec need n_antennas (the edge antenna count M)")
 
     # ---- normalize the problem axis ------------------------------------
     if isinstance(problem, MCProblemBatch):
@@ -775,6 +1034,22 @@ def run_mc(
         jnp.float32)
     params["nest"] = jnp.asarray(
         [1.0 if a == "nesterov" else 0.0 for a in algos], jnp.float32)
+    params["ec"] = jnp.asarray(
+        [1.0 if a == "blind_ec" else 0.0 for a in algos], jnp.float32)
+    if power_budget is None:
+        budgets = (float("inf"),) * n_rows
+    elif isinstance(power_budget, (int, float, np.integer, np.floating)):
+        budgets = (float(power_budget),) * n_rows
+    else:
+        budgets = tuple(float(b) for b in power_budget)
+        if len(budgets) != n_rows:
+            raise ValueError(f"need one power budget per row: "
+                             f"{len(budgets)} vs C={n_rows}")
+    params["tx_budget"] = jnp.asarray(budgets, jnp.float32)
+    if m_sizes:
+        params["n_antennas"] = jnp.asarray(m_per_row, jnp.float32)
+        params["m_idx"] = jnp.asarray(
+            [m_sizes.index(m) for m in m_per_row], jnp.int32)
 
     t0 = jnp.zeros((dim,), jnp.float32) if theta0 is None \
         else jnp.asarray(theta0, jnp.float32)
@@ -784,7 +1059,7 @@ def run_mc(
         params, betas, t0, seed_ints, data,
         grad_fn=grad_fn, risk_fn=risk_fn, row_based=row_based,
         algo_set=algo_set, fading=ch_batch.fading, steps=steps,
-        n_sizes=n_sizes, n_antennas=n_antennas,
+        n_sizes=n_sizes, n_antennas=n_antennas, m_sizes=m_sizes,
         invert_channel=invert_channel, h_min=h_min, n_shards=n_shards)
     risks = np.asarray(risks)
     mean = np.mean(risks, axis=1)
@@ -798,7 +1073,8 @@ def run_mc(
         if len(pcs) != n_rows:
             raise ValueError(f"need one ProblemConstants per row: "
                              f"{len(pcs)} vs C={n_rows}")
-        if all(a == "gbma" for a in algos) and n_antennas is None:
+        if all(a == "gbma" for a in algos) and n_antennas is None \
+                and not m_sizes:
             ks = np.arange(1, steps + 2)
             bounds = np.stack([
                 theorem1_bound(ks, float(b), row_pc, cfg, n)

@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
-from repro.core.channel import ChannelConfig, edge_noise_std, sample_gains
+from repro.core.channel import (ChannelConfig, edge_noise_std,
+                                sample_complex_gains, sample_gains)
 
 
 @pytest.mark.parametrize("fading,scale", [
@@ -19,6 +20,21 @@ def test_sample_moments_match_analytic(fading, scale):
     np.testing.assert_allclose(float(h.mean()), cfg.mu_h, rtol=0.02)
     np.testing.assert_allclose(float(h.var()), cfg.sigma_h2,
                                rtol=0.05, atol=5e-3)
+
+
+@pytest.mark.parametrize("fading,scale", [
+    ("equal", 1.3), ("rayleigh", 0.8), ("rician", 1.0), ("lognormal", 0.5),
+])
+def test_complex_gain_moments(fading, scale):
+    """Blind-channel draws: uniform phase makes both parts zero-mean, and
+    E[a² + b²] = E[h²] = `magnitude_m2` (the blind-MRC normalizer)."""
+    cfg = ChannelConfig(fading=fading, scale=scale)
+    a, b = sample_complex_gains(jax.random.key(0), cfg, (400_000,))
+    m2 = float((a**2 + b**2).mean())
+    np.testing.assert_allclose(float(a.mean()), 0.0, atol=3e-2 * scale)
+    np.testing.assert_allclose(float(b.mean()), 0.0, atol=3e-2 * scale)
+    np.testing.assert_allclose(m2, cfg.magnitude_m2,
+                               rtol=0.05 if fading != "lognormal" else 0.2)
 
 
 def test_phase_error_reduces_mean_gain():

@@ -1,0 +1,64 @@
+"""Doc-drift guards: the documentation surface cannot silently diverge
+from the registries it documents.
+
+  * every `montecarlo.ALGOS` entry has a heading in `docs/algorithms.md`;
+  * every `benchmarks/fig*.py` script is registered in `benchmarks/run.py`
+    and listed in the README figure table;
+  * every `repro.compat.__all__` name is documented in
+    `docs/algorithms.md`'s compat section;
+  * the docs the README links to exist in the repo.
+
+Adding an algorithm, a figure script, or a compat symbol without
+documenting/registering it fails tier-1.
+"""
+import pathlib
+import re
+
+from repro import compat
+from repro.core.montecarlo import ALGOS
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _figure_scripts():
+    figs = sorted((ROOT / "benchmarks").glob("fig*.py"))
+    assert len(figs) >= 6  # fig2..fig7 at time of writing
+    return figs
+
+
+def test_every_algo_has_a_heading_in_algorithms_md():
+    text = (ROOT / "docs" / "algorithms.md").read_text()
+    for algo in ALGOS:
+        assert re.search(rf"^#+ .*`{algo}`", text, re.M), (
+            f"algo {algo!r} is in montecarlo.ALGOS but has no heading in "
+            "docs/algorithms.md — document its update rule, RNG semantics, "
+            "energy accounting and slot path there")
+
+
+def test_every_figure_script_is_registered_in_run_py():
+    run_src = (ROOT / "benchmarks" / "run.py").read_text()
+    for fig in _figure_scripts():
+        assert fig.stem in run_src, (
+            f"benchmarks/{fig.name} is not registered in benchmarks/run.py")
+
+
+def test_every_figure_script_is_in_the_readme_table():
+    readme = (ROOT / "README.md").read_text()
+    for fig in _figure_scripts():
+        assert f"benchmarks/{fig.name}" in readme, (
+            f"benchmarks/{fig.name} is missing from the README figure "
+            "table")
+
+
+def test_compat_public_surface_is_documented():
+    text = (ROOT / "docs" / "algorithms.md").read_text()
+    for name in compat.__all__:
+        assert f"`{name}`" in text, (
+            f"repro.compat.{name} is exported (__all__) but undocumented "
+            "in docs/algorithms.md")
+
+
+def test_readme_doc_links_resolve():
+    readme = (ROOT / "README.md").read_text()
+    for rel in re.findall(r"\]\((docs/[^)#]+)", readme):
+        assert (ROOT / rel).is_file(), f"README links to missing {rel}"

@@ -1,13 +1,19 @@
-"""Tier-1 smoke coverage of the figure scripts: every `benchmarks/fig*.py`
-`run()` (plus the ablation sweeps) executes end to end at tiny, monkeypatched
-module constants, so figure-script regressions surface without `--runslow` —
-including the per-figure one-compile guarantee (each script's N-sweep /
-algorithm comparison must stay a single `_mc_core` compile).
+"""Tier-1 smoke coverage of the figure scripts, auto-discovered: every
+`benchmarks/fig*.py` module — current and future — gets its `run()`
+executed end to end at tiny, monkeypatched module constants, so
+figure-script regressions surface without `--runslow`, including the
+per-figure compile guarantee: each script declares `SMOKE_COMPILES`, the
+exact number of `_mc_core` compiles its run() performs (one per engine
+sweep — never one per N / per algorithm / per antenna count), and the
+test asserts the count exactly.
 
-The scripts expose their operating points as module constants (STEPS, SEEDS,
-N / N_GRID, EPS_GRID) precisely so this test can shrink them.
+The scripts expose their operating points as module constants (STEPS,
+SEEDS, N / N_GRID, EPS_GRID, M / M_GRID) precisely so this test can
+shrink them; new figure scripts inherit the smoke + compile-count
+coverage just by matching `benchmarks/fig*.py`.
 """
 import importlib
+import pathlib
 
 import pytest
 
@@ -19,25 +25,25 @@ TINY = {
     "N": 16,
     "N_GRID": (8, 13),   # odd size: exercises the padded sweep's odd branch
     "EPS_GRID": (1.0, 1.5),
+    "M": 3,
+    "M_GRID": (1, 4),    # distinct counts: exercises the antenna replay
 }
 
-# engine compiles each run() is allowed: the N-sweep (a) and, for fig2/fig3,
-# the energy sweep (b) — never one compile per N / per algorithm
-FIG_MODULES = [
-    ("fig2_equal_gains", 2),
-    ("fig3_rayleigh", 2),
-    ("fig4_fdm_comparison", 1),
-    ("fig5_localization", 1),
-    ("fig6_energy_scaling", 1),
-    # ablations sweeps ~a dozen engine compiles even at tiny scale — worth
-    # smoke coverage, but only under --runslow
-    pytest.param("ablations", None, marks=pytest.mark.slow),
-]
+_BENCH_DIR = pathlib.Path(__file__).resolve().parent.parent / "benchmarks"
+FIG_MODULES = sorted(p.stem for p in _BENCH_DIR.glob("fig*.py"))
 
 
-@pytest.mark.parametrize("name,max_compiles", FIG_MODULES)
-def test_figure_script_runs_at_tiny_scale(name, max_compiles, monkeypatch):
+def test_discovery_finds_the_figure_scripts():
+    assert len(FIG_MODULES) >= 6  # fig2..fig7 at time of writing
+
+
+@pytest.mark.parametrize("name", FIG_MODULES)
+def test_figure_script_runs_at_tiny_scale(name, monkeypatch):
     mod = importlib.import_module(f"benchmarks.{name}")
+    assert hasattr(mod, "SMOKE_COMPILES"), (
+        f"benchmarks/{name}.py must declare SMOKE_COMPILES — the exact "
+        "number of _mc_core compiles its run() performs (one per engine "
+        "sweep)")
     for attr, val in TINY.items():
         if hasattr(mod, attr):
             monkeypatch.setattr(mod, attr, val)
@@ -46,8 +52,21 @@ def test_figure_script_runs_at_tiny_scale(name, max_compiles, monkeypatch):
     rows = mod.run(verbose=False)
     assert rows, f"{name}.run() returned no rows"
     assert all(isinstance(r, str) and r for r in rows)
-    if max_compiles is not None and cleared:
+    if cleared:
         compiles = mc_mod.trace_count() - c0
-        assert compiles <= max_compiles, (
-            f"{name}.run() compiled _mc_core {compiles}x "
-            f"(allowed {max_compiles}) — per-N/per-algo compile regression")
+        assert compiles == mod.SMOKE_COMPILES, (
+            f"{name}.run() compiled _mc_core {compiles}x, declared "
+            f"SMOKE_COMPILES={mod.SMOKE_COMPILES} — a per-N/per-algo/"
+            "per-M compile regression (or an undeclared new sweep)")
+
+
+# ablations sweeps ~a dozen engine compiles even at tiny scale — worth
+# smoke coverage, but only under --runslow
+@pytest.mark.slow
+def test_ablations_run_at_tiny_scale(monkeypatch):
+    mod = importlib.import_module("benchmarks.ablations")
+    for attr, val in TINY.items():
+        if hasattr(mod, attr):
+            monkeypatch.setattr(mod, attr, val)
+    rows = mod.run(verbose=False)
+    assert rows and all(isinstance(r, str) and r for r in rows)
