@@ -18,6 +18,11 @@
    as data, a single compile) vs one engine call — one compile — per
    antenna count M. Timed cold, like 2.: the antenna count is a draw-shape
    choice, so without the counts-as-data key split every M costs a compile.
+
+4. fig8 batch-fraction sweep (stochastic federated logistic): ONE per-row
+   `batch_frac` engine call (the minibatch lane count is traced data) vs
+   one engine call — one compile — per fraction (each fraction changes the
+   static minibatch width `b_max`). Timed cold.
 """
 from __future__ import annotations
 
@@ -40,6 +45,10 @@ STEPS = 300
 SEEDS = 4
 SWEEP_N_GRID = (100, 200, 400)
 SWEEP_M_GRID = (2, 8, 32)
+# fractions < 1.0 only: a scalar batch_frac=1.0 takes the static
+# no-sampling path (a different, cheaper program than a sweep row), so
+# including it would time non-equivalent computations
+SWEEP_FRAC_GRID = (0.75, 0.5, 0.25)
 OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_montecarlo.json")
 
 
@@ -169,14 +178,59 @@ def bench_m_sweep() -> dict:
     }
 
 
+def bench_frac_sweep() -> dict:
+    """fig8's batch-fraction sweep (stochastic logistic): per-row traced
+    minibatch lane counts batch every fraction into one compile vs one
+    compile per static fraction."""
+    from repro.core.montecarlo import logistic_mc_problem
+    from repro.data.synthetic import logistic_classification
+
+    n, k, dim = 40, 6, 16
+    X, y, _ = logistic_classification(n * k, dim=dim, seed=0)
+    prob = logistic_mc_problem(X, y, n, lam=0.1)
+    ch = ChannelConfig(fading="rayleigh", scale=1.0, noise_std=0.5,
+                       energy=1.0 / n)
+    beta = 0.3
+
+    def per_frac():
+        return [run_mc(prob, [ch], "gbma", [beta], STEPS, SEEDS,
+                       batch_frac=f).mean[0] for f in SWEEP_FRAC_GRID]
+
+    def one_compile():
+        return list(run_mc(prob, [ch] * len(SWEEP_FRAC_GRID), "gbma",
+                           [beta] * len(SWEEP_FRAC_GRID), STEPS, SEEDS,
+                           batch_frac=SWEEP_FRAC_GRID).mean)
+
+    t_per, curves_per, compiles_per = _time_cold(per_frac)
+    t_one, curves_one, compiles_one = _time_cold(one_compile)
+    rel = float(max(
+        np.max(np.abs(cp - cs) / np.maximum(np.abs(cs), 1e-12))
+        for cp, cs in zip(curves_one, curves_per)))
+    return {
+        "workload": {"problem": "federated_logistic", "n_nodes": n,
+                     "samples_per_node": k,
+                     "frac_grid": list(SWEEP_FRAC_GRID), "steps": STEPS,
+                     "seeds": SEEDS, "fading": "rayleigh",
+                     "timing": "cold, compiles included"},
+        "per_frac_compile_s": round(t_per, 4),
+        "per_frac_compiles": compiles_per,
+        "one_compile_s": round(t_one, 4),
+        "one_compile_compiles": compiles_one,
+        "speedup": round(t_per / t_one, 2),
+        "max_rel_curve_diff": rel,
+    }
+
+
 def run(verbose: bool = True) -> list[str]:
     single = bench_single_config()
     sweep = bench_n_sweep()
     m_sweep = bench_m_sweep()
+    frac_sweep = bench_frac_sweep()
     record = {
         **single,
         "n_sweep": sweep,
         "fig7_m_sweep": m_sweep,
+        "fig8_frac_sweep": frac_sweep,
         "jax_version": jax.__version__,
         "backend": jax.default_backend(),
     }
@@ -204,6 +258,15 @@ def run(verbose: bool = True) -> list[str]:
         f"bench_montecarlo,fig7_m_sweep_speedup,{m_sweep['speedup']:.2f}",
         f"bench_montecarlo,fig7_m_sweep_max_rel_curve_diff,"
         f"{m_sweep['max_rel_curve_diff']:.2e}",
+        f"bench_montecarlo,fig8_frac_sweep_per_frac_s,"
+        f"{frac_sweep['per_frac_compile_s']:.4f}"
+        f",compiles={frac_sweep['per_frac_compiles']}",
+        f"bench_montecarlo,fig8_frac_sweep_one_compile_s,"
+        f"{frac_sweep['one_compile_s']:.4f}"
+        f",compiles={frac_sweep['one_compile_compiles']}",
+        f"bench_montecarlo,fig8_frac_sweep_speedup,{frac_sweep['speedup']:.2f}",
+        f"bench_montecarlo,fig8_frac_sweep_max_rel_curve_diff,"
+        f"{frac_sweep['max_rel_curve_diff']:.2e}",
         f"bench_montecarlo,json,{OUT_PATH}",
     ]
     if verbose:

@@ -1,0 +1,117 @@
+"""Beyond-paper Fig. 8: federated logistic regression over the fading MAC.
+
+The paper's experiments (§VI) are deterministic full-gradient problems.
+The related federated-SGD line (Amiri & Gündüz, arXiv:1907.09769; the
+accelerated follow-up Paul, Friedman & Cohen, arXiv:2107.12452) runs
+*stochastic* local gradients over the same channel — each node holds a
+shard of a global dataset and transmits a minibatch gradient per slot.
+This figure exercises the engine's stochastic-problem support: the
+`logistic` problem kind (non-iid label-sorted shards via
+`repro.data.federated`) draws per-slot local minibatches INSIDE the scan,
+sized by the `run_mc(batch_frac=...)` knob.
+
+(a) node-count sweep at minibatch fraction 1/2: precoded GBMA vs blind
+    transmitters (M antennas, no CSI) vs centralized SGD, i.i.d. Rayleigh,
+    E_N = 1/N. Non-convexity is absent (regularized logistic is strongly
+    convex) but no closed-form risk exists — the excess objective
+    F(θ) − F* is evaluated on-device against a host-side f64 Newton F*.
+(b) batch-fraction sweep at fixed N: the SGD gradient-noise floor rises as
+    the minibatch shrinks while per-slot energy falls; fractions batch
+    per-row, so the whole sweep is one compile.
+
+Each sweep runs as ONE engine call — a single `_mc_core` compile —
+(asserted via SMOKE_COMPILES): node counts pad/mask, antenna counts
+replay their key splits with the count as data, and the batch fraction is
+a traced per-row lane count.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.channel import ChannelConfig
+from repro.core.montecarlo import logistic_mc_problem, run_mc
+from repro.data.synthetic import logistic_classification
+
+N_GRID = (20, 40, 80)
+N = 40              # fixed node count for the batch-fraction sweep
+M = 16              # edge antennas for the blind rows
+SAMPLES_PER_NODE = 6
+DIM = 16
+LAMBDA = 0.1
+STEPS = 300
+SEEDS = 4
+BATCH_FRAC = 0.5    # minibatch fraction for the N-sweep
+FRAC_GRID = (1.0, 0.5, 0.25)
+SMOKE_COMPILES = 2  # one compile per sweep, asserted by the smoke test
+
+_ALGOS = ("gbma", "blind", "centralized")
+
+
+def _make(n: int):
+    X, y, _ = logistic_classification(n * SAMPLES_PER_NODE, dim=DIM, seed=0)
+    prob = logistic_mc_problem(X, y, n, lam=LAMBDA)
+    # logistic smoothness: L <= 0.25 λ_max(XᵀX/n) + λ
+    L = 0.25 * float(np.linalg.eigvalsh(X.T @ X / X.shape[0])[-1]) + LAMBDA
+    return prob, 1.0 / L
+
+
+def _channel(n: int) -> ChannelConfig:
+    return ChannelConfig(fading="rayleigh", scale=1.0, noise_std=0.5,
+                         energy=1.0 / float(n))
+
+
+def run(verbose: bool = True) -> list[str]:
+    rows = []
+
+    # ---- (a) node-count sweep at fixed minibatch fraction ----------------
+    probs, chs, algos, betas, ants = [], [], [], [], []
+    for n in N_GRID:
+        prob, beta = _make(n)
+        ch = _channel(n)
+        for a in _ALGOS:
+            probs.append(prob)
+            chs.append(ch)
+            algos.append(a)
+            # gbma's superposition carries the mean channel gain μ_h;
+            # blind (MRC-normalized) and centralized see gain ≈ 1
+            betas.append(beta / ch.mu_h if a == "gbma" else beta)
+            ants.append(M if a == "blind" else 1)
+    res = run_mc(probs, chs, tuple(algos), betas, STEPS, SEEDS,
+                 n_antennas=tuple(ants), batch_frac=BATCH_FRAC)
+    for i, n in enumerate(N_GRID):
+        init = res.mean[len(_ALGOS) * i][0]
+        fin = {a: res.mean[len(_ALGOS) * i + j][-1]
+               for j, a in enumerate(_ALGOS)}
+        for a in _ALGOS:
+            rows.append(f"fig8a,N={n},frac={BATCH_FRAC},final_excess,{a},"
+                        f"{fin[a]:.6e}")
+        rows.append(f"fig8a,N={n},gbma_converges,"
+                    f"{int(fin['gbma'] < 0.5 * init)}")
+        rows.append(f"fig8a,N={n},blind_within_10x_gbma,"
+                    f"{int(fin['blind'] <= 10.0 * max(fin['gbma'], 1e-12))}")
+
+    # ---- (b) batch-fraction sweep at fixed N: one engine call ------------
+    prob, beta = _make(N)
+    ch = _channel(N)
+    res = run_mc(prob, [ch] * len(FRAC_GRID), "gbma",
+                 [beta / ch.mu_h] * len(FRAC_GRID), STEPS, SEEDS,
+                 batch_frac=FRAC_GRID)
+    init = res.mean[0][0]
+    for i, f in enumerate(FRAC_GRID):
+        fin = res.mean[i][-1]
+        rows.append(f"fig8b,N={N},frac={f},final_excess,{fin:.6e}")
+        rows.append(f"fig8b,N={N},frac={f},converges,"
+                    f"{int(fin < 0.5 * init)}")
+    # energy falls with the fraction (smaller minibatch -> smaller ||g||
+    # is NOT guaranteed, but fewer effective samples leave the gradient
+    # scale ~constant; report the measured totals instead of asserting)
+    for i, f in enumerate(FRAC_GRID):
+        tot = float(np.mean(res.cum_energy[i, :, -1]))
+        rows.append(f"fig8b,N={N},frac={f},total_energy,{tot:.6e}")
+    if verbose:
+        print("\n".join(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -10,7 +10,8 @@ def main() -> None:
     from benchmarks import (ablations, bench_montecarlo, fig2_equal_gains,
                             fig3_rayleigh, fig4_fdm_comparison,
                             fig5_localization, fig6_energy_scaling,
-                            fig7_blind_transmitters, roofline)
+                            fig7_blind_transmitters,
+                            fig8_federated_logistic, roofline)
 
     modules = [
         ("fig2_equal_gains (paper Fig. 2)", fig2_equal_gains),
@@ -20,6 +21,8 @@ def main() -> None:
         ("fig6_energy_scaling (paper Fig. 6)", fig6_energy_scaling),
         ("fig7_blind_transmitters (beyond-paper: Amiri/Duman/Gündüz "
          "no-CSI baseline)", fig7_blind_transmitters),
+        ("fig8_federated_logistic (beyond-paper: stochastic federated "
+         "logistic regression over the MAC)", fig8_federated_logistic),
         ("ablations (beyond-paper: phase error / fading / power control)",
          ablations),
         ("bench_montecarlo (engine vs seed per-seed loop)", bench_montecarlo),

@@ -20,9 +20,13 @@ from repro.core.baselines import CentralizedGD, FDMGD, PowerControlOTA
 from repro.core.montecarlo import (
     ChannelBatch,
     MCProblem,
+    MCProblemBatch,
     MCResult,
     localization_mc_problem,
+    logistic_mc_problem,
     quadratic_mc_problem,
+    register_algo,
+    register_problem,
     run_mc,
 )
 from repro.core import theory, waveform
@@ -31,9 +35,13 @@ __all__ = [
     "ChannelBatch",
     "ChannelConfig",
     "MCProblem",
+    "MCProblemBatch",
     "MCResult",
     "localization_mc_problem",
+    "logistic_mc_problem",
     "quadratic_mc_problem",
+    "register_algo",
+    "register_problem",
     "run_mc",
     "GBMAConfig",
     "GBMASimulator",

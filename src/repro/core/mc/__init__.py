@@ -1,0 +1,71 @@
+"""Pluggable Monte Carlo engine for OTA gradient-descent experiments.
+
+Layers (see each module's docstring):
+
+  * `problems` — problem containers + the open `PROBLEMS` registry
+    (`register_problem`); built-ins `quadratic`, `localization`, and the
+    stochastic-capable `logistic`.
+  * `sampling` — reference-twin RNG samplers (padded / dynamic-count
+    threefry draws, antenna key replay).
+  * `slots`    — per-slot algorithm updates behind `register_algo`
+    (`ALGOS` derives from the registry).
+  * `engine`   — the compiled `_mc_core`, `run_mc`, `MCResult`,
+    `ChannelBatch`, `energy_to_target`.
+
+`repro.core.montecarlo` remains the back-compat import path.
+"""
+from repro.core.mc.engine import (
+    ChannelBatch,
+    MCResult,
+    clear_cache,
+    energy_to_target,
+    run_mc,
+    trace_count,
+)
+from repro.core.mc.problems import (
+    MCProblem,
+    MCProblemBatch,
+    PROBLEMS,
+    ProblemSpec,
+    localization_mc_problem,
+    logistic_mc_problem,
+    quadratic_mc_problem,
+    register_problem,
+)
+from repro.core.mc.slots import (
+    ALGO_REGISTRY,
+    AlgoSpec,
+    SlotCtx,
+    register_algo,
+)
+
+
+def __getattr__(name: str):
+    if name in ("ALGOS", "_OTA_ALGOS", "_BLIND_ALGOS"):
+        from repro.core.mc import slots
+
+        return getattr(slots, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [
+    "ALGO_REGISTRY",
+    "ALGOS",
+    "AlgoSpec",
+    "ChannelBatch",
+    "MCProblem",
+    "MCProblemBatch",
+    "MCResult",
+    "PROBLEMS",
+    "ProblemSpec",
+    "SlotCtx",
+    "clear_cache",
+    "energy_to_target",
+    "localization_mc_problem",
+    "logistic_mc_problem",
+    "quadratic_mc_problem",
+    "register_algo",
+    "register_problem",
+    "run_mc",
+    "trace_count",
+]

@@ -1,0 +1,584 @@
+"""Batched, jitted Monte Carlo engine core.
+
+The paper's figures reproduce the expectation in Eq. (14) by averaging
+excess-risk curves over seeds; the engine runs a whole sweep as one
+compiled call:
+
+    shard_map(seeds over 'mc' devices) ∘ vmap(rows) ∘ vmap(seeds) ∘ scan(steps)
+
+with the excess-risk curve computed **on-device inside the scan**. A batch
+row is a (problem, channel params, algo, stepsize) tuple; problems come
+from the `PROBLEMS` registry (`mc/problems.py`), per-slot algorithm updates
+from the `ALGO_REGISTRY` (`mc/slots.py`), and every RNG draw from the
+reference-twin samplers (`mc/sampling.py`). `repro.core.montecarlo` is the
+back-compat façade re-exporting this package's public surface.
+
+Stochastic problems (a registered `stochastic_grad_row`, e.g. `logistic`)
+draw per-slot minibatch indices INSIDE the scan from a dedicated data-key
+stream (`fold_in(trajectory key, _DATA_STREAM)` — disjoint from the slot
+keys, so channel/noise draws are unchanged by the minibatching). The
+minibatch size is the `run_mc(batch_frac=...)` knob — scalar or per-row,
+so a batch-fraction sweep is ONE compile; `batch_frac=1.0` (the default)
+statically disables sampling and is bit-identical to running the same
+problem registered without a stochastic gradient.
+
+`run_mc(ota_impl=)` routes the single-antenna OTA superposition through
+`repro.kernels.ota.ota_edge_aggregate` ('pallas' on TPU / 'ref' jnp
+oracle); 'auto' picks pallas on TPU when eligible and the inline einsum
+otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core.channel import ChannelConfig
+from repro.core.mc.problems import MCProblem, MCProblemBatch, PROBLEMS
+from repro.core.mc.slots import ALGO_REGISTRY, SlotCtx
+from repro.core.theory import ProblemConstants, theorem1_bound
+
+Array = jax.Array
+
+# fold_in constant deriving the per-trajectory minibatch key stream from
+# the trajectory key — disjoint from the `split(key, steps)` slot keys
+_DATA_STREAM = 0x64617461  # b"data"
+
+
+# --------------------------------------------------------------------------
+# batched channel parameters
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ChannelBatch:
+    """Stack of C `ChannelConfig`s sharing one fading family.
+
+    The family string is static (it selects the gain-sampling code path);
+    everything else is a (C,) f32 array and vmaps in a single compile.
+    """
+
+    fading: str
+    params: dict  # {'scale','noise_std','energy','phase_error_max','rician_k'}
+    configs: tuple  # the original ChannelConfigs (host side, for bounds)
+
+    @classmethod
+    def stack(cls, cfgs: Sequence[ChannelConfig]) -> "ChannelBatch":
+        fams = {c.fading for c in cfgs}
+        if len(fams) != 1:
+            raise ValueError(
+                f"one ChannelBatch = one fading family, got {sorted(fams)}; "
+                "issue one run_mc call per family")
+        arr = lambda name: jnp.asarray(
+            [getattr(c, name) for c in cfgs], jnp.float32)
+        return cls(
+            fading=cfgs[0].fading,
+            params={
+                "scale": arr("scale"),
+                "noise_std": arr("noise_std"),
+                "energy": arr("energy"),
+                "phase_error_max": arr("phase_error_max"),
+                "rician_k": arr("rician_k"),
+            },
+            configs=tuple(cfgs),
+        )
+
+    def __len__(self) -> int:
+        return len(self.configs)
+
+
+# --------------------------------------------------------------------------
+# results
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class MCResult:
+    """Host-side result of one engine call.
+
+    risks:      (C, S, steps+1) per-row per-seed excess-risk curves.
+    mean:       (C, steps+1) seed average (the Eq. 14 expectation estimate).
+    ci95:       (C, steps+1) 1.96 * standard error over seeds (0 if S == 1).
+    cum_energy: (C, S, steps) cumulative transmitted energy Σ E_N ||x_k||²
+                of the actually-transmitted vectors — x_k = g_k for every
+                algorithm except `blind_ec`, whose power budget truncates
+                x_k = α(g_k + e_k).
+    bounds:     (C, steps+1) Theorem-1 bound per row (None unless problem
+                constants were supplied AND every row is single-antenna
+                'gbma' — the setting Theorem 1 covers).
+    """
+
+    risks: np.ndarray
+    mean: np.ndarray
+    ci95: np.ndarray
+    cum_energy: np.ndarray
+    bounds: Optional[np.ndarray]
+
+
+_TRACE_COUNT = 0
+
+
+def trace_count() -> int:
+    """Number of times `_mc_core` has been traced (== XLA compiles of the
+    engine, since the python body runs once per jit cache miss)."""
+    return _TRACE_COUNT
+
+
+def clear_cache() -> bool:
+    """Drop the engine's compiled-program cache (compile-count tests, cold
+    benchmark timings). Returns False on JAX versions without jit
+    clear_cache support — callers should then skip compile-count asserts."""
+    if hasattr(_mc_core, "clear_cache"):
+        _mc_core.clear_cache()
+        return True
+    return False
+
+
+# --------------------------------------------------------------------------
+# compiled core
+# --------------------------------------------------------------------------
+@functools.partial(
+    jax.jit,
+    static_argnames=("grad_fn", "risk_fn", "row_based", "algo_set", "fading",
+                     "steps", "n_sizes", "n_antennas", "m_sizes",
+                     "invert_channel", "h_min", "n_shards", "sgrad_fn",
+                     "b_max", "ota_impl"),
+)
+def _mc_core(params, betas, theta0, seeds, data, *, grad_fn, risk_fn,
+             row_based, algo_set, fading, steps, n_sizes, n_antennas,
+             m_sizes, invert_channel, h_min, n_shards, sgrad_fn=None,
+             b_max=0, ota_impl="inline"):
+    """(C,)-batched rows × (S,) seeds × scan(steps), seeds sharded on 'mc'.
+
+    `algo_set` is the deduped algorithm tuple; the row-to-algorithm
+    assignment is traced data (params['algo_idx']), so re-assigning rows
+    among the same algorithms reuses the compiled program. Rows sharing one
+    algorithm skip the dispatch switch. The momentum carry unifies all step
+    rules: m_{k+1} = γ m_k + v_k and θ_{k+1} = θ_k − β m_{k+1} reduce
+    bit-exactly to vanilla GD at γ = 0 (0·m = 0, 0 + v = v), and the
+    Nesterov lookahead θ − nest·βγ·m is exactly θ when the row's nest flag
+    is 0.
+
+    When `algo_set` contains an error-feedback algorithm (`blind_ec`) the
+    scan carry additionally holds the per-node residual e (n_max, d): rows
+    flagged p['ec']=1 transmit x = α(g + e) with the power-budget scaling
+    α = min(1, √(B/‖g+e‖²)) per node and carry e ← (g+e) − x forward
+    (error accumulation of 1907.09769); all other rows select α = 1 and
+    reduce bit-exactly to x = g — even when their own α expression is NaN
+    (an overflowing row under the default unbounded budget hits inf/inf).
+    The transmitted energy is always computed from x — identical to the
+    g-based accounting whenever no truncation happened.
+
+    `sgrad_fn` (static; a registered `stochastic_grad_row`) switches the
+    gradient to a per-slot minibatch: each step consumes one key of the
+    dedicated data-key stream and the row's traced params['b_count'] picks
+    how many of the static `b_max` index lanes count.
+    """
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1  # python side effect: runs once per trace/compile
+
+    # gains-consuming slot types, single-antenna: eligible for hoisting the
+    # per-N sampling switch out of the scan (see `hoist` below)
+    hoistable = n_antennas is None and not m_sizes and any(
+        ALGO_REGISTRY[a].hoist_gains(invert_channel) for a in algo_set)
+    use_ec = any(ALGO_REGISTRY[a].error_feedback for a in algo_set)
+
+    def trajectory(p, beta, row, seed, t0):
+        key = jax.random.key(seed)
+
+        def make_ctx(h_slot):
+            return SlotCtx(fading=fading, p=p, mask=row["mask"],
+                           n_sizes=n_sizes, n_antennas=n_antennas,
+                           m_sizes=m_sizes, invert_channel=invert_channel,
+                           h_min=h_min, h_slot=h_slot, ota_impl=ota_impl)
+
+        def slot(g, k, h_slot):
+            ctx = make_ctx(h_slot)
+            if len(algo_set) == 1:
+                return ALGO_REGISTRY[algo_set[0]].slot_fn(g, k, ctx)
+            branches = [
+                (lambda kk, a=a: ALGO_REGISTRY[a].slot_fn(g, kk, ctx))
+                for a in algo_set
+            ]
+            return jax.lax.switch(p["algo_idx"], branches, k)
+
+        def body(carry, x):
+            k, h_slot, dk = x
+            if use_ec:
+                theta, m, e_res, cum_e = carry
+            else:
+                theta, m, cum_e = carry
+            theta_eval = theta - p["nest"] * beta * p["gamma"] * m
+            if sgrad_fn is not None:
+                g = sgrad_fn(row, theta_eval, dk, p["b_count"], b_max)
+            else:
+                g = (grad_fn(row, theta_eval) if row_based
+                     else grad_fn(theta_eval))
+            risk = risk_fn(row, theta) if row_based else risk_fn(theta)
+            if use_ec:
+                u = g + p["ec"] * e_res
+                sq = jnp.sum(u * u, axis=1)
+                alpha = jnp.minimum(1.0, jnp.sqrt(
+                    p["tx_budget"] / jnp.maximum(sq, 1e-30)))
+                # select, don't blend: inf/inf above is NaN (e.g. an
+                # overflowing row with the default unbounded budget) and
+                # 0*NaN would leak it into ec=0 rows
+                alpha = jnp.where(p["ec"] > 0, alpha, 1.0)
+                x_tx = alpha[:, None] * u
+                e_res = p["ec"] * (u - x_tx)
+            else:
+                x_tx = g
+            cum_e = cum_e + p["energy"] * jnp.sum(
+                x_tx.astype(jnp.float32) ** 2)
+            v = slot(x_tx, k, h_slot)
+            m = p["gamma"] * m + v
+            theta = theta - beta * m
+            carry = (theta, m, e_res, cum_e) if use_ec \
+                else (theta, m, cum_e)
+            return carry, (risk, cum_e)
+
+        step_keys = jax.random.split(key, steps)
+        data_keys = None
+        if sgrad_fn is not None:
+            data_keys = jax.random.split(
+                jax.random.fold_in(key, _DATA_STREAM), steps)
+        h_all = None
+        if len(n_sizes) > 1 and hoistable:
+            # Node-count sweep: sample every slot's gains up front, once,
+            # instead of tracing the per-N `lax.switch` branches into the
+            # scan body (which multiplies the XLA program and its compile
+            # time — the very cost the padded N axis exists to remove).
+            # Stream-identical: each step key is split exactly as the slot
+            # fns would split it, and the k_h half feeds the same padded
+            # sampler. The dynamic-count sampler (one static-shape threefry
+            # program for all N) is preferred; the per-N `lax.switch`
+            # sampler is the fallback when the raw primitive is unavailable
+            # or a non-threefry PRNG is active.
+            from repro.core.mc import sampling
+
+            n_max_ = row["mask"].shape[0]
+            k_hs = jax.vmap(lambda k: jax.random.split(k)[0])(step_keys)
+            if sampling._dynamic_threefry_ok():
+                sample = lambda kh: sampling._sample_gains_dynamic_n(
+                    kh, fading, p, n_max_)
+            else:
+                sample = lambda kh: sampling._sample_gains_padded(
+                    kh, fading, p, n_sizes, n_max_)
+            h_all = jax.vmap(sample)(k_hs)
+        carry0 = (t0, jnp.zeros_like(t0), jnp.float32(0.0))
+        if use_ec:
+            carry0 = (t0, jnp.zeros_like(t0),
+                      jnp.zeros((row["mask"].shape[0], t0.shape[0]),
+                                jnp.float32), jnp.float32(0.0))
+        carry_fin, (risks, cum_e) = jax.lax.scan(
+            body, carry0, (step_keys, h_all, data_keys))
+        theta_fin = carry_fin[0]
+        fin = risk_fn(row, theta_fin) if row_based else risk_fn(theta_fin)
+        risks = jnp.concatenate([risks, fin[None]])
+        return risks, cum_e  # (steps+1,), (steps,)
+
+    def seed_block(seeds_blk, params, betas, theta0, data):
+        per_config = jax.vmap(
+            lambda p, b, row: jax.vmap(
+                lambda s: trajectory(p, b, row, s, theta0))(seeds_blk))
+        return per_config(params, betas, data)
+
+    if n_shards > 0:
+        mesh = compat.make_mesh((n_shards,), ("mc",))
+        seed_block = compat.shard_map(
+            seed_block, mesh=mesh,
+            in_specs=(P("mc"), P(), P(), P(), P()),
+            out_specs=(P(None, "mc"), P(None, "mc")))
+    return seed_block(seeds, params, betas, theta0, data)
+
+
+def _resolve_n_shards(n_seeds: int, shard_seeds: Optional[bool]) -> int:
+    """0 = plain path; k > 0 = shard_map over a ('mc',) mesh of k devices."""
+    if shard_seeds is False:
+        return 0
+    ndev = jax.device_count()
+    if shard_seeds is None:
+        return ndev if (ndev > 1 and n_seeds % ndev == 0) else 0
+    if n_seeds % ndev != 0:
+        raise ValueError(
+            f"shard_seeds=True needs seeds ({n_seeds}) divisible by the "
+            f"device count ({ndev})")
+    return ndev
+
+
+def _resolve_ota_impl(ota_impl: str, n_sizes: tuple) -> str:
+    """'auto' → 'pallas' on TPU when the kernel applies, 'inline' else.
+
+    The OTA kernel normalizes by a STATIC node count, so it only applies
+    when every row transmits at the same (full, unpadded) N — explicit
+    'pallas'/'ref' on a padded node-count sweep is an error rather than a
+    silent wrong normalization.
+    """
+    if ota_impl not in ("auto", "pallas", "ref"):
+        raise ValueError(
+            f"ota_impl must be 'auto', 'pallas' or 'ref', got {ota_impl!r}")
+    eligible = len(n_sizes) == 1
+    if ota_impl == "auto":
+        return "pallas" if (eligible and jax.default_backend() == "tpu") \
+            else "inline"
+    if not eligible:
+        raise ValueError(
+            f"ota_impl={ota_impl!r} needs a single node count per call "
+            f"(got n_sizes={n_sizes}): the OTA kernel normalizes by the "
+            "static N, which a padded node-count sweep does not have")
+    return ota_impl
+
+
+def _resolve_batch_frac(batch_frac, n_rows: int, batch_prob, problem):
+    """-> (sgrad_fn, b_max, b_counts) for the stochastic path, or
+    (None, 0, None) for the static full-batch path."""
+    if isinstance(batch_frac, (int, float, np.integer, np.floating)):
+        fracs = (float(batch_frac),) * n_rows
+    else:
+        fracs = tuple(float(f) for f in batch_frac)
+        if len(fracs) != n_rows:
+            raise ValueError(f"need one batch_frac per row: "
+                             f"{len(fracs)} vs C={n_rows}")
+    if any(not (0.0 < f <= 1.0) for f in fracs):
+        raise ValueError(f"batch_frac must be in (0, 1], got {fracs}")
+    if all(f == 1.0 for f in fracs):
+        return None, 0, None  # exact full-batch gradients, no sampling
+    stochastic = batch_prob.stochastic if batch_prob is not None \
+        else getattr(problem, "stochastic", False)
+    kind = batch_prob.kind if batch_prob is not None \
+        else getattr(problem, "kind", "")
+    spec = PROBLEMS.get(kind)
+    if not stochastic or spec is None or spec.stochastic_grad_row is None:
+        raise ValueError(
+            f"batch_frac={fracs} needs a stochastic problem kind (a "
+            "registered stochastic_grad_row); "
+            f"got kind={kind!r}")
+    data = batch_prob.data if batch_prob is not None else problem.data
+    k = data[spec.sample_axis_field].shape[-2]
+    b_counts = tuple(max(1, int(round(f * k))) for f in fracs)
+    return spec.stochastic_grad_row, max(b_counts), b_counts
+
+
+# --------------------------------------------------------------------------
+# public entry point
+# --------------------------------------------------------------------------
+def run_mc(
+    problem: Union[MCProblem, MCProblemBatch, Sequence[MCProblem]],
+    channels: Sequence[ChannelConfig] | ChannelBatch,
+    algo: str | Sequence[str],
+    betas: Sequence[float] | np.ndarray,
+    steps: int,
+    seeds: int,
+    *,
+    theta0: Optional[np.ndarray] = None,
+    seed0: int = 0,
+    n_antennas: Optional[Union[int, Sequence[int]]] = None,
+    invert_channel: bool = False,
+    h_min: float = 0.3,
+    pc: Optional[Union[ProblemConstants,
+                       Sequence[ProblemConstants]]] = None,
+    momentum: float = 0.9,
+    power_budget: Optional[Union[float, Sequence[float]]] = None,
+    shard_seeds: Optional[bool] = None,
+    batch_frac: Union[float, Sequence[float]] = 1.0,
+    ota_impl: str = "auto",
+) -> MCResult:
+    """Run `seeds` Monte Carlo trajectories for each batch row.
+
+    A row is a (problem, channel, algo, stepsize) tuple; `problem` and
+    `algo` broadcast when a single one is given. Passing a sequence of
+    problems (node counts may differ — they are padded to N_max) or a
+    sequence of algos runs the whole sweep in ONE engine compile.
+
+    Seed s uses `jax.random.key(seed0 + s)` — the same stream the sequential
+    reference path (`benchmarks.common.average_runs`) consumes, so results
+    are directly comparable. With `pc` supplied (one `ProblemConstants` or
+    one per row) the Theorem-1 bound rides along — only when every row is
+    single-antenna 'gbma', the setting Theorem 1 covers; mixed-algo calls
+    get `bounds=None`.
+
+    `n_antennas`: the edge antenna count M. An int broadcasts (static;
+    OTA algos take the MRC path, blind algos combine over M). A sequence
+    gives one M per row AS DATA — the antenna axis pads to max(M) and an
+    M-sweep batches into the same single compile (each row's key split
+    replays `split(key, m)` for its true m). Required for blind/blind_ec.
+
+    `power_budget`: per-slot, per-node transmit budget in squared-norm
+    units of the transmitted vector (scalar or one per row; default
+    unbounded). Only `blind_ec` rows enforce it, carrying the truncated
+    remainder in their local residual.
+
+    `shard_seeds` shards the seed axis over devices on a 'mc' mesh axis
+    (None: auto when divisible; no-op on one device).
+
+    `batch_frac` (scalar or one per row): fraction of each node's local
+    samples drawn per slot for stochastic problem kinds (`logistic`). 1.0
+    (default) computes the exact full-batch gradient with no sampling —
+    bit-identical to a deterministic registration of the same problem;
+    fractions < 1 draw with-replacement minibatches inside the scan, and a
+    per-row fraction sweep is one compile.
+
+    `ota_impl`: 'auto' (inline einsum; pallas kernel on TPU when the node
+    count is static), 'pallas' or 'ref' force the
+    `repro.kernels.ota.ota_edge_aggregate` path for the single-antenna OTA
+    superposition.
+    """
+    ch_batch = channels if isinstance(channels, ChannelBatch) \
+        else ChannelBatch.stack(list(channels))
+    n_rows = len(ch_batch)
+    betas = jnp.asarray(betas, jnp.float32)
+    if betas.shape != (n_rows,):
+        raise ValueError(f"need one stepsize per row: "
+                         f"{betas.shape} vs C={n_rows}")
+    algos = (algo,) * n_rows if isinstance(algo, str) else tuple(algo)
+    if len(algos) != n_rows:
+        raise ValueError(f"need one algo per row: {len(algos)} vs C={n_rows}")
+    for a in algos:
+        if a not in ALGO_REGISTRY:
+            raise ValueError(f"unknown algo {a!r}; expected one of "
+                             f"{tuple(ALGO_REGISTRY)}")
+    specs = [ALGO_REGISTRY[a] for a in algos]
+
+    # ---- normalize the antenna axis ------------------------------------
+    if n_antennas is None or isinstance(n_antennas, (int, np.integer)):
+        if n_antennas is not None:
+            n_antennas = int(n_antennas)
+        m_per_row, m_sizes = None, ()
+    else:
+        m_per_row = tuple(int(m) for m in n_antennas)
+        if len(m_per_row) != n_rows:
+            raise ValueError(f"need one antenna count per row: "
+                             f"{len(m_per_row)} vs C={n_rows}")
+        if any(m < 1 for m in m_per_row):
+            raise ValueError(f"antenna counts must be >= 1: {m_per_row}")
+        m_sizes = tuple(sorted(set(m_per_row)))
+        n_antennas = None  # the static broadcast arg is off in per-row mode
+    if any(s.blind for s in specs) and n_antennas is None and not m_sizes:
+        raise ValueError(
+            "blind/blind_ec need n_antennas (the edge antenna count M)")
+
+    # ---- normalize the problem axis ------------------------------------
+    if isinstance(problem, MCProblemBatch):
+        batch_prob = problem
+    elif isinstance(problem, MCProblem):
+        batch_prob = None  # closure path: one problem shared by all rows
+    else:
+        probs = list(problem)
+        if len(probs) == 1:
+            batch_prob = None
+            problem = probs[0]
+        else:
+            if len(probs) != n_rows:
+                raise ValueError(
+                    f"need one problem per row: {len(probs)} vs C={n_rows}")
+            batch_prob = MCProblemBatch.stack(probs)
+
+    # stochastic minibatching needs the row-based data path; lift a single
+    # broadcast problem into a C-row batch (cheap: data is small)
+    sgrad_fn, b_max, b_counts = _resolve_batch_frac(
+        batch_frac, n_rows, batch_prob, problem)
+    if sgrad_fn is not None and batch_prob is None:
+        batch_prob = MCProblemBatch.stack([problem] * n_rows)
+
+    if batch_prob is not None:
+        row_based = True
+        grad_fn, risk_fn = batch_prob.grad_fn, batch_prob.risk_fn
+        data = dict(batch_prob.data)
+        n_nodes = batch_prob.n_nodes
+        dim, n_max = batch_prob.dim, batch_prob.n_max
+    else:
+        row_based = False
+        grad_fn, risk_fn = problem.grad_fn, problem.risk_fn
+        n_nodes = (problem.n_nodes,) * n_rows
+        dim, n_max = problem.dim, problem.n_nodes
+        data = {"mask": jnp.ones((n_rows, n_max), jnp.float32)}
+
+    n_sizes = tuple(sorted(set(n_nodes)))
+    algo_set = tuple(dict.fromkeys(algos))
+    ota_resolved = _resolve_ota_impl(ota_impl, n_sizes)
+    params = dict(ch_batch.params)
+    params["n_nodes"] = jnp.asarray(n_nodes, jnp.float32)
+    params["n_idx"] = jnp.asarray(
+        [n_sizes.index(n) for n in n_nodes], jnp.int32)
+    params["algo_idx"] = jnp.asarray(
+        [algo_set.index(a) for a in algos], jnp.int32)
+    params["gamma"] = jnp.asarray(
+        [momentum if s.uses_gamma else 0.0 for s in specs], jnp.float32)
+    params["nest"] = jnp.asarray(
+        [1.0 if s.nesterov else 0.0 for s in specs], jnp.float32)
+    params["ec"] = jnp.asarray(
+        [1.0 if s.error_feedback else 0.0 for s in specs], jnp.float32)
+    if power_budget is None:
+        budgets = (float("inf"),) * n_rows
+    elif isinstance(power_budget, (int, float, np.integer, np.floating)):
+        budgets = (float(power_budget),) * n_rows
+    else:
+        budgets = tuple(float(b) for b in power_budget)
+        if len(budgets) != n_rows:
+            raise ValueError(f"need one power budget per row: "
+                             f"{len(budgets)} vs C={n_rows}")
+    params["tx_budget"] = jnp.asarray(budgets, jnp.float32)
+    if m_sizes:
+        params["n_antennas"] = jnp.asarray(m_per_row, jnp.float32)
+        params["m_idx"] = jnp.asarray(
+            [m_sizes.index(m) for m in m_per_row], jnp.int32)
+    if b_counts is not None:
+        params["b_count"] = jnp.asarray(b_counts, jnp.float32)
+
+    t0 = jnp.zeros((dim,), jnp.float32) if theta0 is None \
+        else jnp.asarray(theta0, jnp.float32)
+    seed_ints = jnp.arange(seed0, seed0 + seeds, dtype=jnp.int32)
+    n_shards = _resolve_n_shards(seeds, shard_seeds)
+    risks, cum_e = _mc_core(
+        params, betas, t0, seed_ints, data,
+        grad_fn=grad_fn, risk_fn=risk_fn, row_based=row_based,
+        algo_set=algo_set, fading=ch_batch.fading, steps=steps,
+        n_sizes=n_sizes, n_antennas=n_antennas, m_sizes=m_sizes,
+        invert_channel=invert_channel, h_min=h_min, n_shards=n_shards,
+        sgrad_fn=sgrad_fn, b_max=b_max, ota_impl=ota_resolved)
+    risks = np.asarray(risks)
+    mean = np.mean(risks, axis=1)
+    if seeds > 1:
+        ci95 = 1.96 * np.std(risks, axis=1, ddof=1) / np.sqrt(seeds)
+    else:
+        ci95 = np.zeros_like(mean)
+    bounds = None
+    if pc is not None:
+        pcs = [pc] * n_rows if isinstance(pc, ProblemConstants) else list(pc)
+        if len(pcs) != n_rows:
+            raise ValueError(f"need one ProblemConstants per row: "
+                             f"{len(pcs)} vs C={n_rows}")
+        if all(s.theorem1 for s in specs) and n_antennas is None \
+                and not m_sizes:
+            ks = np.arange(1, steps + 2)
+            bounds = np.stack([
+                theorem1_bound(ks, float(b), row_pc, cfg, n)
+                for b, cfg, row_pc, n in zip(
+                    np.asarray(betas), ch_batch.configs, pcs, n_nodes)])
+    return MCResult(
+        risks=risks, mean=mean.astype(np.float32),
+        ci95=ci95.astype(np.float32), cum_energy=np.asarray(cum_e),
+        bounds=bounds)
+
+
+def energy_to_target(res: MCResult, target: float) -> np.ndarray:
+    """Per-row mean (over seeds) total transmitted energy until the risk
+    curve first hits `target` (paper Fig. 6).
+
+    risks[k] is the risk of θ_k, reached after k transmission slots, and
+    cum_energy[j] is the energy of slots 1..j+1 — so a first hit at index
+    k costs cum_energy[k-1], and a target already met at initialization
+    (k == 0) costs nothing. Seeds that never hit spend the full-horizon
+    energy.
+    """
+    c, s, kp1 = res.risks.shape
+    hit_mask = res.risks <= target
+    hit = np.argmax(hit_mask, axis=2)  # first True, 0 when none
+    hit = np.where(hit_mask.any(axis=2), hit, kp1 - 1)
+    # prepend the zero-cost column so index k charges cum_energy[k-1]
+    ce = np.concatenate(
+        [np.zeros((c, s, 1), res.cum_energy.dtype), res.cum_energy], axis=2)
+    per_seed = np.take_along_axis(ce, hit[:, :, None], axis=2)[..., 0]
+    return per_seed.mean(axis=1)

@@ -1,0 +1,307 @@
+"""Per-slot algorithm updates behind an open registry.
+
+One MAC slot maps the transmitted per-node vectors (n_max, d) to the
+received update (d,). Each algorithm registers a `slot_fn(g, key, ctx)`
+via `register_algo(...)` together with the flags the engine needs
+(momentum/Nesterov/error-feedback carries, antenna requirements, gain
+hoisting, Theorem-1 applicability); `ALGOS` is derived from the registry,
+and the old `_slot_update` if-chain is now a table lookup. Adding an
+algorithm is a registration — the engine (`mc/engine.py`) builds its
+dispatch switch and scan carries from the flags.
+
+The `SlotCtx` bundles everything a slot sees besides the transmitted
+vectors and the slot key: the static compile choices (fading family, node
+and antenna size grids, `invert_channel`, `h_min`, the OTA kernel impl)
+plus the row's traced params `p` and mask. RNG notes live on each slot fn
+— the split orders mirror the reference simulators exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mc.sampling import (
+    _antenna_keys,
+    _dynamic_threefry_ok,
+    _magnitude_m2,
+    _normal_dynamic_n,
+    _normal_padded,
+    _row_complex_gains,
+    _row_gains,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotCtx:
+    """Slot-call context: static engine choices + this row's traced params.
+
+    p:        traced per-row params (channel scalars, n_nodes, flags).
+    mask:     (n_max,) validity mask of the padded node axis.
+    n_sizes:  distinct true node counts in the batch (static).
+    n_antennas: static broadcast antenna count (None = single antenna,
+              RNG-identical to `GBMASimulator`).
+    m_sizes:  distinct per-row antenna counts (static; empty = broadcast).
+    h_slot:   this slot's pre-sampled gain vector when the engine hoisted
+              the gain sampling out of the scan (node-count sweeps); drawn
+              from exactly the k_h the slot fn would have split off.
+    ota_impl: 'inline' (engine einsum) or 'pallas'/'ref'/'auto' to route
+              the OTA superposition through `repro.kernels.ota`.
+    """
+
+    fading: str
+    p: dict
+    mask: Array
+    n_sizes: tuple
+    n_antennas: Optional[int]
+    m_sizes: tuple
+    invert_channel: bool
+    h_min: float
+    h_slot: Optional[Array] = None
+    ota_impl: str = "inline"
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgoSpec:
+    """One registered algorithm.
+
+    slot_fn(g, key, ctx) -> (d,) received update for transmitted g.
+    ota:            receives the OTA superposition of Eq. (8) (the MAC
+                    slot is shared) — the old `_OTA_ALGOS` membership.
+    blind:          no-CSI transmitter family (M-antenna MRC edge) — the
+                    old `_BLIND_ALGOS`; requires `n_antennas`.
+    uses_gamma:     row takes the `run_mc(momentum=)` coefficient (the
+                    momentum carry is universal; γ=0 rows reduce to
+                    vanilla GD bit-exactly).
+    nesterov:       gradient evaluated at the lookahead θ − βγm.
+    error_feedback: row carries the per-node residual + power-budget
+                    truncation in the scan (`blind_ec` semantics).
+    hoist_gains(invert_channel) -> bool: whether the slot's scalar-gain
+                    draw may be hoisted out of the scan on node-count
+                    sweeps (single-antenna only; the engine checks the
+                    antenna config separately).
+    theorem1:       the Theorem-1 bound applies (single-antenna precoded
+                    GBMA — the setting the theorem covers).
+    """
+
+    name: str
+    slot_fn: Callable[[Array, Array, SlotCtx], Array]
+    ota: bool = False
+    blind: bool = False
+    uses_gamma: bool = False
+    nesterov: bool = False
+    error_feedback: bool = False
+    hoist_gains: Callable[[bool], bool] = staticmethod(lambda inv: False)
+    theorem1: bool = False
+
+
+ALGO_REGISTRY: dict = {}  # name -> AlgoSpec, insertion-ordered
+
+
+def register_algo(name: str,
+                  slot_fn: Callable[[Array, Array, SlotCtx], Array],
+                  *, ota: bool = False, blind: bool = False,
+                  uses_gamma: bool = False, nesterov: bool = False,
+                  error_feedback: bool = False,
+                  hoist_gains: Optional[Callable[[bool], bool]] = None,
+                  theorem1: bool = False,
+                  overwrite: bool = False) -> AlgoSpec:
+    """Register a per-slot algorithm under `name` (the `run_mc(algo=)`
+    value). Returns the spec; `ALGOS` updates automatically."""
+    if name in ALGO_REGISTRY and not overwrite:
+        raise ValueError(f"algo {name!r} is already registered "
+                         "(pass overwrite=True to replace it)")
+    spec = AlgoSpec(name=name, slot_fn=slot_fn, ota=ota, blind=blind,
+                    uses_gamma=uses_gamma, nesterov=nesterov,
+                    error_feedback=error_feedback,
+                    hoist_gains=hoist_gains or (lambda inv: False),
+                    theorem1=theorem1)
+    ALGO_REGISTRY[name] = spec
+    return spec
+
+
+def __getattr__(name: str):
+    # live views derived from the registry, so late registrations show up
+    if name == "ALGOS":
+        return tuple(ALGO_REGISTRY)
+    if name == "_OTA_ALGOS":
+        return tuple(n for n, s in ALGO_REGISTRY.items() if s.ota)
+    if name == "_BLIND_ALGOS":
+        return tuple(n for n, s in ALGO_REGISTRY.items() if s.blind)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+# --------------------------------------------------------------------------
+# slot implementations (mirror the reference simulators' RNG usage)
+# --------------------------------------------------------------------------
+def _ota_slot(g: Array, key: Array, ctx: SlotCtx, h_slot=None) -> Array:
+    """Single-antenna OTA superposition (Eq. 8): v = (1/N) Σ h_n g_n + w.
+
+    slot key → (k_h, k_w); k_h draws the (n_max,) gains unless the caller
+    hoisted them (`h_slot`), k_w the (d,) edge noise — split-for-split
+    identical to `gbma.ota_aggregate`. With `ctx.ota_impl != 'inline'` the
+    superposition + noise-add routes through the tiled
+    `repro.kernels.ota.ota_edge_aggregate` kernel (pallas on TPU, jnp
+    oracle otherwise); the traced noise std folds into the noise operand so
+    the kernel's static `noise_scale` stays 1.
+    """
+    p = ctx.p
+    k_h, k_w = jax.random.split(key)
+    h = _row_gains(k_h, ctx.fading, p, ctx.n_sizes, g.shape[0]) \
+        if h_slot is None else h_slot
+    std = p["noise_std"] / (p["n_nodes"] * jnp.sqrt(p["energy"]))
+    if ctx.ota_impl != "inline":
+        from repro.kernels.ota.ops import ota_edge_aggregate
+
+        z = jax.random.normal(k_w, (g.shape[1],), dtype=g.dtype)
+        # valid only when every row transmits at the full static node count
+        # (run_mc enforces this): the kernel normalizes by the static N
+        return ota_edge_aggregate(g, h, std * z, noise_scale=1.0,
+                                  impl=ctx.ota_impl,
+                                  interpret=jax.default_backend() != "tpu")
+    v = jnp.einsum("n,nd->d", h, g) / p["n_nodes"]
+    return v + std * jax.random.normal(k_w, v.shape, dtype=v.dtype)
+
+
+def _gbma_slot(g: Array, key: Array, ctx: SlotCtx) -> Array:
+    """Precoded OTA aggregation, shared by gbma/momentum/nesterov.
+
+    n_antennas=None: single-antenna edge, RNG-identical to `GBMASimulator`.
+    An integer (1 included) takes the MRC path of
+    `ota_aggregate_multiantenna`, whose extra key split changes the stream
+    even for M=1 — mirrored so fixed seeds reproduce exactly. Per-row
+    counts (m_sizes) take the masked-MRC path: each row consumes exactly
+    the first m of its replayed split(key, m).
+    """
+    p = ctx.p
+    if ctx.m_sizes:
+        keys = _antenna_keys(key, ctx.m_sizes, p)
+        v = jax.vmap(lambda k: _ota_slot(g, k, ctx))(keys)
+        amask = (jnp.arange(v.shape[0]) < p["n_antennas"]).astype(v.dtype)
+        return jnp.einsum("m,md->d", amask, v) / p["n_antennas"]
+    if ctx.n_antennas is None:
+        return _ota_slot(g, key, ctx, ctx.h_slot)
+    keys = jax.random.split(key, ctx.n_antennas)
+    v = jax.vmap(lambda k: _ota_slot(g, k, ctx))(keys)
+    return jnp.mean(v, axis=0)
+
+
+def _centralized_slot(g: Array, key: Array, ctx: SlotCtx) -> Array:
+    """Noiseless benchmark GD: the slot key is unused."""
+    return jnp.sum(g, axis=0) / ctx.p["n_nodes"]
+
+
+def _blind_slot(g: Array, key: Array, ctx: SlotCtx) -> Array:
+    """Blind transmitters (1907.03909): nodes send g uncoded; antenna m
+    receives y_m = Σ_n h~_{n,m} g_n + z~_m (complex); the edge MRC-
+    combines with receiver CSI, normalized by M·E[h²] — mirrors
+    `gbma.blind_ota_aggregate` split-for-split."""
+    p = ctx.p
+    n_max = g.shape[0]
+    m2 = _magnitude_m2(ctx.fading, p)
+    std = p["noise_std"] / jnp.sqrt(p["energy"])
+
+    def antenna(k):
+        k_h, k_w = jax.random.split(k)
+        a, b = _row_complex_gains(k_h, ctx.fading, p, ctx.n_sizes, n_max)
+        z = jax.random.normal(k_w, (2, g.shape[1]), dtype=g.dtype)
+        y_r = jnp.einsum("n,nd->d", a, g) + std * z[0]
+        y_i = jnp.einsum("n,nd->d", b, g) + std * z[1]
+        return jnp.sum(a) * y_r + jnp.sum(b) * y_i
+
+    if ctx.m_sizes:
+        keys = _antenna_keys(key, ctx.m_sizes, p)
+        m_true = p["n_antennas"]
+    else:
+        keys = jax.random.split(key, ctx.n_antennas)
+        m_true = jnp.float32(ctx.n_antennas)
+    s = jax.vmap(antenna)(keys)
+    amask = (jnp.arange(s.shape[0]) < m_true).astype(g.dtype)
+    return jnp.einsum("m,md->d", amask, s) / (m_true * p["n_nodes"] * m2)
+
+
+def _fdm_slot(g: Array, key: Array, ctx: SlotCtx) -> Array:
+    """Orthogonal-channel GD: independent per-node (d,) noise; with
+    `invert_channel` the gain is equalized (k_h split off but unconsumed,
+    matching `baselines.FDMGD`)."""
+    p = ctx.p
+    n_max = g.shape[0]
+    k_h, k_w = jax.random.split(key)
+    if len(ctx.n_sizes) > 1 and _dynamic_threefry_ok():
+        raw = _normal_dynamic_n(
+            k_w, p["n_nodes"].astype(jnp.int32), n_max, g.shape[1])
+    else:
+        raw = _normal_padded(
+            k_w, p["n_idx"], ctx.n_sizes, n_max, g.shape[1], g.dtype)
+    noise = p["noise_std"] / jnp.sqrt(p["energy"]) * raw
+    if ctx.invert_channel:
+        rx = g + noise
+    else:
+        h = _row_gains(k_h, ctx.fading, p, ctx.n_sizes, n_max) \
+            if ctx.h_slot is None else ctx.h_slot
+        rx = h[:, None] * g + noise
+    return jnp.sum(rx * ctx.mask[:, None], axis=0) / p["n_nodes"]
+
+
+def _power_control_slot(g: Array, key: Array, ctx: SlotCtx) -> Array:
+    """CA-DSGD-style truncated channel inversion [11]: nodes below `h_min`
+    stay silent; the active set inverts its gains."""
+    p = ctx.p
+    n_max = g.shape[0]
+    k_h, k_w = jax.random.split(key)
+    h = _row_gains(k_h, ctx.fading, p, ctx.n_sizes, n_max) \
+        if ctx.h_slot is None else ctx.h_slot
+    active = (h >= ctx.h_min).astype(g.dtype) * ctx.mask
+    n_active = jnp.maximum(jnp.sum(active), 1.0)
+    sup = jnp.einsum("n,nd->d", active, g)
+    w = p["noise_std"] / (n_active * jnp.sqrt(p["energy"])) * (
+        jax.random.normal(k_w, (g.shape[1],), dtype=g.dtype))
+    return sup / n_active + w
+
+
+# --------------------------------------------------------------------------
+# built-in registrations (order defines the historical ALGOS tuple)
+# --------------------------------------------------------------------------
+register_algo("gbma", _gbma_slot, ota=True,
+              hoist_gains=lambda inv: True, theorem1=True)
+register_algo("centralized", _centralized_slot)
+register_algo("fdm", _fdm_slot, hoist_gains=lambda inv: not inv)
+register_algo("power_control", _power_control_slot,
+              hoist_gains=lambda inv: True)
+register_algo("momentum", _gbma_slot, ota=True, uses_gamma=True,
+              hoist_gains=lambda inv: True)
+register_algo("nesterov", _gbma_slot, ota=True, uses_gamma=True,
+              nesterov=True, hoist_gains=lambda inv: True)
+register_algo("blind", _blind_slot, blind=True)
+register_algo("blind_ec", _blind_slot, blind=True, error_feedback=True)
+
+
+def _slot_update(g: Array, key: Array, *, algo: str, fading: str, p: dict,
+                 mask: Array, n_sizes: tuple, n_antennas: Optional[int],
+                 m_sizes: tuple, invert_channel: bool, h_min: float,
+                 h_slot=None, ota_impl: str = "inline") -> Array:
+    """Back-compat wrapper over the registry dispatch: one MAC slot,
+    transmitted per-node vectors (n_max, d) -> received update (d,).
+
+    `g` is whatever the nodes put on the channel this slot — the masked
+    local gradients for most algorithms; for `blind_ec` rows the scan body
+    has already folded in the local residual and the power-budget
+    truncation before calling here.
+
+    Padded node rows carry exactly-zero vectors (the problem grad fns
+    mask them) and zero-padded channel gains, so every per-node reduction
+    normalizes by the row's true node count p['n_nodes'], and shaped noise
+    draws (fdm) are masked before the node average.
+    """
+    if algo not in ALGO_REGISTRY:
+        raise ValueError(
+            f"unknown algo {algo!r}; expected one of {tuple(ALGO_REGISTRY)}")
+    ctx = SlotCtx(fading=fading, p=p, mask=mask, n_sizes=n_sizes,
+                  n_antennas=n_antennas, m_sizes=m_sizes,
+                  invert_channel=invert_channel, h_min=h_min,
+                  h_slot=h_slot, ota_impl=ota_impl)
+    return ALGO_REGISTRY[algo].slot_fn(g, key, ctx)

@@ -1,1107 +1,73 @@
-"""Batched, jitted Monte Carlo engine for the paper experiments (Figs. 2–6).
+"""Back-compat façade over the `repro.core.mc` package.
 
-The figures reproduce the expectation in Eq. (14) by averaging excess-risk
-curves over seeds. The seed implementation looped over seeds in Python and
-evaluated the objective per trajectory point on the host (numpy); this engine
-runs the whole sweep as one compiled call:
+The Monte Carlo engine used to live here as a single module; it is now a
+package split along its natural layers:
 
-    shard_map(seeds over 'mc' devices) ∘ vmap(rows) ∘ vmap(seeds) ∘ scan(steps)
+  * `repro.core.mc.problems` — `MCProblem` / `MCProblemBatch`, the open
+    `PROBLEMS` registry (`register_problem`) and the library constructors
+    (`quadratic_mc_problem`, `localization_mc_problem`,
+    `logistic_mc_problem`).
+  * `repro.core.mc.sampling` — the reference-twin RNG samplers (padded /
+    dynamic-count threefry draws, antenna key replay).
+  * `repro.core.mc.slots`    — per-slot algorithm updates behind
+    `register_algo` (`ALGOS` is derived from the registry).
+  * `repro.core.mc.engine`   — `_mc_core`, `run_mc`, `MCResult`,
+    `ChannelBatch`, `energy_to_target`, the compile counter.
 
-with the excess-risk curve computed **on-device inside the scan**. For the
-quadratic objective (27) the excess risk is the closed form
-``0.5 (θ-θ*)ᵀ H (θ-θ*)`` (H = A + λI), which is exact — no cancellation
-against F* — so the trajectory of estimates never leaves the device.
-
-Algorithms (``algo=``) mirror the reference simulators step-for-step,
-including their PRNG split order, so a fixed seed reproduces the trajectory
-of `GBMASimulator.run` / `FDMGD.run` / `PowerControlOTA.run` up to float32
-rounding (~1e-7 relative; a few host-side f64 scalar constants round
-differently when computed in traced f32):
-
-  * ``gbma``          — Eq. (8)–(9); an integer ``n_antennas`` gives the
-                        MRC multi-antenna edge of related work [12].
-  * ``centralized``   — noiseless benchmark GD.
-  * ``fdm``           — orthogonal-channel GD (``invert_channel`` as in
-                        `FDMGD`).
-  * ``power_control`` — CA-DSGD-style truncated channel inversion [11].
-  * ``momentum``      — GBMA aggregation + heavy-ball step
-                        θ_{k+1} = θ_k − β m_{k+1}, m_{k+1} = γ m_k + v_k
-                        (accelerated GD over MAC, Paul/Friedman/Cohen 2021).
-  * ``nesterov``      — GBMA aggregation + Nesterov lookahead: the gradient
-                        is evaluated at θ_k − βγ m_k.
-  * ``blind``         — NO transmitter CSI (Amiri/Duman/Gündüz,
-                        arXiv:1907.03909): nodes send the raw analog
-                        gradient, the M-antenna edge MRC-combines with
-                        receiver CSI; interference and noise vanish as 1/M
-                        (channel hardening). Needs ``n_antennas``.
-  * ``blind_ec``      — ``blind`` + local error accumulation
-                        (arXiv:1907.09769): each node carries the part of
-                        its update that the per-slot power budget
-                        (``power_budget``, squared-norm units) truncated
-                        and re-adds it next slot.
-
-``n_antennas`` may be a per-row sequence: the antenna axis is padded to
-M_max and each row's key split replays ``jax.random.split(key, m)`` for its
-true m with the count as data, so an M-sweep batches in the same single
-compile as everything else (see `_antenna_keys`).
-
-A batch row is a (problem, channel params, algo, stepsize) tuple:
-
-  * `ChannelBatch.stack` batches any mix of scale, noise_std, energy
-    (e.g. the paper's E_N = N^{ε-2} sweep), phase error and Rician K;
-    the fading *family* stays static (it picks the sampling code path).
-  * `MCProblemBatch.stack` batches problems with *different node counts*:
-    per-node arrays are zero-padded to N_max with a validity mask, and the
-    random draws per row go through a `lax.switch` over the distinct true
-    node counts so each row consumes *exactly* the draws the unpadded
-    per-N run would (threefry streams are shape-dependent, so plain padded
-    sampling would change the trajectories).
-  * a per-row `algo` tuple batches algorithms the same way (one
-    `lax.switch` per slot); RNG per branch matches the per-algo reference.
-
-Hence fig2–fig6 N-sweeps and algorithm comparisons each run in ONE
-`_mc_core` compile (`trace_count()` exposes the compile counter). The seed
-axis is sharded over devices with `repro.compat.shard_map` on a `'mc'` mesh
-axis when the seed count divides the device count — transparent (bit-equal,
-no-op) on a single device.
-
-Adding a new channel scenario = building new `ChannelConfig`s and calling
-`run_mc`; no new per-figure script code (see docs/montecarlo.md).
+Every name importable from `repro.core.montecarlo` before the split —
+public API and the underscore helpers exercised by tests and notebooks —
+still resolves here (guarded by `tests/test_backcompat.py`); new code
+should import from `repro.core.mc` directly.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Callable, Optional, Sequence, Union
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import PartitionSpec as P
-
-from repro import compat
-from repro.core.channel import ChannelConfig
-from repro.core.theory import ProblemConstants, theorem1_bound
-
-Array = jax.Array
-
-ALGOS = ("gbma", "centralized", "fdm", "power_control", "momentum",
-         "nesterov", "blind", "blind_ec")
-# algos that receive the OTA superposition of Eq. (8) (MAC slot is shared)
-_OTA_ALGOS = ("gbma", "momentum", "nesterov")
-# no-CSI transmitters, M-antenna MRC edge (Amiri/Duman/Gündüz)
-_BLIND_ALGOS = ("blind", "blind_ec")
-
-
-# --------------------------------------------------------------------------
-# problems
-# --------------------------------------------------------------------------
-@dataclasses.dataclass(frozen=True)
-class MCProblem:
-    """On-device problem: per-node gradients plus a scalar risk metric.
-
-    grad_fn: theta (d,) -> (N, d) all nodes' local gradients.
-    risk_fn: theta (d,) -> scalar excess risk / error, fully traceable.
-
-    `kind`/`data` are filled by the library constructors
-    (`quadratic_mc_problem`, `localization_mc_problem`) and let
-    `MCProblemBatch.stack` pad several problems with different node counts
-    into one batch. Hand-built problems may leave them unset; they then run
-    on the closure path (single node count per call).
-    """
-
-    grad_fn: Callable[[Array], Array]
-    risk_fn: Callable[[Array], Array]
-    dim: int
-    n_nodes: int
-    kind: str = ""
-    data: Optional[dict] = None
-
-
-def quadratic_mc_problem(
-    X: np.ndarray, y: np.ndarray, lam: float, theta_star: np.ndarray
-) -> MCProblem:
-    """Regularized least squares (Eq. 27), one sample per node.
-
-    The excess risk uses the exact quadratic form around the minimizer:
-    F(θ) - F* = 0.5 (θ-θ*)ᵀ (A + λI) (θ-θ*) with A = XᵀX/N — closed form,
-    no F* cancellation, safe in f32.
-    """
-    n, d = X.shape
-    H64 = X.T.astype(np.float64) @ X.astype(np.float64) / n + lam * np.eye(d)
-    Xj, yj = jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32)
-    Hj = jnp.asarray(H64, jnp.float32)
-    ts = jnp.asarray(theta_star, jnp.float32)
-
-    def grad_fn(theta):
-        return (Xj @ theta - yj)[:, None] * Xj + lam * theta[None, :]
-
-    def risk_fn(theta):
-        diff = theta - ts
-        return 0.5 * diff @ (Hj @ diff)
-
-    data = {"X": Xj, "y": yj, "H": Hj, "theta_star": ts,
-            "lam": jnp.float32(lam)}
-    return MCProblem(grad_fn=grad_fn, risk_fn=risk_fn, dim=d, n_nodes=n,
-                     kind="quadratic", data=data)
-
-
-def localization_mc_problem(
-    r: np.ndarray, x: np.ndarray, src: np.ndarray, signal_a: float
-) -> MCProblem:
-    """Source localization of paper §VI-B; risk = squared position error."""
-    rj, xj = jnp.asarray(r, jnp.float32), jnp.asarray(x, jnp.float32)
-    srcj = jnp.asarray(src, jnp.float32)
-
-    def grad_fn(theta):
-        diff = theta[None, :] - rj  # (N, 2)
-        d2 = jnp.sum(diff**2, axis=1)
-        resid = xj - signal_a / d2
-        return (4.0 * signal_a * resid / d2**2)[:, None] * diff
-
-    def risk_fn(theta):
-        return jnp.sum((theta - srcj) ** 2)
-
-    data = {"r": rj, "x": xj, "src": srcj, "signal_a": jnp.float32(signal_a)}
-    return MCProblem(grad_fn=grad_fn, risk_fn=risk_fn, dim=2,
-                     n_nodes=r.shape[0], kind="localization", data=data)
-
-
-# per-node leaves to pad when stacking, and the pad value. Localization
-# sensor positions pad far from the search region so the padded rows'
-# 1/d² terms stay finite (they are masked to zero afterwards, but inf·0
-# would poison the row).
-_PER_NODE_FIELDS = {
-    "quadratic": {"X": 0.0, "y": 0.0},
-    "localization": {"r": 1.0e6, "x": 0.0},
-}
-
-# module-level row-based grad/risk functions: stable identities keep the
-# jit cache of `_mc_core` stable across `run_mc` calls.
-def _quadratic_grad_row(row: dict, theta: Array) -> Array:
-    resid = row["X"] @ theta - row["y"]
-    g = resid[:, None] * row["X"] + row["lam"] * theta[None, :]
-    return g * row["mask"][:, None]
-
-
-def _quadratic_risk_row(row: dict, theta: Array) -> Array:
-    diff = theta - row["theta_star"]
-    return 0.5 * diff @ (row["H"] @ diff)
-
-
-def _localization_grad_row(row: dict, theta: Array) -> Array:
-    diff = theta[None, :] - row["r"]
-    d2 = jnp.sum(diff**2, axis=1)
-    resid = row["x"] - row["signal_a"] / d2
-    g = (4.0 * row["signal_a"] * resid / d2**2)[:, None] * diff
-    return g * row["mask"][:, None]
-
-
-def _localization_risk_row(row: dict, theta: Array) -> Array:
-    return jnp.sum((theta - row["src"]) ** 2)
-
-
-_ROW_FNS = {
-    "quadratic": (_quadratic_grad_row, _quadratic_risk_row),
-    "localization": (_localization_grad_row, _localization_risk_row),
-}
-
-
-@dataclasses.dataclass(frozen=True)
-class MCProblemBatch:
-    """C problems stacked along a batch axis, node dims padded to N_max.
-
-    data leaves carry a leading (C,) axis; per-node leaves are zero-padded
-    to `n_max` and `data['mask']` (C, n_max) marks the valid rows. grad/risk
-    take (row, theta) and are the module-level `_ROW_FNS[kind]`.
-    """
-
-    kind: str
-    grad_fn: Callable[[dict, Array], Array]
-    risk_fn: Callable[[dict, Array], Array]
-    data: dict
-    n_nodes: tuple  # true node count per row (host ints)
-    dim: int
-    n_max: int
-
-    @classmethod
-    def stack(cls, problems: Sequence[MCProblem]) -> "MCProblemBatch":
-        kinds = {p.kind for p in problems}
-        if len(kinds) != 1 or "" in kinds or problems[0].data is None:
-            raise ValueError(
-                "MCProblemBatch.stack needs library-built problems of one "
-                f"kind (got kinds={sorted(kinds)}); hand-built MCProblems "
-                "run on the closure path, one node count per call")
-        kind = problems[0].kind
-        dims = {p.dim for p in problems}
-        if len(dims) != 1:
-            raise ValueError(f"problems must share dim, got {sorted(dims)}")
-        n_nodes = tuple(p.n_nodes for p in problems)
-        n_max = max(n_nodes)
-        pads = _PER_NODE_FIELDS[kind]
-        leaves = {}
-        for name in problems[0].data:
-            rows = []
-            for p in problems:
-                leaf = p.data[name]
-                if name in pads:
-                    pad = [(0, n_max - p.n_nodes)] + [(0, 0)] * (leaf.ndim - 1)
-                    leaf = jnp.pad(leaf, pad, constant_values=pads[name])
-                rows.append(leaf)
-            leaves[name] = jnp.stack(rows)
-        mask = np.zeros((len(problems), n_max), np.float32)
-        for i, n in enumerate(n_nodes):
-            mask[i, :n] = 1.0
-        leaves["mask"] = jnp.asarray(mask)
-        grad_fn, risk_fn = _ROW_FNS[kind]
-        return cls(kind=kind, grad_fn=grad_fn, risk_fn=risk_fn, data=leaves,
-                   n_nodes=n_nodes, dim=problems[0].dim, n_max=n_max)
-
-    def __len__(self) -> int:
-        return len(self.n_nodes)
-
-
-# --------------------------------------------------------------------------
-# batched channel parameters
-# --------------------------------------------------------------------------
-@dataclasses.dataclass(frozen=True)
-class ChannelBatch:
-    """Stack of C `ChannelConfig`s sharing one fading family.
-
-    The family string is static (it selects the gain-sampling code path);
-    everything else is a (C,) f32 array and vmaps in a single compile.
-    """
-
-    fading: str
-    params: dict  # {'scale','noise_std','energy','phase_error_max','rician_k'}
-    configs: tuple  # the original ChannelConfigs (host side, for bounds)
-
-    @classmethod
-    def stack(cls, cfgs: Sequence[ChannelConfig]) -> "ChannelBatch":
-        fams = {c.fading for c in cfgs}
-        if len(fams) != 1:
-            raise ValueError(
-                f"one ChannelBatch = one fading family, got {sorted(fams)}; "
-                "issue one run_mc call per family")
-        arr = lambda name: jnp.asarray(
-            [getattr(c, name) for c in cfgs], jnp.float32)
-        return cls(
-            fading=cfgs[0].fading,
-            params={
-                "scale": arr("scale"),
-                "noise_std": arr("noise_std"),
-                "energy": arr("energy"),
-                "phase_error_max": arr("phase_error_max"),
-                "rician_k": arr("rician_k"),
-            },
-            configs=tuple(cfgs),
-        )
-
-    def __len__(self) -> int:
-        return len(self.configs)
-
-
-def _sample_magnitude(k_mag: Array, fading: str, p: dict,
-                      shape: tuple) -> Array:
-    """Traceable twin of `channel._sample_magnitude` over dynamic scalar
-    params: the per-family |h~| draw, shared by the precoded sampler
-    (`_sample_gains`) and the complex no-CSI one (`_sample_complex_gains`)."""
-    scale = p["scale"]
-    if fading == "equal":
-        return jnp.broadcast_to(scale.astype(jnp.float32), shape)
-    if fading == "rayleigh":
-        u = jax.random.uniform(k_mag, shape, minval=1e-12, maxval=1.0)
-        return scale * jnp.sqrt(-2.0 * jnp.log(u))
-    if fading == "rician":
-        nu = jnp.sqrt(p["rician_k"] * 2.0) * scale
-        xy = jax.random.normal(k_mag, shape + (2,)) * scale
-        return jnp.sqrt((xy[..., 0] + nu) ** 2 + xy[..., 1] ** 2)
-    if fading == "lognormal":
-        return jnp.exp(scale * jax.random.normal(k_mag, shape))
-    raise ValueError(f"unknown fading model: {fading}")
-
-
-def _magnitude_m2(fading: str, p: dict) -> Array:
-    """Traceable twin of `ChannelConfig.magnitude_m2`: E[h²] of the raw
-    magnitude gain — the blind-MRC combiner's normalizer."""
-    scale = p["scale"]
-    if fading == "equal":
-        return scale**2
-    if fading == "rayleigh":
-        return 2.0 * scale**2
-    if fading == "rician":
-        return 2.0 * scale**2 * (1.0 + p["rician_k"])
-    if fading == "lognormal":
-        return jnp.exp(2.0 * scale**2)
-    raise ValueError(f"unknown fading model: {fading}")
-
-
-def _sample_gains(key: Array, fading: str, p: dict, shape: tuple) -> Array:
-    """Traceable twin of `channel.sample_gains` over dynamic scalar params.
-
-    Split order and draw shapes match `sample_gains` exactly, so a fixed key
-    yields the same random draws as the reference simulators (trajectories
-    then agree to f32 rounding). The phase factor is applied
-    unconditionally: with phase_error_max == 0 the uniform draw is 0 and
-    cos(0) == 1, identical to the skipped branch.
-    """
-    k_mag, k_ph = jax.random.split(key)
-    h = _sample_magnitude(k_mag, fading, p, shape)
-    phi = jax.random.uniform(k_ph, shape, minval=-p["phase_error_max"],
-                             maxval=p["phase_error_max"])
-    return (h * jnp.cos(phi)).astype(jnp.float32)
-
-
-def _sample_complex_gains(key: Array, fading: str, p: dict,
-                          shape: tuple) -> tuple:
-    """Traceable twin of `channel.sample_complex_gains`: (real, imag) parts
-    of h~ = h e^{jφ} with the FULL uniform phase φ ~ Unif[-π, π) — no
-    precoding in the blind-transmitter setting, so nothing bounds the
-    phase. Same split order as the reference."""
-    k_mag, k_ph = jax.random.split(key)
-    h = _sample_magnitude(k_mag, fading, p, shape)
-    phi = jax.random.uniform(k_ph, shape, minval=-np.pi, maxval=np.pi)
-    return ((h * jnp.cos(phi)).astype(jnp.float32),
-            (h * jnp.sin(phi)).astype(jnp.float32))
-
-
-def _sample_gains_padded(key: Array, fading: str, p: dict,
-                         n_sizes: tuple, n_max: int) -> Array:
-    """(n_max,) gains whose first n entries equal the unpadded (n,) draw.
-
-    Threefry streams depend on the draw shape, so sampling (n_max,) and
-    masking would NOT reproduce the per-N reference draws. Instead the
-    row's true node count (p['n_idx'] indexes the static `n_sizes`) selects
-    a branch that samples at the true static shape and zero-pads. With a
-    single full-size branch this is the plain sampler (no switch traced).
-    """
-    if len(n_sizes) == 1 and n_sizes[0] == n_max:
-        return _sample_gains(key, fading, p, (n_max,))
-    branches = [
-        (lambda k, n=n: jnp.pad(_sample_gains(k, fading, p, (n,)),
-                                (0, n_max - n)))
-        for n in n_sizes
-    ]
-    return jax.lax.switch(p["n_idx"], branches, key)
-
-
-def _sample_complex_gains_padded(key: Array, fading: str, p: dict,
-                                 n_sizes: tuple, n_max: int) -> tuple:
-    """(a, b) complex-gain parts, zero-padded like `_sample_gains_padded`
-    (per-N branches sample at the true static shape)."""
-    if len(n_sizes) == 1 and n_sizes[0] == n_max:
-        return _sample_complex_gains(key, fading, p, (n_max,))
-    branches = [
-        (lambda k, n=n: jnp.pad(
-            jnp.stack(_sample_complex_gains(k, fading, p, (n,))),
-            ((0, 0), (0, n_max - n))))
-        for n in n_sizes
-    ]
-    ab = jax.lax.switch(p["n_idx"], branches, key)
-    return ab[0], ab[1]
-
-
-def _normal_padded(key: Array, n_idx: Array, n_sizes: tuple, n_max: int,
-                   d: int, dtype) -> Array:
-    """(n_max, d) normal draw matching the unpadded (n, d) draw per row
-    (same shape-dependent-stream issue as `_sample_gains_padded`)."""
-    if len(n_sizes) == 1 and n_sizes[0] == n_max:
-        return jax.random.normal(key, (n_max, d), dtype=dtype)
-    branches = [
-        (lambda k, n=n: jnp.pad(jax.random.normal(k, (n, d), dtype=dtype),
-                                ((0, n_max - n), (0, 0))))
-        for n in n_sizes
-    ]
-    return jax.lax.switch(n_idx, branches, key)
-
-
-# --------------------------------------------------------------------------
-# dynamic-length draws with static shapes (node-count sweeps, fast path)
-#
-# Threefry draws depend on the requested shape: `uniform(key, (n,))` hashes
-# counter pairs (j, j + ceil(n/2)), so every distinct N needs its own draw
-# program, and the `lax.switch` over those programs is what makes the padded
-# sweep expensive to compile. But the counters are just uint32 DATA — by
-# calling the raw threefry2x32 primitive on counter vectors computed from a
-# *traced* n, one static-shape (n_max) program reproduces the (n,)-shaped
-# draw bit-for-bit in lanes [0, n). The bits->float transforms below are
-# copied from `jax._src.random._uniform` / `_normal_real` so the values
-# match exactly. Only valid for the default threefry PRNG — callers must
-# check `compat.threefry_is_default()` and fall back to the switch sampler.
-# --------------------------------------------------------------------------
-def _dynamic_bits(kd: Array, size: Array, out_max: int) -> Array:
-    """uint32 bits equal to `random_bits(key, 32, (size,))` in lanes
-    [0, size); `size` is traced (<= out_max), `out_max` static."""
-    m_max = (out_max + 1) // 2
-    m = (size + 1) // 2  # half-width of the counter vector (incl. odd pad)
-    i = jnp.arange(m_max, dtype=jnp.int32)
-    x0 = i.astype(jnp.uint32)
-    # second counter half: j + m, with the odd-size pad slot hashed on 0
-    x1 = jnp.where(i + m < size, i + m, 0).astype(jnp.uint32)
-    # merge batch dims BEFORE the bind: the primitive's batching rule
-    # mis-broadcasts when keys are vmapped over different axes (seeds,
-    # steps) than the counts (configs). `| zero` stamps every operand with
-    # the union of batch dims through ordinary elementwise batching (x1
-    # carries the config dims via `m`; kd carries the seed/step dims).
-    zero = (kd[0] & jnp.uint32(0)) | (x1 & jnp.uint32(0))
-    o0, o1 = compat.threefry2x32(kd[0] | zero, kd[1] | zero,
-                                 x0 | zero, x1 | zero)
-    j = jnp.arange(out_max, dtype=jnp.int32)
-    bits0 = o0[jnp.minimum(j, m_max - 1)]
-    bits1 = o1[jnp.clip(j - m, 0, m_max - 1)]
-    return jnp.where(j < m, bits0, bits1)
-
-
-_F32_ONE_BITS = np.float32(1.0).view(np.uint32)
-_NORMAL_LO = np.nextafter(np.float32(-1.0), np.float32(0.0))
-
-
-def _bits_to_u01(bits: Array) -> Array:
-    """uint32 bits -> uniform [0, 1) floats, as `_uniform` builds them."""
-    fb = (bits >> jnp.uint32(9)) | jnp.uint32(_F32_ONE_BITS)
-    return jax.lax.bitcast_convert_type(fb, jnp.float32) - jnp.float32(1.0)
-
-
-def _u01_to_uniform(u01: Array, minval, maxval) -> Array:
-    return jnp.maximum(minval, u01 * (maxval - minval) + minval)
-
-
-def _u01_to_normal(u01: Array) -> Array:
-    lo = jnp.float32(_NORMAL_LO)
-    u = jnp.maximum(lo, u01 * (jnp.float32(1.0) - lo) + lo)
-    return jnp.float32(np.sqrt(2.0)) * jax.lax.erf_inv(u)
-
-
-def _normal_dynamic_n(key: Array, n: Array, n_max: int, d: int) -> Array:
-    """Zero-padded (n_max, d) twin of `normal(key, (n, d))` for traced n
-    (the fdm per-node noise on node-count sweeps) — same counts-as-data
-    trick as `_sample_gains_dynamic_n`, so the scan body stays free of
-    per-N `lax.switch` branches."""
-    kd = jax.random.key_data(key)
-    z = _u01_to_normal(_bits_to_u01(_dynamic_bits(kd, n * d, n_max * d)))
-    z = jnp.where(jnp.arange(n_max * d) < n * d, z, jnp.float32(0.0))
-    return z.reshape(n_max, d)
-
-
-def _sample_magnitude_dynamic_n(kd_mag: Array, fading: str, p: dict,
-                                n: Array, n_max: int) -> Array:
-    """Dynamic-count twin of `_sample_magnitude` (traced n, static n_max);
-    lanes ≥ n are garbage until the caller masks them."""
-    scale = p["scale"]
-    if fading == "equal":
-        return jnp.broadcast_to(scale.astype(jnp.float32), (n_max,))
-    if fading == "rayleigh":
-        u01 = _bits_to_u01(_dynamic_bits(kd_mag, n, n_max))
-        u = _u01_to_uniform(u01, jnp.float32(1e-12), jnp.float32(1.0))
-        return scale * jnp.sqrt(-2.0 * jnp.log(u))
-    if fading == "rician":
-        nu = jnp.sqrt(p["rician_k"] * 2.0) * scale
-        z = _u01_to_normal(_bits_to_u01(
-            _dynamic_bits(kd_mag, 2 * n, 2 * n_max)))
-        xy = z.reshape(n_max, 2) * scale
-        return jnp.sqrt((xy[..., 0] + nu) ** 2 + xy[..., 1] ** 2)
-    if fading == "lognormal":
-        z = _u01_to_normal(_bits_to_u01(_dynamic_bits(kd_mag, n, n_max)))
-        return jnp.exp(scale * z)
-    raise ValueError(f"unknown fading model: {fading}")
-
-
-def _sample_gains_dynamic_n(key: Array, fading: str, p: dict,
-                            n_max: int) -> Array:
-    """Bit-exact twin of `_sample_gains(key, fading, p, (n,))` zero-padded
-    to (n_max,), with n = p['n_nodes'] traced — one static-shape program
-    covers every node count in the sweep."""
-    n = p["n_nodes"].astype(jnp.int32)
-    k_mag, k_ph = jax.random.split(key)
-    h = _sample_magnitude_dynamic_n(jax.random.key_data(k_mag), fading, p,
-                                    n, n_max)
-    a = p["phase_error_max"]
-    phi = _u01_to_uniform(
-        _bits_to_u01(_dynamic_bits(jax.random.key_data(k_ph), n, n_max)),
-        -a, a)
-    h = (h * jnp.cos(phi)).astype(jnp.float32)
-    return jnp.where(jnp.arange(n_max) < n, h, jnp.float32(0.0))
-
-
-def _sample_complex_gains_dynamic_n(key: Array, fading: str, p: dict,
-                                    n_max: int) -> tuple:
-    """Dynamic-count twin of `_sample_complex_gains(key, fading, p, (n,))`
-    zero-padded to (n_max,) — the blind family's per-antenna gain draw on
-    node-count sweeps."""
-    n = p["n_nodes"].astype(jnp.int32)
-    k_mag, k_ph = jax.random.split(key)
-    h = _sample_magnitude_dynamic_n(jax.random.key_data(k_mag), fading, p,
-                                    n, n_max)
-    phi = _u01_to_uniform(
-        _bits_to_u01(_dynamic_bits(jax.random.key_data(k_ph), n, n_max)),
-        jnp.float32(-np.pi), jnp.float32(np.pi))
-    lane = jnp.arange(n_max) < n
-    a = jnp.where(lane, (h * jnp.cos(phi)).astype(jnp.float32), 0.0)
-    b = jnp.where(lane, (h * jnp.sin(phi)).astype(jnp.float32), 0.0)
-    return a, b
-
-
-def _dynamic_threefry_ok() -> bool:
-    """Counts-as-data fast paths need the raw primitive AND the default
-    threefry PRNG (the bit-level replication is only valid then)."""
-    return compat.threefry2x32 is not None and compat.threefry_is_default()
-
-
-def _row_gains(key: Array, fading: str, p: dict, n_sizes: tuple,
-               n_max: int) -> Array:
-    """This row's (n_max,) zero-padded slot gains: dynamic-count program
-    when available (no per-N branches), per-N `lax.switch` otherwise."""
-    if len(n_sizes) > 1 and _dynamic_threefry_ok():
-        return _sample_gains_dynamic_n(key, fading, p, n_max)
-    return _sample_gains_padded(key, fading, p, n_sizes, n_max)
-
-
-def _row_complex_gains(key: Array, fading: str, p: dict, n_sizes: tuple,
-                       n_max: int) -> tuple:
-    """Complex counterpart of `_row_gains` for the blind family."""
-    if len(n_sizes) > 1 and _dynamic_threefry_ok():
-        return _sample_complex_gains_dynamic_n(key, fading, p, n_max)
-    return _sample_complex_gains_padded(key, fading, p, n_sizes, n_max)
-
-
-def _antenna_keys(key: Array, m_sizes: tuple, p: dict) -> Array:
-    """(m_max,) antenna keys whose first m entries (m = this row's true
-    antenna count, `p['n_antennas']`) equal `jax.random.split(key, m)`.
-
-    Antenna counts suffer the same shape-dependent-stream problem as node
-    counts: `split` is itself a threefry draw over `iota(2m)` counters, so
-    splitting at m_max and masking would change every row's stream. The
-    fast path replays the original split layout with the row's count as
-    DATA (`_dynamic_bits` over 2m counters, reshaped (m_max, 2)); its
-    validity is verified empirically by `compat.threefry_split_is_original`
-    (False under `jax_threefry_partitionable`). The fallback is a
-    `lax.switch` over the distinct static counts. Lanes ≥ m hold
-    well-formed garbage keys — callers mask the antenna axis."""
-    m_max = max(m_sizes)
-    if len(m_sizes) == 1:
-        return jax.random.split(key, m_max)
-    if compat.threefry2x32 is not None \
-            and compat.threefry_split_is_original():
-        m = p["n_antennas"].astype(jnp.int32)
-        bits = _dynamic_bits(jax.random.key_data(key), 2 * m, 2 * m_max)
-        return jax.random.wrap_key_data(bits.reshape(m_max, 2))
-    branches = [
-        (lambda k, m=m: jnp.pad(
-            jax.random.key_data(jax.random.split(k, m)),
-            ((0, m_max - m), (0, 0))))
-        for m in m_sizes
-    ]
-    return jax.random.wrap_key_data(
-        jax.lax.switch(p["m_idx"], branches, key))
-
-
-# --------------------------------------------------------------------------
-# per-slot aggregation (mirrors the reference simulators' RNG usage)
-# --------------------------------------------------------------------------
-def _ota_slot(g: Array, key: Array, fading: str, p: dict,
-              n_sizes: tuple, n_max: int, h_slot=None) -> Array:
-    k_h, k_w = jax.random.split(key)
-    h = _row_gains(k_h, fading, p, n_sizes, n_max) \
-        if h_slot is None else h_slot
-    v = jnp.einsum("n,nd->d", h, g) / p["n_nodes"]
-    std = p["noise_std"] / (p["n_nodes"] * jnp.sqrt(p["energy"]))
-    return v + std * jax.random.normal(k_w, v.shape, dtype=v.dtype)
-
-
-def _slot_update(g: Array, key: Array, *, algo: str, fading: str, p: dict,
-                 mask: Array, n_sizes: tuple, n_antennas: int,
-                 m_sizes: tuple, invert_channel: bool, h_min: float,
-                 h_slot=None) -> Array:
-    """One MAC slot: transmitted per-node vectors (n_max, d) -> received
-    update (d,).
-
-    `g` is whatever the nodes put on the channel this slot — the masked
-    local gradients for most algorithms; for `blind_ec` rows the scan body
-    has already folded in the local residual and the power-budget
-    truncation before calling here.
-
-    Padded node rows carry exactly-zero vectors (the problem grad fns
-    mask them) and zero-padded channel gains, so every per-node reduction
-    normalizes by the row's true node count p['n_nodes'], and shaped noise
-    draws (fdm) are masked before the node average.
-
-    `m_sizes` non-empty means per-row antenna counts (`p['n_antennas']` is
-    data, the antenna axis is padded to max(m_sizes) and masked); otherwise
-    the static `n_antennas` broadcast applies.
-
-    `h_slot` is this slot's pre-sampled gain vector when the caller hoisted
-    the gain sampling out of the scan (node-count sweeps: the per-N
-    `lax.switch` branches would otherwise be traced into the scan body and
-    dominate XLA compile time). It is drawn from exactly the k_h this
-    function would have split off, so the stream is unchanged.
-    """
-    n_max, n_true = g.shape[0], p["n_nodes"]
-    if algo == "centralized":
-        return jnp.sum(g, axis=0) / n_true
-    if algo in _OTA_ALGOS:
-        # n_antennas=None: single-antenna edge, RNG-identical to
-        # `GBMASimulator`. An integer (1 included) takes the MRC path of
-        # `ota_aggregate_multiantenna`, whose extra key split changes the
-        # stream even for M=1 — mirrored so fixed seeds reproduce exactly.
-        # Per-row counts (m_sizes) take the masked-MRC path: each row
-        # consumes exactly the first m of its replayed split(key, m).
-        if m_sizes:
-            keys = _antenna_keys(key, m_sizes, p)
-            v = jax.vmap(
-                lambda k: _ota_slot(g, k, fading, p, n_sizes, n_max))(keys)
-            amask = (jnp.arange(v.shape[0]) < p["n_antennas"]).astype(
-                v.dtype)
-            return jnp.einsum("m,md->d", amask, v) / p["n_antennas"]
-        if n_antennas is None:
-            return _ota_slot(g, key, fading, p, n_sizes, n_max, h_slot)
-        keys = jax.random.split(key, n_antennas)
-        v = jax.vmap(
-            lambda k: _ota_slot(g, k, fading, p, n_sizes, n_max))(keys)
-        return jnp.mean(v, axis=0)
-    if algo in _BLIND_ALGOS:
-        # Blind transmitters (1907.03909): nodes send g uncoded; antenna m
-        # receives y_m = Σ_n h~_{n,m} g_n + z~_m (complex); the edge MRC-
-        # combines with receiver CSI, normalized by M·E[h²] — mirrors
-        # `gbma.blind_ota_aggregate` split-for-split.
-        m2 = _magnitude_m2(fading, p)
-        std = p["noise_std"] / jnp.sqrt(p["energy"])
-
-        def antenna(k):
-            k_h, k_w = jax.random.split(k)
-            a, b = _row_complex_gains(k_h, fading, p, n_sizes, n_max)
-            z = jax.random.normal(k_w, (2, g.shape[1]), dtype=g.dtype)
-            y_r = jnp.einsum("n,nd->d", a, g) + std * z[0]
-            y_i = jnp.einsum("n,nd->d", b, g) + std * z[1]
-            return jnp.sum(a) * y_r + jnp.sum(b) * y_i
-
-        if m_sizes:
-            keys = _antenna_keys(key, m_sizes, p)
-            m_true = p["n_antennas"]
-        else:
-            keys = jax.random.split(key, n_antennas)
-            m_true = jnp.float32(n_antennas)
-        s = jax.vmap(antenna)(keys)
-        amask = (jnp.arange(s.shape[0]) < m_true).astype(g.dtype)
-        return jnp.einsum("m,md->d", amask, s) / (m_true * n_true * m2)
-    if algo == "fdm":
-        k_h, k_w = jax.random.split(key)
-        if len(n_sizes) > 1 and _dynamic_threefry_ok():
-            raw = _normal_dynamic_n(
-                k_w, p["n_nodes"].astype(jnp.int32), n_max, g.shape[1])
-        else:
-            raw = _normal_padded(
-                k_w, p["n_idx"], n_sizes, n_max, g.shape[1], g.dtype)
-        noise = p["noise_std"] / jnp.sqrt(p["energy"]) * raw
-        if invert_channel:
-            rx = g + noise
-        else:
-            h = _row_gains(k_h, fading, p, n_sizes, n_max) \
-                if h_slot is None else h_slot
-            rx = h[:, None] * g + noise
-        return jnp.sum(rx * mask[:, None], axis=0) / n_true
-    if algo == "power_control":
-        k_h, k_w = jax.random.split(key)
-        h = _row_gains(k_h, fading, p, n_sizes, n_max) \
-            if h_slot is None else h_slot
-        active = (h >= h_min).astype(g.dtype) * mask
-        n_active = jnp.maximum(jnp.sum(active), 1.0)
-        sup = jnp.einsum("n,nd->d", active, g)
-        w = p["noise_std"] / (n_active * jnp.sqrt(p["energy"])) * (
-            jax.random.normal(k_w, (g.shape[1],), dtype=g.dtype))
-        return sup / n_active + w
-    raise ValueError(f"unknown algo {algo!r}; expected one of {ALGOS}")
-
-
-# --------------------------------------------------------------------------
-# engine
-# --------------------------------------------------------------------------
-@dataclasses.dataclass
-class MCResult:
-    """Host-side result of one engine call.
-
-    risks:      (C, S, steps+1) per-row per-seed excess-risk curves.
-    mean:       (C, steps+1) seed average (the Eq. 14 expectation estimate).
-    ci95:       (C, steps+1) 1.96 * standard error over seeds (0 if S == 1).
-    cum_energy: (C, S, steps) cumulative transmitted energy Σ E_N ||x_k||²
-                of the actually-transmitted vectors — x_k = g_k for every
-                algorithm except `blind_ec`, whose power budget truncates
-                x_k = α(g_k + e_k).
-    bounds:     (C, steps+1) Theorem-1 bound per row (None unless problem
-                constants were supplied AND every row is single-antenna
-                'gbma' — the setting Theorem 1 covers).
-    """
-
-    risks: np.ndarray
-    mean: np.ndarray
-    ci95: np.ndarray
-    cum_energy: np.ndarray
-    bounds: Optional[np.ndarray]
-
-
-_TRACE_COUNT = 0
-
-
-def trace_count() -> int:
-    """Number of times `_mc_core` has been traced (== XLA compiles of the
-    engine, since the python body runs once per jit cache miss)."""
-    return _TRACE_COUNT
-
-
-def clear_cache() -> bool:
-    """Drop the engine's compiled-program cache (compile-count tests, cold
-    benchmark timings). Returns False on JAX versions without jit
-    clear_cache support — callers should then skip compile-count asserts."""
-    if hasattr(_mc_core, "clear_cache"):
-        _mc_core.clear_cache()
-        return True
-    return False
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("grad_fn", "risk_fn", "row_based", "algo_set", "fading",
-                     "steps", "n_sizes", "n_antennas", "m_sizes",
-                     "invert_channel", "h_min", "n_shards"),
+from repro.core.mc import problems as _problems
+from repro.core.mc import sampling as _sampling
+from repro.core.mc import slots as _slots
+from repro.core.mc.engine import (
+    Array,
+    ChannelBatch,
+    MCResult,
+    _mc_core,
+    _resolve_n_shards,
+    clear_cache,
+    energy_to_target,
+    run_mc,
+    trace_count,
 )
-def _mc_core(params, betas, theta0, seeds, data, *, grad_fn, risk_fn,
-             row_based, algo_set, fading, steps, n_sizes, n_antennas,
-             m_sizes, invert_channel, h_min, n_shards):
-    """(C,)-batched rows × (S,) seeds × scan(steps), seeds sharded on 'mc'.
+from repro.core.mc.problems import (
+    MCProblem,
+    MCProblemBatch,
+    PROBLEMS,
+    ProblemSpec,
+    localization_mc_problem,
+    logistic_mc_problem,
+    quadratic_mc_problem,
+    register_problem,
+)
+from repro.core.mc.slots import (
+    ALGO_REGISTRY,
+    AlgoSpec,
+    SlotCtx,
+    _slot_update,
+    register_algo,
+)
 
-    `algo_set` is the deduped algorithm tuple; the row-to-algorithm
-    assignment is traced data (params['algo_idx']), so re-assigning rows
-    among the same algorithms reuses the compiled program. Rows sharing one
-    algorithm skip the dispatch switch. The momentum carry unifies all step
-    rules: m_{k+1} = γ m_k + v_k and θ_{k+1} = θ_k − β m_{k+1} reduce
-    bit-exactly to vanilla GD at γ = 0 (0·m = 0, 0 + v = v), and the
-    Nesterov lookahead θ − nest·βγ·m is exactly θ when the row's nest flag
-    is 0.
-
-    When `algo_set` contains 'blind_ec' the scan carry additionally holds
-    the per-node residual e (n_max, d): rows flagged p['ec']=1 transmit
-    x = α(g + e) with the power-budget scaling α = min(1, √(B/‖g+e‖²))
-    per node and carry e ← (g+e) − x forward (error accumulation of
-    1907.09769); all other rows select α = 1 and reduce bit-exactly to
-    x = g — even when their own α expression is NaN (an overflowing row
-    under the default unbounded budget hits inf/inf). The transmitted
-    energy is always computed from x — identical to the g-based accounting
-    whenever no truncation happened.
-    """
-    global _TRACE_COUNT
-    _TRACE_COUNT += 1  # python side effect: runs once per trace/compile
-
-    # gains-consuming slot types, single-antenna: eligible for hoisting the
-    # per-N sampling switch out of the scan (see `hoist` below)
-    hoistable = n_antennas is None and not m_sizes and any(
-        a in _OTA_ALGOS or a == "power_control"
-        or (a == "fdm" and not invert_channel) for a in algo_set)
-    use_ec = "blind_ec" in algo_set
-
-    def trajectory(p, beta, row, seed, t0):
-        key = jax.random.key(seed)
-
-        def slot(g, k, h_slot):
-            if len(algo_set) == 1:
-                return _slot_update(
-                    g, k, algo=algo_set[0], fading=fading, p=p,
-                    mask=row["mask"], n_sizes=n_sizes, n_antennas=n_antennas,
-                    m_sizes=m_sizes, invert_channel=invert_channel,
-                    h_min=h_min, h_slot=h_slot)
-            branches = [
-                (lambda kk, a=a: _slot_update(
-                    g, kk, algo=a, fading=fading, p=p, mask=row["mask"],
-                    n_sizes=n_sizes, n_antennas=n_antennas, m_sizes=m_sizes,
-                    invert_channel=invert_channel, h_min=h_min,
-                    h_slot=h_slot))
-                for a in algo_set
-            ]
-            return jax.lax.switch(p["algo_idx"], branches, k)
-
-        def body(carry, x):
-            k, h_slot = x
-            if use_ec:
-                theta, m, e_res, cum_e = carry
-            else:
-                theta, m, cum_e = carry
-            theta_eval = theta - p["nest"] * beta * p["gamma"] * m
-            g = (grad_fn(row, theta_eval) if row_based
-                 else grad_fn(theta_eval))
-            risk = risk_fn(row, theta) if row_based else risk_fn(theta)
-            if use_ec:
-                u = g + p["ec"] * e_res
-                sq = jnp.sum(u * u, axis=1)
-                alpha = jnp.minimum(1.0, jnp.sqrt(
-                    p["tx_budget"] / jnp.maximum(sq, 1e-30)))
-                # select, don't blend: inf/inf above is NaN (e.g. an
-                # overflowing row with the default unbounded budget) and
-                # 0*NaN would leak it into ec=0 rows
-                alpha = jnp.where(p["ec"] > 0, alpha, 1.0)
-                x_tx = alpha[:, None] * u
-                e_res = p["ec"] * (u - x_tx)
-            else:
-                x_tx = g
-            cum_e = cum_e + p["energy"] * jnp.sum(
-                x_tx.astype(jnp.float32) ** 2)
-            v = slot(x_tx, k, h_slot)
-            m = p["gamma"] * m + v
-            theta = theta - beta * m
-            carry = (theta, m, e_res, cum_e) if use_ec \
-                else (theta, m, cum_e)
-            return carry, (risk, cum_e)
-
-        step_keys = jax.random.split(key, steps)
-        h_all = None
-        if len(n_sizes) > 1 and hoistable:
-            # Node-count sweep: sample every slot's gains up front, once,
-            # instead of tracing the per-N `lax.switch` branches into the
-            # scan body (which multiplies the XLA program and its compile
-            # time — the very cost the padded N axis exists to remove).
-            # Stream-identical: each step key is split exactly as
-            # `_slot_update` would split it, and the k_h half feeds the
-            # same padded sampler. The dynamic-count sampler (one
-            # static-shape threefry program for all N) is preferred; the
-            # per-N `lax.switch` sampler is the fallback when the raw
-            # primitive is unavailable or a non-threefry PRNG is active.
-            n_max_ = row["mask"].shape[0]
-            k_hs = jax.vmap(lambda k: jax.random.split(k)[0])(step_keys)
-            if _dynamic_threefry_ok():
-                sample = lambda kh: _sample_gains_dynamic_n(
-                    kh, fading, p, n_max_)
-            else:
-                sample = lambda kh: _sample_gains_padded(
-                    kh, fading, p, n_sizes, n_max_)
-            h_all = jax.vmap(sample)(k_hs)
-        carry0 = (t0, jnp.zeros_like(t0), jnp.float32(0.0))
-        if use_ec:
-            carry0 = (t0, jnp.zeros_like(t0),
-                      jnp.zeros((row["mask"].shape[0], t0.shape[0]),
-                                jnp.float32), jnp.float32(0.0))
-        carry_fin, (risks, cum_e) = jax.lax.scan(
-            body, carry0, (step_keys, h_all))
-        theta_fin = carry_fin[0]
-        fin = risk_fn(row, theta_fin) if row_based else risk_fn(theta_fin)
-        risks = jnp.concatenate([risks, fin[None]])
-        return risks, cum_e  # (steps+1,), (steps,)
-
-    def seed_block(seeds_blk, params, betas, theta0, data):
-        per_config = jax.vmap(
-            lambda p, b, row: jax.vmap(
-                lambda s: trajectory(p, b, row, s, theta0))(seeds_blk))
-        return per_config(params, betas, data)
-
-    if n_shards > 0:
-        mesh = compat.make_mesh((n_shards,), ("mc",))
-        seed_block = compat.shard_map(
-            seed_block, mesh=mesh,
-            in_specs=(P("mc"), P(), P(), P(), P()),
-            out_specs=(P(None, "mc"), P(None, "mc")))
-    return seed_block(seeds, params, betas, theta0, data)
+_SUBMODULES = (_slots, _sampling, _problems)
 
 
-def _resolve_n_shards(n_seeds: int, shard_seeds: Optional[bool]) -> int:
-    """0 = plain path; k > 0 = shard_map over a ('mc',) mesh of k devices."""
-    if shard_seeds is False:
-        return 0
-    ndev = jax.device_count()
-    if shard_seeds is None:
-        return ndev if (ndev > 1 and n_seeds % ndev == 0) else 0
-    if n_seeds % ndev != 0:
-        raise ValueError(
-            f"shard_seeds=True needs seeds ({n_seeds}) divisible by the "
-            f"device count ({ndev})")
-    return ndev
-
-
-def run_mc(
-    problem: Union[MCProblem, MCProblemBatch, Sequence[MCProblem]],
-    channels: Sequence[ChannelConfig] | ChannelBatch,
-    algo: str | Sequence[str],
-    betas: Sequence[float] | np.ndarray,
-    steps: int,
-    seeds: int,
-    *,
-    theta0: Optional[np.ndarray] = None,
-    seed0: int = 0,
-    n_antennas: Optional[Union[int, Sequence[int]]] = None,
-    invert_channel: bool = False,
-    h_min: float = 0.3,
-    pc: Optional[Union[ProblemConstants,
-                       Sequence[ProblemConstants]]] = None,
-    momentum: float = 0.9,
-    power_budget: Optional[Union[float, Sequence[float]]] = None,
-    shard_seeds: Optional[bool] = None,
-) -> MCResult:
-    """Run `seeds` Monte Carlo trajectories for each batch row.
-
-    A row is a (problem, channel, algo, stepsize) tuple; `problem` and
-    `algo` broadcast when a single one is given. Passing a sequence of
-    problems (node counts may differ — they are padded to N_max) or a
-    sequence of algos runs the whole sweep in ONE engine compile.
-
-    Seed s uses `jax.random.key(seed0 + s)` — the same stream the sequential
-    reference path (`benchmarks.common.average_runs`) consumes, so results
-    are directly comparable. With `pc` supplied (one `ProblemConstants` or
-    one per row) the Theorem-1 bound rides along — only when every row is
-    single-antenna 'gbma', the setting Theorem 1 covers; mixed-algo calls
-    get `bounds=None`.
-
-    `n_antennas`: the edge antenna count M. An int broadcasts (static;
-    OTA algos take the MRC path, blind algos combine over M). A sequence
-    gives one M per row AS DATA — the antenna axis pads to max(M) and an
-    M-sweep batches into the same single compile (each row's key split
-    replays `split(key, m)` for its true m). Required for blind/blind_ec.
-
-    `power_budget`: per-slot, per-node transmit budget in squared-norm
-    units of the transmitted vector (scalar or one per row; default
-    unbounded). Only `blind_ec` rows enforce it, carrying the truncated
-    remainder in their local residual.
-
-    `shard_seeds` shards the seed axis over devices on a 'mc' mesh axis
-    (None: auto when divisible; no-op on one device).
-    """
-    ch_batch = channels if isinstance(channels, ChannelBatch) \
-        else ChannelBatch.stack(list(channels))
-    n_rows = len(ch_batch)
-    betas = jnp.asarray(betas, jnp.float32)
-    if betas.shape != (n_rows,):
-        raise ValueError(f"need one stepsize per row: "
-                         f"{betas.shape} vs C={n_rows}")
-    algos = (algo,) * n_rows if isinstance(algo, str) else tuple(algo)
-    if len(algos) != n_rows:
-        raise ValueError(f"need one algo per row: {len(algos)} vs C={n_rows}")
-    for a in algos:
-        if a not in ALGOS:
-            raise ValueError(f"unknown algo {a!r}; expected one of {ALGOS}")
-
-    # ---- normalize the antenna axis ------------------------------------
-    if n_antennas is None or isinstance(n_antennas, (int, np.integer)):
-        if n_antennas is not None:
-            n_antennas = int(n_antennas)
-        m_per_row, m_sizes = None, ()
-    else:
-        m_per_row = tuple(int(m) for m in n_antennas)
-        if len(m_per_row) != n_rows:
-            raise ValueError(f"need one antenna count per row: "
-                             f"{len(m_per_row)} vs C={n_rows}")
-        if any(m < 1 for m in m_per_row):
-            raise ValueError(f"antenna counts must be >= 1: {m_per_row}")
-        m_sizes = tuple(sorted(set(m_per_row)))
-        n_antennas = None  # the static broadcast arg is off in per-row mode
-    if any(a in _BLIND_ALGOS for a in algos) \
-            and n_antennas is None and not m_sizes:
-        raise ValueError(
-            "blind/blind_ec need n_antennas (the edge antenna count M)")
-
-    # ---- normalize the problem axis ------------------------------------
-    if isinstance(problem, MCProblemBatch):
-        batch_prob = problem
-    elif isinstance(problem, MCProblem):
-        batch_prob = None  # closure path: one problem shared by all rows
-    else:
-        probs = list(problem)
-        if len(probs) == 1:
-            batch_prob = None
-            problem = probs[0]
-        else:
-            if len(probs) != n_rows:
-                raise ValueError(
-                    f"need one problem per row: {len(probs)} vs C={n_rows}")
-            batch_prob = MCProblemBatch.stack(probs)
-
-    if batch_prob is not None:
-        row_based = True
-        grad_fn, risk_fn = batch_prob.grad_fn, batch_prob.risk_fn
-        data = dict(batch_prob.data)
-        n_nodes = batch_prob.n_nodes
-        dim, n_max = batch_prob.dim, batch_prob.n_max
-    else:
-        row_based = False
-        grad_fn, risk_fn = problem.grad_fn, problem.risk_fn
-        n_nodes = (problem.n_nodes,) * n_rows
-        dim, n_max = problem.dim, problem.n_nodes
-        data = {"mask": jnp.ones((n_rows, n_max), jnp.float32)}
-
-    n_sizes = tuple(sorted(set(n_nodes)))
-    algo_set = tuple(dict.fromkeys(algos))
-    params = dict(ch_batch.params)
-    params["n_nodes"] = jnp.asarray(n_nodes, jnp.float32)
-    params["n_idx"] = jnp.asarray(
-        [n_sizes.index(n) for n in n_nodes], jnp.int32)
-    params["algo_idx"] = jnp.asarray(
-        [algo_set.index(a) for a in algos], jnp.int32)
-    params["gamma"] = jnp.asarray(
-        [momentum if a in ("momentum", "nesterov") else 0.0 for a in algos],
-        jnp.float32)
-    params["nest"] = jnp.asarray(
-        [1.0 if a == "nesterov" else 0.0 for a in algos], jnp.float32)
-    params["ec"] = jnp.asarray(
-        [1.0 if a == "blind_ec" else 0.0 for a in algos], jnp.float32)
-    if power_budget is None:
-        budgets = (float("inf"),) * n_rows
-    elif isinstance(power_budget, (int, float, np.integer, np.floating)):
-        budgets = (float(power_budget),) * n_rows
-    else:
-        budgets = tuple(float(b) for b in power_budget)
-        if len(budgets) != n_rows:
-            raise ValueError(f"need one power budget per row: "
-                             f"{len(budgets)} vs C={n_rows}")
-    params["tx_budget"] = jnp.asarray(budgets, jnp.float32)
-    if m_sizes:
-        params["n_antennas"] = jnp.asarray(m_per_row, jnp.float32)
-        params["m_idx"] = jnp.asarray(
-            [m_sizes.index(m) for m in m_per_row], jnp.int32)
-
-    t0 = jnp.zeros((dim,), jnp.float32) if theta0 is None \
-        else jnp.asarray(theta0, jnp.float32)
-    seed_ints = jnp.arange(seed0, seed0 + seeds, dtype=jnp.int32)
-    n_shards = _resolve_n_shards(seeds, shard_seeds)
-    risks, cum_e = _mc_core(
-        params, betas, t0, seed_ints, data,
-        grad_fn=grad_fn, risk_fn=risk_fn, row_based=row_based,
-        algo_set=algo_set, fading=ch_batch.fading, steps=steps,
-        n_sizes=n_sizes, n_antennas=n_antennas, m_sizes=m_sizes,
-        invert_channel=invert_channel, h_min=h_min, n_shards=n_shards)
-    risks = np.asarray(risks)
-    mean = np.mean(risks, axis=1)
-    if seeds > 1:
-        ci95 = 1.96 * np.std(risks, axis=1, ddof=1) / np.sqrt(seeds)
-    else:
-        ci95 = np.zeros_like(mean)
-    bounds = None
-    if pc is not None:
-        pcs = [pc] * n_rows if isinstance(pc, ProblemConstants) else list(pc)
-        if len(pcs) != n_rows:
-            raise ValueError(f"need one ProblemConstants per row: "
-                             f"{len(pcs)} vs C={n_rows}")
-        if all(a == "gbma" for a in algos) and n_antennas is None \
-                and not m_sizes:
-            ks = np.arange(1, steps + 2)
-            bounds = np.stack([
-                theorem1_bound(ks, float(b), row_pc, cfg, n)
-                for b, cfg, row_pc, n in zip(
-                    np.asarray(betas), ch_batch.configs, pcs, n_nodes)])
-    return MCResult(
-        risks=risks, mean=mean.astype(np.float32),
-        ci95=ci95.astype(np.float32), cum_energy=np.asarray(cum_e),
-        bounds=bounds)
-
-
-def energy_to_target(res: MCResult, target: float) -> np.ndarray:
-    """Per-row mean (over seeds) total transmitted energy until the risk
-    curve first hits `target` (paper Fig. 6).
-
-    risks[k] is the risk of θ_k, reached after k transmission slots, and
-    cum_energy[j] is the energy of slots 1..j+1 — so a first hit at index
-    k costs cum_energy[k-1], and a target already met at initialization
-    (k == 0) costs nothing. Seeds that never hit spend the full-horizon
-    energy.
-    """
-    c, s, kp1 = res.risks.shape
-    hit_mask = res.risks <= target
-    hit = np.argmax(hit_mask, axis=2)  # first True, 0 when none
-    hit = np.where(hit_mask.any(axis=2), hit, kp1 - 1)
-    # prepend the zero-cost column so index k charges cum_energy[k-1]
-    ce = np.concatenate(
-        [np.zeros((c, s, 1), res.cum_energy.dtype), res.cum_energy], axis=2)
-    per_seed = np.take_along_axis(ce, hit[:, :, None], axis=2)[..., 0]
-    return per_seed.mean(axis=1)
+def __getattr__(name: str):
+    # registry-derived views must stay live (late register_* calls show up)
+    if name in ("ALGOS", "_OTA_ALGOS", "_BLIND_ALGOS"):
+        return getattr(_slots, name)
+    if name == "_PER_NODE_FIELDS":
+        return _problems._per_node_fields()
+    if name == "_ROW_FNS":
+        return _problems._row_fns()
+    # underscore helpers (samplers, row fns, ...) kept importable from the
+    # old module path without enumerating them one by one
+    for mod in _SUBMODULES:
+        if hasattr(mod, name):
+            return getattr(mod, name)
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

@@ -38,3 +38,16 @@ def partition_rows(X: np.ndarray, y: np.ndarray, n_nodes: int):
     device). Returns list of (X_n, y_n)."""
     idx = np.array_split(np.arange(X.shape[0]), n_nodes)
     return [(X[i], y[i]) for i in idx]
+
+
+def partition_noniid(X: np.ndarray, y: np.ndarray, n_nodes: int):
+    """Label-skewed (non-iid) partition: sort the examples by target value
+    (stable, so ties keep dataset order) and hand out contiguous shards.
+
+    This is the classic pathological federated split — each node sees a
+    narrow slice of the label distribution, so local gradients disagree and
+    the aggregation over the MAC actually matters (federated SGD over
+    wireless channels, Amiri & Gündüz arXiv:1907.09769). Returns list of
+    (X_n, y_n)."""
+    order = np.argsort(y, kind="stable")
+    return partition_rows(X[order], y[order], n_nodes)

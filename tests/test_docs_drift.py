@@ -1,28 +1,31 @@
 """Doc-drift guards: the documentation surface cannot silently diverge
 from the registries it documents.
 
-  * every `montecarlo.ALGOS` entry has a heading in `docs/algorithms.md`;
+  * every `montecarlo.ALGOS` entry (the `mc.slots` algo registry) has a
+    heading in `docs/algorithms.md`;
+  * every `mc.problems.PROBLEMS` kind has a heading in
+    `docs/montecarlo.md`'s problem-registry section;
   * every `benchmarks/fig*.py` script is registered in `benchmarks/run.py`
     and listed in the README figure table;
   * every `repro.compat.__all__` name is documented in
     `docs/algorithms.md`'s compat section;
   * the docs the README links to exist in the repo.
 
-Adding an algorithm, a figure script, or a compat symbol without
-documenting/registering it fails tier-1.
+Adding an algorithm, a problem kind, a figure script, or a compat symbol
+without documenting/registering it fails tier-1.
 """
 import pathlib
 import re
 
 from repro import compat
-from repro.core.montecarlo import ALGOS
+from repro.core.montecarlo import ALGOS, PROBLEMS
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 def _figure_scripts():
     figs = sorted((ROOT / "benchmarks").glob("fig*.py"))
-    assert len(figs) >= 6  # fig2..fig7 at time of writing
+    assert len(figs) >= 7  # fig2..fig8 at time of writing
     return figs
 
 
@@ -33,6 +36,16 @@ def test_every_algo_has_a_heading_in_algorithms_md():
             f"algo {algo!r} is in montecarlo.ALGOS but has no heading in "
             "docs/algorithms.md — document its update rule, RNG semantics, "
             "energy accounting and slot path there")
+
+
+def test_every_problem_kind_has_a_heading_in_montecarlo_md():
+    text = (ROOT / "docs" / "montecarlo.md").read_text()
+    for kind in PROBLEMS:
+        assert re.search(rf"^#+ .*`{kind}`", text, re.M), (
+            f"problem kind {kind!r} is registered in mc.problems.PROBLEMS "
+            "but has no heading in docs/montecarlo.md — document its "
+            "objective, risk metric and pad semantics in the problem-"
+            "registry section")
 
 
 def test_every_figure_script_is_registered_in_run_py():

@@ -293,6 +293,116 @@ def test_problem_batch_rejects_unstackable():
         MCProblemBatch.stack([q, handbuilt])
 
 
+def test_problem_batch_rejects_mixed_kinds_and_dims():
+    from repro.core.montecarlo import localization_mc_problem
+    from repro.data.synthetic import localization_field
+
+    q3 = quadratic_mc_problem(np.eye(3, dtype=np.float32),
+                              np.zeros(3, np.float32), 0.1, np.zeros(3))
+    q4 = quadratic_mc_problem(np.eye(4, dtype=np.float32),
+                              np.zeros(4, np.float32), 0.1, np.zeros(4))
+    r, x, src, _ = localization_field(5, signal_a=10.0, seed=0)
+    loc = localization_mc_problem(r, x, src, 10.0)
+    # mixed kinds
+    with pytest.raises(ValueError, match="one\\s+kind"):
+        MCProblemBatch.stack([q3, loc])
+    # same kind, mismatched dims
+    with pytest.raises(ValueError, match="dim"):
+        MCProblemBatch.stack([q3, q4])
+    # unregistered kind
+    import dataclasses
+    alien = dataclasses.replace(q3, kind="no_such_kind")
+    with pytest.raises(ValueError, match="not registered"):
+        MCProblemBatch.stack([alien, alien])
+
+
+def test_localization_pad_sentinel_keeps_padded_gradients_zero():
+    """The r=1e6 pad sentinel places padded sensors far from the search
+    region so 1/d² stays finite — padded rows must come out EXACTLY zero
+    (after masking) and finite (before the mask they must not be inf/nan,
+    or 0·inf would poison the row)."""
+    from repro.core.mc.problems import (PROBLEMS, localization_mc_problem)
+    from repro.data.synthetic import localization_field
+
+    parts = [localization_field(n, signal_a=100.0, snr_db=-10.0, seed=i)
+             for i, n in enumerate((4, 9))]
+    locs = [localization_mc_problem(r, x, src, 100.0)
+            for r, x, src, _ in parts]
+    batch = MCProblemBatch.stack(locs)
+    assert batch.n_max == 9
+    grad_row = PROBLEMS["localization"].grad_row
+    theta = jnp.asarray([45.0, 45.0], jnp.float32)
+    for i, n in enumerate((4, 9)):
+        row = {k: v[i] for k, v in batch.data.items()}
+        g = np.asarray(grad_row(row, theta))
+        assert np.all(np.isfinite(g))
+        assert np.all(g[n:] == 0.0), "padded sensor rows must be exact 0"
+        # the pad value itself (not the mask alone) keeps things finite:
+        # an unmasked evaluation at the pad sentinel is tiny but finite
+        row_nomask = dict(row, mask=jnp.ones_like(row["mask"]))
+        g_nomask = np.asarray(grad_row(row_nomask, theta))
+        assert np.all(np.isfinite(g_nomask))
+
+
+def test_quadratic_pad_zero_keeps_padded_gradients_zero():
+    from repro.core.mc.problems import PROBLEMS
+
+    probs = [MSDProblem.make(n, dim=6).to_mc() for n in (5, 8)]
+    batch = MCProblemBatch.stack(probs)
+    grad_row = PROBLEMS["quadratic"].grad_row
+    theta = jnp.ones(6, jnp.float32)
+    row = {k: v[0] for k, v in batch.data.items()}
+    g = np.asarray(grad_row(row, theta))
+    assert np.all(g[5:] == 0.0)
+    assert np.all(np.isfinite(g))
+
+
+def test_ota_impl_ref_parity(prob, mc):
+    """run_mc(ota_impl='ref') routes the OTA slot through the
+    `repro.kernels.ota` jnp oracle; trajectories must match the inline
+    path (same RNG stream, same math up to association order)."""
+    ch = _ch()
+    beta = stepsize_theorem1(prob.pc, ch, N, safety=0.8)
+    r_inline = run_mc(mc, [ch], "gbma", [beta], STEPS, SEEDS)
+    r_ref = run_mc(mc, [ch], "gbma", [beta], STEPS, SEEDS, ota_impl="ref")
+    np.testing.assert_allclose(r_ref.risks, r_inline.risks, rtol=1e-5,
+                               atol=1e-9)
+    # momentum shares the slot path
+    r_mom = run_mc(mc, [ch], "momentum", [beta], STEPS, SEEDS,
+                   momentum=0.5)
+    r_mom_ref = run_mc(mc, [ch], "momentum", [beta], STEPS, SEEDS,
+                       momentum=0.5, ota_impl="ref")
+    np.testing.assert_allclose(r_mom_ref.risks, r_mom.risks, rtol=1e-5,
+                               atol=1e-9)
+
+
+def test_ota_impl_pallas_parity_interpret(prob, mc):
+    """The Pallas kernel path (interpret mode off-TPU) matches inline —
+    the ROADMAP 'pallas path for the per-slot aggregation' item. Short
+    horizon: interpret mode is slow."""
+    ch = _ch()
+    beta = stepsize_theorem1(prob.pc, ch, N, safety=0.8)
+    steps = 5
+    r_inline = run_mc(mc, [ch], "gbma", [beta], steps, 1)
+    r_pallas = run_mc(mc, [ch], "gbma", [beta], steps, 1,
+                      ota_impl="pallas")
+    np.testing.assert_allclose(r_pallas.risks, r_inline.risks, rtol=1e-5,
+                               atol=1e-9)
+
+
+def test_ota_impl_rejects_padded_sweeps_and_bad_values(prob, mc):
+    probs = [MSDProblem.make(n, dim=8) for n in (6, 9)]
+    mcs = [p.to_mc() for p in probs]
+    chs = [_ch(), _ch()]
+    with pytest.raises(ValueError, match="single node count"):
+        run_mc(mcs, chs, "gbma", [0.01, 0.01], 4, 1, ota_impl="ref")
+    with pytest.raises(ValueError, match="ota_impl"):
+        run_mc(mc, [_ch()], "gbma", [0.01], 4, 1, ota_impl="fast")
+    # 'auto' on a padded sweep silently keeps the inline path
+    res = run_mc(mcs, chs, "gbma", [0.01, 0.01], 4, 1, ota_impl="auto")
+    assert np.all(np.isfinite(res.risks))
+
+
 @settings(max_examples=24, deadline=None)
 @given(fading=st.sampled_from(["equal", "rayleigh", "rician", "lognormal"]),
        scale=st.floats(0.2, 2.0),
