@@ -1,33 +1,56 @@
 """Timed comparisons for the Monte Carlo engine, emitted to
 `benchmarks/BENCH_montecarlo.json` so the speedups are tracked across PRs.
 
+Methodology (docs/performance.md): every workload separates **cold** time
+(first call, XLA compile included — what a one-shot script pays) from
+**warm steady-state** time (best of `WARM_REPS` calls after a warm-up —
+what a sweep loop pays per call). Cold timings clear the jit cache first;
+warm timings are best-of to shave scheduler noise on small shared
+containers. The analytic peak-memory model (`mc.exec.estimate_peak_bytes`)
+is recorded next to the timings.
+
+Workloads:
+
 1. engine vs the seed per-seed Python loop (`average_runs` + host-side
    `MSDProblem.excess_risk`) at the paper's Fig. 3 operating point — MSD
-   regression, N=500 nodes, Rayleigh fading, 300 GBMA steps, SEEDS=4. Both
-   paths get one untimed warm-up call (the engine compiles once; the legacy
-   path re-traces its scan every call, which is part of what it costs and is
-   measured).
+   regression, N=500 nodes, Rayleigh fading, 300 GBMA steps, SEEDS=4. The
+   legacy path re-traces its scan every call, which is part of what it
+   costs and is measured.
 
 2. node-count sweep: ONE padded/masked engine call over all N (a single
    `_mc_core` compile) vs the pre-PR-2 path of one engine call — hence one
-   XLA compile — per N. Both are timed cold (the jit cache is cleared
-   first): compile time is precisely what the padded N axis removes, so it
-   belongs in the measurement.
+   XLA compile — per N. Timed cold (compile time is precisely what the
+   padded N axis removes) plus the warm steady state of the one-compile
+   path.
 
-3. fig7 antenna sweep: ONE per-row-`n_antennas` engine call (antenna counts
-   as data, a single compile) vs one engine call — one compile — per
-   antenna count M. Timed cold, like 2.: the antenna count is a draw-shape
-   choice, so without the counts-as-data key split every M costs a compile.
+3. fig7 antenna sweep: ONE per-row-`n_antennas` engine call (antenna
+   counts as data, a single compile) vs one engine call — one compile —
+   per antenna count M. Cold + warm, like 2.
 
 4. fig8 batch-fraction sweep (stochastic federated logistic): ONE per-row
-   `batch_frac` engine call (the minibatch lane count is traced data) vs
-   one engine call — one compile — per fraction (each fraction changes the
-   static minibatch width `b_max`). Timed cold.
+   `batch_frac` engine call vs one engine call — one compile — per
+   fraction. Cold + warm, like 2.
+
+5. **large_chunked**: the execution-layer workload (seeds ≥ 256,
+   N ≥ 4096). The all-live hoisted path exceeds the bench's device-memory
+   budget (`MEM_BUDGET_GIB`, the CI-class container the scheduler is sized
+   against), so this entry runs ONLY under `seed_chunk`; it compares the
+   new path (hoisted RNG plan + seed chunking + on-device seed reduction)
+   against the pre-exec-layer engine (in-scan RNG, all seeds live, host
+   curves) warm-for-warm on the same workload, plus the plan-only chunked
+   A/B.
+
+`--smoke` shrinks every workload to CI size, writes
+`BENCH_montecarlo.smoke.json` (never the tracked full-scale record),
+asserts the warm timings are finite and the curve agreements hold, and
+exits nonzero on violation — the CI bench job runs exactly that and
+uploads the JSON artifact.
 """
 from __future__ import annotations
 
 import json
 import os
+import sys
 import time
 
 import jax
@@ -37,6 +60,7 @@ import numpy as np
 from benchmarks.common import MSDProblem, average_runs
 from repro.core.channel import ChannelConfig
 from repro.core.gbma import GBMASimulator
+from repro.core.mc.exec import estimate_peak_bytes
 from repro.core.montecarlo import clear_cache, run_mc, trace_count
 from repro.core.theory import stepsize_theorem1
 
@@ -49,13 +73,25 @@ SWEEP_M_GRID = (2, 8, 32)
 # no-sampling path (a different, cheaper program than a sweep row), so
 # including it would time non-equivalent computations
 SWEEP_FRAC_GRID = (0.75, 0.5, 0.25)
+# the execution-layer workload: all-live exceeds MEM_BUDGET_GIB, so it
+# runs only under seed_chunk (the point of the chunked scheduler). dim=24
+# keeps the slot channel-dominated — the regime the RNG plan targets
+LARGE = {"n": 4096, "dim": 24, "steps": 150, "seeds": 1024, "chunk": 32}
+MEM_BUDGET_GIB = 2.0
+WARM_REPS = 3
 OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_montecarlo.json")
+# --smoke writes here instead: CI-size numbers must never clobber the
+# tracked full-scale record
+SMOKE_OUT_PATH = os.path.join(os.path.dirname(__file__),
+                              "BENCH_montecarlo.smoke.json")
 
 
-def _time(fn, reps: int = 3) -> tuple[float, np.ndarray]:
-    fn()  # warm-up (engine: compile; legacy: first trace)
-    best = float("inf")
-    out = None
+def _warm(fn, reps: int = None) -> tuple[float, object]:
+    """Warm steady-state: one untimed warm-up call (compile), then best of
+    `reps` timed calls."""
+    reps = WARM_REPS if reps is None else reps
+    fn()
+    best, out = float("inf"), None
     for _ in range(reps):
         t0 = time.perf_counter()
         out = fn()
@@ -63,13 +99,23 @@ def _time(fn, reps: int = 3) -> tuple[float, np.ndarray]:
     return best, out
 
 
-def _time_cold(fn) -> tuple[float, object, int]:
-    """One cold wall-clock measurement, XLA compiles included."""
+def _cold(fn) -> tuple[float, object, int]:
+    """One cold wall-clock measurement, XLA compiles included (the jit
+    cache is cleared first)."""
     clear_cache()
-    c0 = trace_count()
     t0 = time.perf_counter()
     out = fn()
-    return time.perf_counter() - t0, out, trace_count() - c0
+    return time.perf_counter() - t0, out, trace_count()
+
+
+def _rel(a, b) -> float:
+    a, b = np.asarray(a), np.asarray(b)
+    return float(np.max(np.abs(a - b) / np.maximum(np.abs(b), 1e-12)))
+
+
+def _warm_step_us(warm_s: float, rows: int, steps: int, seeds: int) -> float:
+    """Warm time per (row, seed, step) trajectory step, in microseconds."""
+    return warm_s / (rows * steps * seeds) * 1e6
 
 
 def bench_single_config() -> dict:
@@ -92,16 +138,38 @@ def bench_single_config() -> dict:
     def engine():
         return run_mc(mc, [ch], "gbma", [beta], STEPS, SEEDS).mean[0]
 
-    t_seed, curve_seed = _time(seed_loop)
-    t_engine, curve_engine = _time(engine)
-    rel = float(np.max(np.abs(curve_engine - curve_seed)
-                       / np.maximum(np.abs(curve_seed), 1e-12)))
+    t_cold, _, _ = _cold(engine)
+    t_seed, curve_seed = _warm(seed_loop)
+    t_engine, curve_engine = _warm(engine)
     return {
         "workload": {"problem": "msd_regression", "n_nodes": N,
-                     "steps": STEPS, "seeds": SEEDS, "fading": "rayleigh"},
+                     "dim": prob.pc.dim, "steps": STEPS, "seeds": SEEDS,
+                     "fading": "rayleigh"},
         "seed_loop_s": round(t_seed, 4),
         "engine_s": round(t_engine, 4),
+        "engine_cold_s": round(t_cold, 4),
+        "engine_warm_step_us": round(
+            _warm_step_us(t_engine, 1, STEPS, SEEDS), 3),
         "speedup": round(t_seed / t_engine, 2),
+        "max_rel_curve_diff": _rel(curve_engine, curve_seed),
+    }
+
+
+def _sweep_record(workload: dict, per_key: str, t_per: float,
+                  compiles_per: int, t_one_cold: float, compiles_one: int,
+                  t_one_warm: float, rows: int, steps: int, seeds: int,
+                  rel: float) -> dict:
+    return {
+        "workload": {**workload, "timing": "cold compiles included; "
+                     "one_compile_warm_s is steady-state"},
+        f"per_{per_key}_compile_s": round(t_per, 4),
+        f"per_{per_key}_compiles": compiles_per,
+        "one_compile_s": round(t_one_cold, 4),
+        "one_compile_compiles": compiles_one,
+        "one_compile_warm_s": round(t_one_warm, 4),
+        "one_compile_warm_step_us": round(
+            _warm_step_us(t_one_warm, rows, steps, seeds), 3),
+        "speedup": round(t_per / t_one_cold, 2),
         "max_rel_curve_diff": rel,
     }
 
@@ -121,23 +189,16 @@ def bench_n_sweep() -> dict:
     def one_compile():
         return run_mc(mcs, chs, "gbma", betas, STEPS, SEEDS).mean
 
-    t_per_n, curves_per_n, compiles_per_n = _time_cold(per_n)
-    t_padded, curves_padded, compiles_padded = _time_cold(one_compile)
+    t_per_n, curves_per_n, compiles_per_n = _cold(per_n)
+    t_padded, curves_padded, compiles_padded = _cold(one_compile)
+    t_warm, _ = _warm(one_compile)
     rel = float(max(
-        np.max(np.abs(cp - cs) / np.maximum(np.abs(cs), 1e-12))
-        for cp, cs in zip(curves_padded, curves_per_n)))
-    return {
-        "workload": {"problem": "msd_regression",
-                     "n_grid": list(SWEEP_N_GRID), "steps": STEPS,
-                     "seeds": SEEDS, "fading": "rayleigh",
-                     "timing": "cold, compiles included"},
-        "per_n_compile_s": round(t_per_n, 4),
-        "per_n_compiles": compiles_per_n,
-        "one_compile_s": round(t_padded, 4),
-        "one_compile_compiles": compiles_padded,
-        "speedup": round(t_per_n / t_padded, 2),
-        "max_rel_curve_diff": rel,
-    }
+        _rel(cp, cs) for cp, cs in zip(curves_padded, curves_per_n)))
+    return _sweep_record(
+        {"problem": "msd_regression", "n_grid": list(SWEEP_N_GRID),
+         "steps": STEPS, "seeds": SEEDS, "fading": "rayleigh"},
+        "n", t_per_n, compiles_per_n, t_padded, compiles_padded, t_warm,
+        len(SWEEP_N_GRID), STEPS, SEEDS, rel)
 
 
 def bench_m_sweep() -> dict:
@@ -159,23 +220,17 @@ def bench_m_sweep() -> dict:
                            [beta] * len(SWEEP_M_GRID), STEPS, SEEDS,
                            n_antennas=SWEEP_M_GRID).mean)
 
-    t_per_m, curves_per_m, compiles_per_m = _time_cold(per_m)
-    t_one, curves_one, compiles_one = _time_cold(one_compile)
+    t_per_m, curves_per_m, compiles_per_m = _cold(per_m)
+    t_one, curves_one, compiles_one = _cold(one_compile)
+    t_warm, _ = _warm(one_compile)
     rel = float(max(
-        np.max(np.abs(cp - cs) / np.maximum(np.abs(cs), 1e-12))
-        for cp, cs in zip(curves_one, curves_per_m)))
-    return {
-        "workload": {"problem": "msd_regression", "n_nodes": n,
-                     "m_grid": list(SWEEP_M_GRID), "algo": "blind",
-                     "steps": STEPS, "seeds": SEEDS, "fading": "rayleigh",
-                     "timing": "cold, compiles included"},
-        "per_m_compile_s": round(t_per_m, 4),
-        "per_m_compiles": compiles_per_m,
-        "one_compile_s": round(t_one, 4),
-        "one_compile_compiles": compiles_one,
-        "speedup": round(t_per_m / t_one, 2),
-        "max_rel_curve_diff": rel,
-    }
+        _rel(cp, cs) for cp, cs in zip(curves_one, curves_per_m)))
+    return _sweep_record(
+        {"problem": "msd_regression", "n_nodes": n, "dim": prob.pc.dim,
+         "m_grid": list(SWEEP_M_GRID), "algo": "blind", "steps": STEPS,
+         "seeds": SEEDS, "fading": "rayleigh"},
+        "m", t_per_m, compiles_per_m, t_one, compiles_one, t_warm,
+        len(SWEEP_M_GRID), STEPS, SEEDS, rel)
 
 
 def bench_frac_sweep() -> dict:
@@ -201,78 +256,202 @@ def bench_frac_sweep() -> dict:
                            [beta] * len(SWEEP_FRAC_GRID), STEPS, SEEDS,
                            batch_frac=SWEEP_FRAC_GRID).mean)
 
-    t_per, curves_per, compiles_per = _time_cold(per_frac)
-    t_one, curves_one, compiles_one = _time_cold(one_compile)
+    t_per, curves_per, compiles_per = _cold(per_frac)
+    t_one, curves_one, compiles_one = _cold(one_compile)
+    t_warm, _ = _warm(one_compile)
     rel = float(max(
-        np.max(np.abs(cp - cs) / np.maximum(np.abs(cs), 1e-12))
-        for cp, cs in zip(curves_one, curves_per)))
+        _rel(cp, cs) for cp, cs in zip(curves_one, curves_per)))
+    return _sweep_record(
+        {"problem": "federated_logistic", "n_nodes": n,
+         "samples_per_node": k, "frac_grid": list(SWEEP_FRAC_GRID),
+         "steps": STEPS, "seeds": SEEDS, "fading": "rayleigh"},
+        "frac", t_per, compiles_per, t_one, compiles_one, t_warm,
+        len(SWEEP_FRAC_GRID), STEPS, SEEDS, rel)
+
+
+def bench_large_chunked(warm_reps: int = 2) -> dict:
+    """The execution-layer entry: seeds ≥ 256 at N ≥ 4096, runnable only
+    under `seed_chunk` within the bench's device-memory budget.
+
+    Three measurements on the SAME workload:
+      * `current_engine_warm_s` — the pre-exec-layer engine: in-scan RNG,
+        all seeds live in one call, per-seed curves to host;
+      * `new_path_warm_s` — hoisted RNG plan + seed_chunk + on-device
+        seed reduction (the execution layer's throughput configuration);
+      * `inscan_chunked_warm_s` — the chunked scheduler with the legacy
+        RNG plan, isolating how much of the win is the RNG plan vs the
+        scheduler.
+    """
+    n, dim = LARGE["n"], LARGE["dim"]
+    steps, seeds, chunk = LARGE["steps"], LARGE["seeds"], LARGE["chunk"]
+    prob = MSDProblem.make(n, dim=dim)
+    mc = prob.to_mc()
+    ch = ChannelConfig(fading="rayleigh", scale=1.0, noise_std=1.0,
+                       energy=1.0 / n)
+    beta = 0.01
+
+    mem_all_live = estimate_peak_bytes(
+        n_rows=1, seeds=seeds, steps=steps, n_max=n, dim=dim,
+        algo_set=("gbma",), seed_chunk=None)
+    mem_chunked = estimate_peak_bytes(
+        n_rows=1, seeds=seeds, steps=steps, n_max=n, dim=dim,
+        algo_set=("gbma",), seed_chunk=chunk, keep_seed_curves=False)
+    budget = MEM_BUDGET_GIB * 2**30
+    fits_all_live = mem_all_live["device_peak_bytes"] <= budget
+
+    def current_engine():
+        return run_mc(mc, [ch], "gbma", [beta], steps, seeds,
+                      rng_plan="inscan").mean
+
+    def new_path():
+        return run_mc(mc, [ch], "gbma", [beta], steps, seeds,
+                      rng_plan="hoisted", seed_chunk=chunk,
+                      keep_seed_curves=False).mean
+
+    def inscan_chunked():
+        return run_mc(mc, [ch], "gbma", [beta], steps, seeds,
+                      rng_plan="inscan", seed_chunk=chunk,
+                      keep_seed_curves=False).mean
+
+    # warm both compiles first, then INTERLEAVE the timed reps: on small
+    # shared containers the machine's throughput drifts between runs, and
+    # back-to-back blocks would charge that drift to whichever path ran
+    # second — alternating reps pairs the noise instead
+    mean_new = new_path()
+    mean_cur = current_engine()
+    t_new = t_cur = float("inf")
+    for _ in range(warm_reps):
+        t0 = time.perf_counter()
+        current_engine()
+        t_cur = min(t_cur, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        new_path()
+        t_new = min(t_new, time.perf_counter() - t0)
+    t_insc, _ = _warm(inscan_chunked, reps=1)
     return {
-        "workload": {"problem": "federated_logistic", "n_nodes": n,
-                     "samples_per_node": k,
-                     "frac_grid": list(SWEEP_FRAC_GRID), "steps": STEPS,
-                     "seeds": SEEDS, "fading": "rayleigh",
-                     "timing": "cold, compiles included"},
-        "per_frac_compile_s": round(t_per, 4),
-        "per_frac_compiles": compiles_per,
-        "one_compile_s": round(t_one, 4),
-        "one_compile_compiles": compiles_one,
-        "speedup": round(t_per / t_one, 2),
-        "max_rel_curve_diff": rel,
+        "workload": {"problem": "msd_regression", "n_nodes": n, "dim": dim,
+                     "steps": steps, "seeds": seeds, "seed_chunk": chunk,
+                     "fading": "rayleigh",
+                     "timing": "warm steady-state, best-of reps"},
+        "current_engine_warm_s": round(t_cur, 3),
+        "new_path_warm_s": round(t_new, 3),
+        "inscan_chunked_warm_s": round(t_insc, 3),
+        "warm_speedup": round(t_cur / t_new, 2),
+        "new_path_warm_step_us": round(
+            _warm_step_us(t_new, 1, steps, seeds), 3),
+        "max_rel_curve_diff": _rel(mean_new, mean_cur),
+        "memory_budget_gib": MEM_BUDGET_GIB,
+        "fits_all_live": bool(fits_all_live),
+        "all_live_est_bytes": int(mem_all_live["device_peak_bytes"]),
+        "chunked_est_bytes": int(mem_chunked["device_peak_bytes"]),
+        "runs_only_under_seed_chunk": bool(not fits_all_live),
     }
 
 
-def run(verbose: bool = True) -> list[str]:
+def _smoke_shrink():
+    """CI-size constants: every path exercised, nothing slow."""
+    global N, STEPS, SEEDS, SWEEP_N_GRID, SWEEP_M_GRID, LARGE, WARM_REPS
+    N, STEPS, SEEDS = 48, 40, 2
+    SWEEP_N_GRID = (16, 25)
+    SWEEP_M_GRID = (1, 3)
+    LARGE = {"n": 256, "dim": 16, "steps": 30, "seeds": 16, "chunk": 4}
+    WARM_REPS = 2
+
+
+def run(verbose: bool = True, smoke: bool = False) -> list[str]:
+    if smoke:
+        _smoke_shrink()
     single = bench_single_config()
     sweep = bench_n_sweep()
     m_sweep = bench_m_sweep()
     frac_sweep = bench_frac_sweep()
+    large = bench_large_chunked(warm_reps=1 if smoke else 3)
     record = {
         **single,
         "n_sweep": sweep,
         "fig7_m_sweep": m_sweep,
         "fig8_frac_sweep": frac_sweep,
+        "large_chunked": large,
+        "timing_methodology": {
+            "cold": "jit cache cleared, one call, compiles included",
+            "warm": f"best of {WARM_REPS} after one untimed warm-up",
+        },
+        "smoke": smoke,
         "jax_version": jax.__version__,
         "backend": jax.default_backend(),
     }
-    with open(OUT_PATH, "w") as f:
+    out_path = SMOKE_OUT_PATH if smoke else OUT_PATH
+    with open(out_path, "w") as f:
         json.dump(record, f, indent=2)
         f.write("\n")
     rows = [
         f"bench_montecarlo,seed_loop_s,{single['seed_loop_s']:.4f}",
         f"bench_montecarlo,engine_s,{single['engine_s']:.4f}",
+        f"bench_montecarlo,engine_cold_s,{single['engine_cold_s']:.4f}",
         f"bench_montecarlo,speedup,{single['speedup']:.2f}",
-        f"bench_montecarlo,max_rel_curve_diff,{single['max_rel_curve_diff']:.2e}",
+        f"bench_montecarlo,max_rel_curve_diff,"
+        f"{single['max_rel_curve_diff']:.2e}",
         f"bench_montecarlo,n_sweep_per_n_s,{sweep['per_n_compile_s']:.4f}"
         f",compiles={sweep['per_n_compiles']}",
         f"bench_montecarlo,n_sweep_one_compile_s,{sweep['one_compile_s']:.4f}"
         f",compiles={sweep['one_compile_compiles']}",
+        f"bench_montecarlo,n_sweep_warm_s,{sweep['one_compile_warm_s']:.4f}",
         f"bench_montecarlo,n_sweep_speedup,{sweep['speedup']:.2f}",
-        f"bench_montecarlo,n_sweep_max_rel_curve_diff,"
-        f"{sweep['max_rel_curve_diff']:.2e}",
-        f"bench_montecarlo,fig7_m_sweep_per_m_s,"
-        f"{m_sweep['per_m_compile_s']:.4f}"
-        f",compiles={m_sweep['per_m_compiles']}",
-        f"bench_montecarlo,fig7_m_sweep_one_compile_s,"
-        f"{m_sweep['one_compile_s']:.4f}"
-        f",compiles={m_sweep['one_compile_compiles']}",
         f"bench_montecarlo,fig7_m_sweep_speedup,{m_sweep['speedup']:.2f}",
-        f"bench_montecarlo,fig7_m_sweep_max_rel_curve_diff,"
-        f"{m_sweep['max_rel_curve_diff']:.2e}",
-        f"bench_montecarlo,fig8_frac_sweep_per_frac_s,"
-        f"{frac_sweep['per_frac_compile_s']:.4f}"
-        f",compiles={frac_sweep['per_frac_compiles']}",
-        f"bench_montecarlo,fig8_frac_sweep_one_compile_s,"
-        f"{frac_sweep['one_compile_s']:.4f}"
-        f",compiles={frac_sweep['one_compile_compiles']}",
-        f"bench_montecarlo,fig8_frac_sweep_speedup,{frac_sweep['speedup']:.2f}",
-        f"bench_montecarlo,fig8_frac_sweep_max_rel_curve_diff,"
-        f"{frac_sweep['max_rel_curve_diff']:.2e}",
-        f"bench_montecarlo,json,{OUT_PATH}",
+        f"bench_montecarlo,fig7_m_sweep_warm_s,"
+        f"{m_sweep['one_compile_warm_s']:.4f}",
+        f"bench_montecarlo,fig8_frac_sweep_speedup,"
+        f"{frac_sweep['speedup']:.2f}",
+        f"bench_montecarlo,fig8_frac_sweep_warm_s,"
+        f"{frac_sweep['one_compile_warm_s']:.4f}",
+        f"bench_montecarlo,large_current_engine_warm_s,"
+        f"{large['current_engine_warm_s']:.3f}",
+        f"bench_montecarlo,large_new_path_warm_s,"
+        f"{large['new_path_warm_s']:.3f}",
+        f"bench_montecarlo,large_warm_speedup,{large['warm_speedup']:.2f}",
+        f"bench_montecarlo,large_max_rel_curve_diff,"
+        f"{large['max_rel_curve_diff']:.2e}",
+        f"bench_montecarlo,large_runs_only_under_seed_chunk,"
+        f"{int(large['runs_only_under_seed_chunk'])}",
+        f"bench_montecarlo,json,{out_path}",
     ]
     if verbose:
         print("\n".join(rows))
+    if smoke:
+        _smoke_assert(record)
     return rows
 
 
+def _smoke_assert(record: dict) -> None:
+    """The CI contract: warm step time is finite and the one-compile /
+    chunked curves match their references."""
+    problems = []
+    for key, warm in (
+        ("single", record["engine_s"]),
+        ("n_sweep", record["n_sweep"]["one_compile_warm_s"]),
+        ("fig7_m_sweep", record["fig7_m_sweep"]["one_compile_warm_s"]),
+        ("fig8_frac_sweep", record["fig8_frac_sweep"]["one_compile_warm_s"]),
+        ("large_chunked", record["large_chunked"]["new_path_warm_s"]),
+    ):
+        if not (np.isfinite(warm) and warm > 0):
+            problems.append(f"{key}: warm time {warm!r} not finite/positive")
+    for key, rel, tol in (
+        ("single", record["max_rel_curve_diff"], 1e-4),
+        ("n_sweep", record["n_sweep"]["max_rel_curve_diff"], 1e-5),
+        ("fig7_m_sweep", record["fig7_m_sweep"]["max_rel_curve_diff"], 1e-5),
+        ("fig8_frac_sweep",
+         record["fig8_frac_sweep"]["max_rel_curve_diff"], 1e-4),
+        ("large_chunked",
+         record["large_chunked"]["max_rel_curve_diff"], 1e-5),
+    ):
+        if not rel <= tol:
+            problems.append(f"{key}: max_rel_curve_diff {rel:.2e} > {tol}")
+    if problems:
+        print("SMOKE FAILURES:\n  " + "\n  ".join(problems),
+              file=sys.stderr)
+        raise SystemExit(1)
+    print("bench smoke: all warm timings finite, curves within tolerance")
+
+
 if __name__ == "__main__":
-    run()
+    run(smoke="--smoke" in sys.argv[1:])

@@ -8,8 +8,13 @@ Layers (see each module's docstring):
   * `sampling` — reference-twin RNG samplers (padded / dynamic-count
     threefry draws, antenna key replay).
   * `slots`    — per-slot algorithm updates behind `register_algo`
-    (`ALGOS` derives from the registry).
-  * `engine`   — the compiled `_mc_core`, `run_mc`, `MCResult`,
+    (`ALGOS` derives from the registry) + each algorithm's `hoist_draws`
+    RNG-plan twin.
+  * `exec`     — the execution layer: the compiled `_mc_core`, the
+    hoisted counter-based RNG plan, the seed-chunked scheduler with
+    donated stat carries, the on-device seed reduction, and the analytic
+    memory model (`estimate_peak_bytes`) — see docs/performance.md.
+  * `engine`   — row assembly + the public `run_mc`, `MCResult`,
     `ChannelBatch`, `energy_to_target`.
 
 `repro.core.montecarlo` remains the back-compat import path.
@@ -22,6 +27,7 @@ from repro.core.mc.engine import (
     run_mc,
     trace_count,
 )
+from repro.core.mc.exec import estimate_peak_bytes
 from repro.core.mc.problems import (
     MCProblem,
     MCProblemBatch,
@@ -61,6 +67,7 @@ __all__ = [
     "SlotCtx",
     "clear_cache",
     "energy_to_target",
+    "estimate_peak_bytes",
     "localization_mc_problem",
     "logistic_mc_problem",
     "quadratic_mc_problem",

@@ -1,4 +1,4 @@
-"""Batched, jitted Monte Carlo engine core.
+"""Batched, jitted Monte Carlo engine: row assembly + public entry point.
 
 The paper's figures reproduce the expectation in Eq. (14) by averaging
 excess-risk curves over seeds; the engine runs a whole sweep as one
@@ -10,15 +10,19 @@ with the excess-risk curve computed **on-device inside the scan**. A batch
 row is a (problem, channel params, algo, stepsize) tuple; problems come
 from the `PROBLEMS` registry (`mc/problems.py`), per-slot algorithm updates
 from the `ALGO_REGISTRY` (`mc/slots.py`), and every RNG draw from the
-reference-twin samplers (`mc/sampling.py`). `repro.core.montecarlo` is the
-back-compat façade re-exporting this package's public surface.
+reference-twin samplers (`mc/sampling.py`). HOW a call executes — the
+hoisted counter-based RNG plan, the seed-chunked scheduler with donated
+carries, the on-device seed reduction — lives in the execution layer
+(`mc/exec.py`, knobs `rng_plan` / `seed_chunk` / `keep_seed_curves`, see
+docs/performance.md). `repro.core.montecarlo` is the back-compat façade
+re-exporting this package's public surface.
 
 Stochastic problems (a registered `stochastic_grad_row`, e.g. `logistic`)
-draw per-slot minibatch indices INSIDE the scan from a dedicated data-key
-stream (`fold_in(trajectory key, _DATA_STREAM)` — disjoint from the slot
-keys, so channel/noise draws are unchanged by the minibatching). The
-minibatch size is the `run_mc(batch_frac=...)` knob — scalar or per-row,
-so a batch-fraction sweep is ONE compile; `batch_frac=1.0` (the default)
+draw per-slot minibatch indices from a dedicated data-key stream
+(`fold_in(trajectory key, _DATA_STREAM)` — disjoint from the slot keys, so
+channel/noise draws are unchanged by the minibatching). The minibatch size
+is the `run_mc(batch_frac=...)` knob — scalar or per-row, so a
+batch-fraction sweep is ONE compile; `batch_frac=1.0` (the default)
 statically disables sampling and is bit-identical to running the same
 problem registered without a stochastic gradient.
 
@@ -30,25 +34,25 @@ otherwise.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from repro import compat
 from repro.core.channel import ChannelConfig
+from repro.core.mc import exec as exec_mod
+from repro.core.mc.exec import (  # noqa: F401  (re-exported surface)
+    _DATA_STREAM,
+    _mc_core,
+    clear_cache,
+    trace_count,
+)
 from repro.core.mc.problems import MCProblem, MCProblemBatch, PROBLEMS
-from repro.core.mc.slots import ALGO_REGISTRY, SlotCtx
+from repro.core.mc.slots import ALGO_REGISTRY
 from repro.core.theory import ProblemConstants, theorem1_bound
 
 Array = jax.Array
-
-# fold_in constant deriving the per-trajectory minibatch key stream from
-# the trajectory key — disjoint from the `split(key, steps)` slot keys
-_DATA_STREAM = 0x64617461  # b"data"
 
 
 # --------------------------------------------------------------------------
@@ -98,200 +102,25 @@ class ChannelBatch:
 class MCResult:
     """Host-side result of one engine call.
 
-    risks:      (C, S, steps+1) per-row per-seed excess-risk curves.
+    risks:      (C, S, steps+1) per-row per-seed excess-risk curves, or
+                None under `keep_seed_curves=False` (the curves were
+                seed-reduced on device and never transferred).
     mean:       (C, steps+1) seed average (the Eq. 14 expectation estimate).
     ci95:       (C, steps+1) 1.96 * standard error over seeds (0 if S == 1).
     cum_energy: (C, S, steps) cumulative transmitted energy Σ E_N ||x_k||²
                 of the actually-transmitted vectors — x_k = g_k for every
                 algorithm except `blind_ec`, whose power budget truncates
-                x_k = α(g_k + e_k).
+                x_k = α(g_k + e_k). None under `keep_seed_curves=False`.
     bounds:     (C, steps+1) Theorem-1 bound per row (None unless problem
                 constants were supplied AND every row is single-antenna
                 'gbma' — the setting Theorem 1 covers).
     """
 
-    risks: np.ndarray
+    risks: Optional[np.ndarray]
     mean: np.ndarray
     ci95: np.ndarray
-    cum_energy: np.ndarray
+    cum_energy: Optional[np.ndarray]
     bounds: Optional[np.ndarray]
-
-
-_TRACE_COUNT = 0
-
-
-def trace_count() -> int:
-    """Number of times `_mc_core` has been traced (== XLA compiles of the
-    engine, since the python body runs once per jit cache miss)."""
-    return _TRACE_COUNT
-
-
-def clear_cache() -> bool:
-    """Drop the engine's compiled-program cache (compile-count tests, cold
-    benchmark timings). Returns False on JAX versions without jit
-    clear_cache support — callers should then skip compile-count asserts."""
-    if hasattr(_mc_core, "clear_cache"):
-        _mc_core.clear_cache()
-        return True
-    return False
-
-
-# --------------------------------------------------------------------------
-# compiled core
-# --------------------------------------------------------------------------
-@functools.partial(
-    jax.jit,
-    static_argnames=("grad_fn", "risk_fn", "row_based", "algo_set", "fading",
-                     "steps", "n_sizes", "n_antennas", "m_sizes",
-                     "invert_channel", "h_min", "n_shards", "sgrad_fn",
-                     "b_max", "ota_impl"),
-)
-def _mc_core(params, betas, theta0, seeds, data, *, grad_fn, risk_fn,
-             row_based, algo_set, fading, steps, n_sizes, n_antennas,
-             m_sizes, invert_channel, h_min, n_shards, sgrad_fn=None,
-             b_max=0, ota_impl="inline"):
-    """(C,)-batched rows × (S,) seeds × scan(steps), seeds sharded on 'mc'.
-
-    `algo_set` is the deduped algorithm tuple; the row-to-algorithm
-    assignment is traced data (params['algo_idx']), so re-assigning rows
-    among the same algorithms reuses the compiled program. Rows sharing one
-    algorithm skip the dispatch switch. The momentum carry unifies all step
-    rules: m_{k+1} = γ m_k + v_k and θ_{k+1} = θ_k − β m_{k+1} reduce
-    bit-exactly to vanilla GD at γ = 0 (0·m = 0, 0 + v = v), and the
-    Nesterov lookahead θ − nest·βγ·m is exactly θ when the row's nest flag
-    is 0.
-
-    When `algo_set` contains an error-feedback algorithm (`blind_ec`) the
-    scan carry additionally holds the per-node residual e (n_max, d): rows
-    flagged p['ec']=1 transmit x = α(g + e) with the power-budget scaling
-    α = min(1, √(B/‖g+e‖²)) per node and carry e ← (g+e) − x forward
-    (error accumulation of 1907.09769); all other rows select α = 1 and
-    reduce bit-exactly to x = g — even when their own α expression is NaN
-    (an overflowing row under the default unbounded budget hits inf/inf).
-    The transmitted energy is always computed from x — identical to the
-    g-based accounting whenever no truncation happened.
-
-    `sgrad_fn` (static; a registered `stochastic_grad_row`) switches the
-    gradient to a per-slot minibatch: each step consumes one key of the
-    dedicated data-key stream and the row's traced params['b_count'] picks
-    how many of the static `b_max` index lanes count.
-    """
-    global _TRACE_COUNT
-    _TRACE_COUNT += 1  # python side effect: runs once per trace/compile
-
-    # gains-consuming slot types, single-antenna: eligible for hoisting the
-    # per-N sampling switch out of the scan (see `hoist` below)
-    hoistable = n_antennas is None and not m_sizes and any(
-        ALGO_REGISTRY[a].hoist_gains(invert_channel) for a in algo_set)
-    use_ec = any(ALGO_REGISTRY[a].error_feedback for a in algo_set)
-
-    def trajectory(p, beta, row, seed, t0):
-        key = jax.random.key(seed)
-
-        def make_ctx(h_slot):
-            return SlotCtx(fading=fading, p=p, mask=row["mask"],
-                           n_sizes=n_sizes, n_antennas=n_antennas,
-                           m_sizes=m_sizes, invert_channel=invert_channel,
-                           h_min=h_min, h_slot=h_slot, ota_impl=ota_impl)
-
-        def slot(g, k, h_slot):
-            ctx = make_ctx(h_slot)
-            if len(algo_set) == 1:
-                return ALGO_REGISTRY[algo_set[0]].slot_fn(g, k, ctx)
-            branches = [
-                (lambda kk, a=a: ALGO_REGISTRY[a].slot_fn(g, kk, ctx))
-                for a in algo_set
-            ]
-            return jax.lax.switch(p["algo_idx"], branches, k)
-
-        def body(carry, x):
-            k, h_slot, dk = x
-            if use_ec:
-                theta, m, e_res, cum_e = carry
-            else:
-                theta, m, cum_e = carry
-            theta_eval = theta - p["nest"] * beta * p["gamma"] * m
-            if sgrad_fn is not None:
-                g = sgrad_fn(row, theta_eval, dk, p["b_count"], b_max)
-            else:
-                g = (grad_fn(row, theta_eval) if row_based
-                     else grad_fn(theta_eval))
-            risk = risk_fn(row, theta) if row_based else risk_fn(theta)
-            if use_ec:
-                u = g + p["ec"] * e_res
-                sq = jnp.sum(u * u, axis=1)
-                alpha = jnp.minimum(1.0, jnp.sqrt(
-                    p["tx_budget"] / jnp.maximum(sq, 1e-30)))
-                # select, don't blend: inf/inf above is NaN (e.g. an
-                # overflowing row with the default unbounded budget) and
-                # 0*NaN would leak it into ec=0 rows
-                alpha = jnp.where(p["ec"] > 0, alpha, 1.0)
-                x_tx = alpha[:, None] * u
-                e_res = p["ec"] * (u - x_tx)
-            else:
-                x_tx = g
-            cum_e = cum_e + p["energy"] * jnp.sum(
-                x_tx.astype(jnp.float32) ** 2)
-            v = slot(x_tx, k, h_slot)
-            m = p["gamma"] * m + v
-            theta = theta - beta * m
-            carry = (theta, m, e_res, cum_e) if use_ec \
-                else (theta, m, cum_e)
-            return carry, (risk, cum_e)
-
-        step_keys = jax.random.split(key, steps)
-        data_keys = None
-        if sgrad_fn is not None:
-            data_keys = jax.random.split(
-                jax.random.fold_in(key, _DATA_STREAM), steps)
-        h_all = None
-        if len(n_sizes) > 1 and hoistable:
-            # Node-count sweep: sample every slot's gains up front, once,
-            # instead of tracing the per-N `lax.switch` branches into the
-            # scan body (which multiplies the XLA program and its compile
-            # time — the very cost the padded N axis exists to remove).
-            # Stream-identical: each step key is split exactly as the slot
-            # fns would split it, and the k_h half feeds the same padded
-            # sampler. The dynamic-count sampler (one static-shape threefry
-            # program for all N) is preferred; the per-N `lax.switch`
-            # sampler is the fallback when the raw primitive is unavailable
-            # or a non-threefry PRNG is active.
-            from repro.core.mc import sampling
-
-            n_max_ = row["mask"].shape[0]
-            k_hs = jax.vmap(lambda k: jax.random.split(k)[0])(step_keys)
-            if sampling._dynamic_threefry_ok():
-                sample = lambda kh: sampling._sample_gains_dynamic_n(
-                    kh, fading, p, n_max_)
-            else:
-                sample = lambda kh: sampling._sample_gains_padded(
-                    kh, fading, p, n_sizes, n_max_)
-            h_all = jax.vmap(sample)(k_hs)
-        carry0 = (t0, jnp.zeros_like(t0), jnp.float32(0.0))
-        if use_ec:
-            carry0 = (t0, jnp.zeros_like(t0),
-                      jnp.zeros((row["mask"].shape[0], t0.shape[0]),
-                                jnp.float32), jnp.float32(0.0))
-        carry_fin, (risks, cum_e) = jax.lax.scan(
-            body, carry0, (step_keys, h_all, data_keys))
-        theta_fin = carry_fin[0]
-        fin = risk_fn(row, theta_fin) if row_based else risk_fn(theta_fin)
-        risks = jnp.concatenate([risks, fin[None]])
-        return risks, cum_e  # (steps+1,), (steps,)
-
-    def seed_block(seeds_blk, params, betas, theta0, data):
-        per_config = jax.vmap(
-            lambda p, b, row: jax.vmap(
-                lambda s: trajectory(p, b, row, s, theta0))(seeds_blk))
-        return per_config(params, betas, data)
-
-    if n_shards > 0:
-        mesh = compat.make_mesh((n_shards,), ("mc",))
-        seed_block = compat.shard_map(
-            seed_block, mesh=mesh,
-            in_specs=(P("mc"), P(), P(), P(), P()),
-            out_specs=(P(None, "mc"), P(None, "mc")))
-    return seed_block(seeds, params, betas, theta0, data)
 
 
 def _resolve_n_shards(n_seeds: int, shard_seeds: Optional[bool]) -> int:
@@ -332,7 +161,7 @@ def _resolve_ota_impl(ota_impl: str, n_sizes: tuple) -> str:
 
 
 def _resolve_batch_frac(batch_frac, n_rows: int, batch_prob, problem):
-    """-> (sgrad_fn, b_max, b_counts) for the stochastic path, or
+    """-> (spec, b_max, b_counts) for the stochastic path, or
     (None, 0, None) for the static full-batch path."""
     if isinstance(batch_frac, (int, float, np.integer, np.floating)):
         fracs = (float(batch_frac),) * n_rows
@@ -358,7 +187,7 @@ def _resolve_batch_frac(batch_frac, n_rows: int, batch_prob, problem):
     data = batch_prob.data if batch_prob is not None else problem.data
     k = data[spec.sample_axis_field].shape[-2]
     b_counts = tuple(max(1, int(round(f * k))) for f in fracs)
-    return spec.stochastic_grad_row, max(b_counts), b_counts
+    return spec, max(b_counts), b_counts
 
 
 # --------------------------------------------------------------------------
@@ -384,6 +213,9 @@ def run_mc(
     shard_seeds: Optional[bool] = None,
     batch_frac: Union[float, Sequence[float]] = 1.0,
     ota_impl: str = "auto",
+    rng_plan: str = "hoisted",
+    seed_chunk: Optional[int] = None,
+    keep_seed_curves: bool = True,
 ) -> MCResult:
     """Run `seeds` Monte Carlo trajectories for each batch row.
 
@@ -417,13 +249,31 @@ def run_mc(
     samples drawn per slot for stochastic problem kinds (`logistic`). 1.0
     (default) computes the exact full-batch gradient with no sampling —
     bit-identical to a deterministic registration of the same problem;
-    fractions < 1 draw with-replacement minibatches inside the scan, and a
+    fractions < 1 draw with-replacement minibatches per slot, and a
     per-row fraction sweep is one compile.
 
     `ota_impl`: 'auto' (inline einsum; pallas kernel on TPU when the node
     count is static), 'pallas' or 'ref' force the
     `repro.kernels.ota.ota_edge_aggregate` path for the single-antenna OTA
     superposition.
+
+    Execution-layer knobs (docs/performance.md):
+
+    `rng_plan`: 'hoisted' (default) materializes every randomness stream
+    in one batched counter-based draw per stream outside the scan —
+    stream-identical to the per-slot split chains, leaving the scan body
+    pure linear algebra; 'inscan' keeps the legacy in-scan draws (the
+    benchmark baseline).
+
+    `seed_chunk`: run the seed axis in blocks of this size through one
+    compiled program, bounding peak device memory to
+    O(C · seed_chunk · steps · n_max); must divide `seeds`. None (default)
+    runs all seeds in one call.
+
+    `keep_seed_curves`: False reduces the per-seed curves to (mean, ci95)
+    on device — only (C, steps+1) statistics transfer to host, and
+    `MCResult.risks`/`cum_energy` are None (so `energy_to_target`, which
+    needs per-seed curves, requires the default True).
     """
     ch_batch = channels if isinstance(channels, ChannelBatch) \
         else ChannelBatch.stack(list(channels))
@@ -440,6 +290,9 @@ def run_mc(
             raise ValueError(f"unknown algo {a!r}; expected one of "
                              f"{tuple(ALGO_REGISTRY)}")
     specs = [ALGO_REGISTRY[a] for a in algos]
+    if rng_plan not in ("hoisted", "inscan"):
+        raise ValueError(
+            f"rng_plan must be 'hoisted' or 'inscan', got {rng_plan!r}")
 
     # ---- normalize the antenna axis ------------------------------------
     if n_antennas is None or isinstance(n_antennas, (int, np.integer)):
@@ -477,8 +330,9 @@ def run_mc(
 
     # stochastic minibatching needs the row-based data path; lift a single
     # broadcast problem into a C-row batch (cheap: data is small)
-    sgrad_fn, b_max, b_counts = _resolve_batch_frac(
+    sto_spec, b_max, b_counts = _resolve_batch_frac(
         batch_frac, n_rows, batch_prob, problem)
+    sgrad_fn = sto_spec.stochastic_grad_row if sto_spec is not None else None
     if sgrad_fn is not None and batch_prob is None:
         batch_prob = MCProblemBatch.stack([problem] * n_rows)
 
@@ -498,6 +352,17 @@ def run_mc(
     n_sizes = tuple(sorted(set(n_nodes)))
     algo_set = tuple(dict.fromkeys(algos))
     ota_resolved = _resolve_ota_impl(ota_impl, n_sizes)
+    # static promise for the hoisted plan's phase-stream shortcut: every
+    # row's phase draw is over [-0, 0] (cos(0)=1, value-identical to
+    # skip). Only hoist-eligible calls (hoisted plan, one algorithm WITH
+    # a hoist twin) set it — elsewhere nothing reads it, and a static
+    # True/False split would needlessly fragment the jit cache across
+    # phase settings that the legacy body treats as pure data.
+    phase_zero = (
+        rng_plan == "hoisted" and len(algo_set) == 1
+        and ALGO_REGISTRY[algo_set[0]].hoist_draws is not None
+        and all(float(c.phase_error_max) == 0.0
+                for c in ch_batch.configs))
     params = dict(ch_batch.params)
     params["n_nodes"] = jnp.asarray(n_nodes, jnp.float32)
     params["n_idx"] = jnp.asarray(
@@ -525,25 +390,45 @@ def run_mc(
         params["m_idx"] = jnp.asarray(
             [m_sizes.index(m) for m in m_per_row], jnp.int32)
     if b_counts is not None:
-        params["b_count"] = jnp.asarray(b_counts, jnp.float32)
+        # int32, NOT float32: a lane count is integral and must survive
+        # exactly (float32 rounds above 2^24); the single consumer divides
+        # by it after an explicit float cast
+        params["b_count"] = jnp.asarray(b_counts, jnp.int32)
 
     t0 = jnp.zeros((dim,), jnp.float32) if theta0 is None \
         else jnp.asarray(theta0, jnp.float32)
-    seed_ints = jnp.arange(seed0, seed0 + seeds, dtype=jnp.int32)
-    n_shards = _resolve_n_shards(seeds, shard_seeds)
-    risks, cum_e = _mc_core(
-        params, betas, t0, seed_ints, data,
+    seed_ints = np.arange(seed0, seed0 + seeds, dtype=np.int32)
+    core_kwargs = dict(
         grad_fn=grad_fn, risk_fn=risk_fn, row_based=row_based,
         algo_set=algo_set, fading=ch_batch.fading, steps=steps,
         n_sizes=n_sizes, n_antennas=n_antennas, m_sizes=m_sizes,
-        invert_channel=invert_channel, h_min=h_min, n_shards=n_shards,
-        sgrad_fn=sgrad_fn, b_max=b_max, ota_impl=ota_resolved)
-    risks = np.asarray(risks)
-    mean = np.mean(risks, axis=1)
-    if seeds > 1:
-        ci95 = 1.96 * np.std(risks, axis=1, ddof=1) / np.sqrt(seeds)
+        invert_channel=invert_channel, h_min=h_min,
+        sgrad_fn=sgrad_fn, b_max=b_max, ota_impl=ota_resolved,
+        rng_plan=rng_plan, phase_zero=phase_zero,
+        sample_idx_fn=(sto_spec.sample_indices_row
+                       if sto_spec is not None else None),
+        sgrad_idx_fn=(sto_spec.stochastic_grad_from_idx
+                      if sto_spec is not None else None))
+    if seed_chunk is not None:
+        risks, cum_e, mean, ci95 = exec_mod.run_chunked(
+            params, betas, t0, seed_ints, data, seed_chunk=seed_chunk,
+            keep_seed_curves=keep_seed_curves,
+            resolve_shards=lambda s: _resolve_n_shards(s, shard_seeds),
+            core_kwargs=core_kwargs)
     else:
-        ci95 = np.zeros_like(mean)
+        n_shards = _resolve_n_shards(seeds, shard_seeds)
+        seed_arr = jnp.asarray(seed_ints)
+        if keep_seed_curves:
+            risks, cum_e = _mc_core(params, betas, t0, seed_arr, data,
+                                    n_shards=n_shards, **core_kwargs)
+            risks, cum_e = np.asarray(risks), np.asarray(cum_e)
+            mean, ci95 = exec_mod.host_seed_stats(risks)
+        else:
+            mean, ci95 = exec_mod._mc_stats(
+                params, betas, t0, seed_arr, data, n_shards=n_shards,
+                **core_kwargs)
+            mean, ci95 = np.asarray(mean), np.asarray(ci95)
+            risks = cum_e = None
     bounds = None
     if pc is not None:
         pcs = [pc] * n_rows if isinstance(pc, ProblemConstants) else list(pc)
@@ -559,7 +444,7 @@ def run_mc(
                     np.asarray(betas), ch_batch.configs, pcs, n_nodes)])
     return MCResult(
         risks=risks, mean=mean.astype(np.float32),
-        ci95=ci95.astype(np.float32), cum_energy=np.asarray(cum_e),
+        ci95=ci95.astype(np.float32), cum_energy=cum_e,
         bounds=bounds)
 
 
@@ -573,6 +458,10 @@ def energy_to_target(res: MCResult, target: float) -> np.ndarray:
     (k == 0) costs nothing. Seeds that never hit spend the full-horizon
     energy.
     """
+    if res.risks is None or res.cum_energy is None:
+        raise ValueError(
+            "energy_to_target needs per-seed curves — run with the default "
+            "keep_seed_curves=True")
     c, s, kp1 = res.risks.shape
     hit_mask = res.risks <= target
     hit = np.argmax(hit_mask, axis=2)  # first True, 0 when none

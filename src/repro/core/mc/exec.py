@@ -1,0 +1,471 @@
+"""Throughput-first execution layer for the Monte Carlo engine.
+
+This module owns HOW a sweep executes; `engine.py` owns WHAT a sweep is
+(row assembly, validation, results). Three orthogonal knobs, all surfaced
+through `run_mc`:
+
+* **RNG plan** (`rng_plan="hoisted"` default / `"inscan"`): the hoisted
+  plan materializes every randomness stream — channel gains, edge noise,
+  per-antenna complex fades, fdm per-node noise, minibatch indices — in
+  one batched counter-based (threefry) draw per stream OUTSIDE the
+  `lax.scan`, as scan inputs, instead of tracing the key-split chains into
+  the scan body. The draws replay the per-slot `split` chains key-for-key
+  (each algorithm registers a `hoist_draws` twin of its slot fn's draw
+  code in `mc/slots.py`), so trajectories are stream-identical to the
+  legacy in-scan plan; the scan body is left with pure linear algebra.
+  The plan also knows one static shortcut: when every row's
+  `phase_error_max` is 0 the precoded-phase draw is skipped entirely
+  (cos(0) == 1 exactly, and the phase stream has its own key half, so
+  skipping it cannot shift any other draw). `"inscan"` keeps the
+  pre-exec-layer engine byte-for-byte — it is the benchmark baseline and
+  the fallback for third-party algos registered without a `hoist_draws`.
+
+* **Seed chunking** (`seed_chunk=`): a host-side scheduler runs the seed
+  axis in blocks of `seed_chunk`, re-materializing the hoisted draws per
+  chunk, so peak device memory is O(C · chunk · steps · n_max) instead of
+  O(C · seeds · steps · n_max). One compile covers every chunk (the seed
+  ints are data). With `keep_seed_curves=False` the running curve
+  statistics are carried between chunks in donated device buffers
+  (`jax.jit(..., donate_argnums=...)` — XLA reuses the accumulator
+  allocation in place).
+
+* **On-device reduction** (`keep_seed_curves=False`): when the caller
+  only needs the seed-mean and ci95 (most figures), the (C, S, steps+1)
+  per-seed curves never leave the device — only (C, steps+1) statistics
+  transfer to host. `energy_to_target` needs per-seed curves and raises
+  if they were reduced away.
+
+`estimate_peak_bytes` is the analytic memory model behind the knobs
+(documented in docs/performance.md); `benchmarks/bench_montecarlo.py`
+records it next to warm/cold timings.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core.mc.slots import ALGO_REGISTRY, SlotCtx
+
+Array = jax.Array
+
+# fold_in constant deriving the per-trajectory minibatch key stream from
+# the trajectory key — disjoint from the `split(key, steps)` slot keys
+_DATA_STREAM = 0x64617461  # b"data"
+
+_TRACE_COUNT = 0
+
+
+def trace_count(reset: bool = False) -> int:
+    """Number of times the engine core has been traced (== XLA compiles,
+    since the python body runs once per jit cache miss) since import or
+    the last reset. `reset=True` returns the current count and zeroes it;
+    `clear_cache()` also zeroes it, so compile-count tests can write
+    `clear_cache(); ...; assert trace_count() == 1`."""
+    global _TRACE_COUNT
+    count = _TRACE_COUNT
+    if reset:
+        _TRACE_COUNT = 0
+    return count
+
+
+def clear_cache() -> bool:
+    """Drop the engine's compiled-program caches (compile-count tests,
+    cold benchmark timings) and reset the trace counter. Returns False on
+    JAX versions without jit clear_cache support — callers should then
+    skip compile-count asserts."""
+    global _TRACE_COUNT
+    _TRACE_COUNT = 0
+    cleared = False
+    for fn in (_mc_core, _mc_stats, _mc_stats_acc):
+        if hasattr(fn, "clear_cache"):
+            fn.clear_cache()
+            cleared = True
+    return cleared
+
+
+# --------------------------------------------------------------------------
+# compiled core
+# --------------------------------------------------------------------------
+_STATIC_ARGNAMES = (
+    "grad_fn", "risk_fn", "row_based", "algo_set", "fading", "steps",
+    "n_sizes", "n_antennas", "m_sizes", "invert_channel", "h_min",
+    "n_shards", "sgrad_fn", "b_max", "ota_impl", "rng_plan", "phase_zero",
+    "sample_idx_fn", "sgrad_idx_fn",
+)
+
+
+def _mc_core_impl(params, betas, theta0, seeds, data, *, grad_fn, risk_fn,
+                  row_based, algo_set, fading, steps, n_sizes, n_antennas,
+                  m_sizes, invert_channel, h_min, n_shards, sgrad_fn=None,
+                  b_max=0, ota_impl="inline", rng_plan="hoisted",
+                  phase_zero=False, sample_idx_fn=None, sgrad_idx_fn=None):
+    """(C,)-batched rows × (S,) seeds × scan(steps), seeds sharded on 'mc'.
+
+    `algo_set` is the deduped algorithm tuple; the row-to-algorithm
+    assignment is traced data (params['algo_idx']), so re-assigning rows
+    among the same algorithms reuses the compiled program. Rows sharing one
+    algorithm skip the dispatch switch. The momentum carry unifies all step
+    rules: m_{k+1} = γ m_k + v_k and θ_{k+1} = θ_k − β m_{k+1} reduce
+    bit-exactly to vanilla GD at γ = 0 (0·m = 0, 0 + v = v), and the
+    Nesterov lookahead θ − nest·βγ·m is exactly θ when the row's nest flag
+    is 0.
+
+    When `algo_set` contains an error-feedback algorithm (`blind_ec`) the
+    scan carry additionally holds the per-node residual e (n_max, d): rows
+    flagged p['ec']=1 transmit x = α(g + e) with the power-budget scaling
+    α = min(1, √(B/‖g+e‖²)) per node and carry e ← (g+e) − x forward
+    (error accumulation of 1907.09769); all other rows select α = 1 and
+    reduce bit-exactly to x = g — even when their own α expression is NaN
+    (an overflowing row under the default unbounded budget hits inf/inf).
+    The transmitted energy is always computed from x — identical to the
+    g-based accounting whenever no truncation happened.
+
+    `sgrad_fn` (static; a registered `stochastic_grad_row`) switches the
+    gradient to a per-slot minibatch: each step consumes one key of the
+    dedicated data-key stream and the row's traced params['b_count'] (an
+    int32 lane count) picks how many of the static `b_max` index lanes
+    count. Under the hoisted plan the index draws move out of the scan via
+    the registered `sample_idx_fn` / `sgrad_idx_fn` split, when available.
+
+    `rng_plan` selects the execution strategy (see the module docstring):
+    'hoisted' feeds the algorithm's pre-materialized draw streams to the
+    scan as inputs — homogeneous (single-algorithm) calls only, since a
+    mixed batch would materialize every algorithm's streams per
+    trajectory; mixed calls and 'inscan' run the legacy body (including
+    PR 2's N-sweep-only gain hoisting), kept as the benchmark baseline.
+    """
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1  # python side effect: runs once per trace/compile
+
+    # gains-consuming slot types, single-antenna: eligible for the legacy
+    # (inscan-plan) hoisting of the per-N sampling switch out of the scan
+    hoistable = n_antennas is None and not m_sizes and any(
+        ALGO_REGISTRY[a].hoist_gains(invert_channel) for a in algo_set)
+    use_ec = any(ALGO_REGISTRY[a].error_feedback for a in algo_set)
+    # The hoisted plan applies to HOMOGENEOUS calls only: with several
+    # algorithms dispatched per row by the traced algo_idx switch, every
+    # trajectory would have to materialize every algorithm's streams (the
+    # switch branch is data, unknowable at trace time) — multiplying draw
+    # memory and threefry work by |algo_set| where the in-scan switch
+    # executes only the selected branch. Mixed-algo calls (the fig4/fig5/
+    # fig7/fig8 comparison shape) therefore keep the legacy in-scan body
+    # byte-for-byte; single-algo calls — the large-throughput regime the
+    # execution layer targets — hoist everything.
+    hoist = rng_plan == "hoisted" and len(algo_set) == 1
+    hoist_idx = (hoist and sgrad_fn is not None
+                 and sample_idx_fn is not None and sgrad_idx_fn is not None)
+
+    def trajectory(p, beta, row, seed, t0):
+        key = jax.random.key(seed)
+        n_max_ = row["mask"].shape[0]
+        dim = t0.shape[0]
+
+        def make_ctx(h_slot, draws=None):
+            return SlotCtx(fading=fading, p=p, mask=row["mask"],
+                           n_sizes=n_sizes, n_antennas=n_antennas,
+                           m_sizes=m_sizes, invert_channel=invert_channel,
+                           h_min=h_min, h_slot=h_slot, ota_impl=ota_impl,
+                           phase_zero=phase_zero, draws=draws)
+
+        def slot(g, k, h_slot, dr_all):
+            def ctx_for(a):
+                dr = dr_all.get(a) if dr_all is not None else None
+                return make_ctx(h_slot, dr)
+
+            if len(algo_set) == 1:
+                return ALGO_REGISTRY[algo_set[0]].slot_fn(
+                    g, k, ctx_for(algo_set[0]))
+            branches = [
+                (lambda kk, a=a: ALGO_REGISTRY[a].slot_fn(g, kk, ctx_for(a)))
+                for a in algo_set
+            ]
+            return jax.lax.switch(p["algo_idx"], branches, k)
+
+        def body(carry, x):
+            k, h_slot, dk, dr_all, idx = x
+            if use_ec:
+                theta, m, e_res, cum_e = carry
+            else:
+                theta, m, cum_e = carry
+            theta_eval = theta - p["nest"] * beta * p["gamma"] * m
+            if sgrad_fn is not None:
+                if idx is not None:
+                    g = sgrad_idx_fn(row, theta_eval, idx, p["b_count"])
+                else:
+                    g = sgrad_fn(row, theta_eval, dk, p["b_count"], b_max)
+            else:
+                g = (grad_fn(row, theta_eval) if row_based
+                     else grad_fn(theta_eval))
+            risk = risk_fn(row, theta) if row_based else risk_fn(theta)
+            if use_ec:
+                u = g + p["ec"] * e_res
+                sq = jnp.sum(u * u, axis=1)
+                alpha = jnp.minimum(1.0, jnp.sqrt(
+                    p["tx_budget"] / jnp.maximum(sq, 1e-30)))
+                # select, don't blend: inf/inf above is NaN (e.g. an
+                # overflowing row with the default unbounded budget) and
+                # 0*NaN would leak it into ec=0 rows
+                alpha = jnp.where(p["ec"] > 0, alpha, 1.0)
+                x_tx = alpha[:, None] * u
+                e_res = p["ec"] * (u - x_tx)
+            else:
+                x_tx = g
+            cum_e = cum_e + p["energy"] * jnp.sum(
+                x_tx.astype(jnp.float32) ** 2)
+            v = slot(x_tx, k, h_slot, dr_all)
+            m = p["gamma"] * m + v
+            theta = theta - beta * m
+            carry = (theta, m, e_res, cum_e) if use_ec \
+                else (theta, m, cum_e)
+            return carry, (risk, cum_e)
+
+        step_keys = jax.random.split(key, steps)
+        data_keys = None
+        if sgrad_fn is not None:
+            data_keys = jax.random.split(
+                jax.random.fold_in(key, _DATA_STREAM), steps)
+        h_all = None
+        draws_all = None
+        idx_all = None
+        if hoist:
+            # The universal RNG plan: every registered stream materializes
+            # as one batched (steps, ...) draw outside the scan, via each
+            # algorithm's hoist_draws twin. Streams replay the in-scan
+            # key-split chains exactly, so the plans are interchangeable.
+            ctx0 = make_ctx(None)
+            draws_all = {}
+            for a in algo_set:
+                hd = ALGO_REGISTRY[a].hoist_draws
+                if hd is not None:
+                    draws_all[a] = hd(step_keys, ctx0, n_max_, dim)
+            if not draws_all:
+                # algorithm registered without a hoist twin: nothing was
+                # hoisted — fall through to the legacy in-scan body
+                # (including its N-sweep gain hoist below) instead of
+                # running a strictly worse plan
+                draws_all = None
+            if hoist_idx:
+                idx_all = jax.vmap(
+                    lambda dk: sample_idx_fn(row, dk, b_max))(data_keys)
+        if draws_all is None and len(n_sizes) > 1 and hoistable:
+            # Legacy inscan-plan hoisting, node-count sweeps only: sample
+            # every slot's gains up front instead of tracing the per-N
+            # `lax.switch` branches into the scan body (which multiplies
+            # the XLA program and its compile time — the very cost the
+            # padded N axis exists to remove). Stream-identical: each step
+            # key is split exactly as the slot fns would split it, and the
+            # k_h half feeds the same padded sampler. The dynamic-count
+            # sampler (one static-shape threefry program for all N) is
+            # preferred; the per-N `lax.switch` sampler is the fallback
+            # when the raw primitive is unavailable or a non-threefry PRNG
+            # is active.
+            from repro.core.mc import sampling
+
+            k_hs = jax.vmap(lambda k: jax.random.split(k)[0])(step_keys)
+            if sampling._dynamic_threefry_ok():
+                sample = lambda kh: sampling._sample_gains_dynamic_n(
+                    kh, fading, p, n_max_)
+            else:
+                sample = lambda kh: sampling._sample_gains_padded(
+                    kh, fading, p, n_sizes, n_max_)
+            h_all = jax.vmap(sample)(k_hs)
+        carry0 = (t0, jnp.zeros_like(t0), jnp.float32(0.0))
+        if use_ec:
+            carry0 = (t0, jnp.zeros_like(t0),
+                      jnp.zeros((row["mask"].shape[0], t0.shape[0]),
+                                jnp.float32), jnp.float32(0.0))
+        carry_fin, (risks, cum_e) = jax.lax.scan(
+            body, carry0, (step_keys, h_all, data_keys, draws_all, idx_all))
+        theta_fin = carry_fin[0]
+        fin = risk_fn(row, theta_fin) if row_based else risk_fn(theta_fin)
+        risks = jnp.concatenate([risks, fin[None]])
+        return risks, cum_e  # (steps+1,), (steps,)
+
+    def seed_block(seeds_blk, params, betas, theta0, data):
+        per_config = jax.vmap(
+            lambda p, b, row: jax.vmap(
+                lambda s: trajectory(p, b, row, s, theta0))(seeds_blk))
+        return per_config(params, betas, data)
+
+    if n_shards > 0:
+        mesh = compat.make_mesh((n_shards,), ("mc",))
+        seed_block = compat.shard_map(
+            seed_block, mesh=mesh,
+            in_specs=(P("mc"), P(), P(), P(), P()),
+            out_specs=(P(None, "mc"), P(None, "mc")))
+    return seed_block(seeds, params, betas, theta0, data)
+
+
+_mc_core = jax.jit(_mc_core_impl, static_argnames=_STATIC_ARGNAMES)
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC_ARGNAMES)
+def _mc_stats(params, betas, theta0, seeds, data, **kw):
+    """Single-shot on-device seed reduction (`keep_seed_curves=False`,
+    `seed_chunk=None`): the (C, S, steps+1) curves stay device-side; only
+    the (C, steps+1) mean and ci95 transfer. Exact two-pass moments —
+    the same formula the host path applies to materialized curves."""
+    risks, _ = _mc_core_impl(params, betas, theta0, seeds, data, **kw)
+    n = risks.shape[1]
+    mean = jnp.mean(risks, axis=1)
+    if n > 1:
+        ci95 = 1.96 * jnp.std(risks, axis=1, ddof=1) / np.sqrt(n)
+    else:
+        ci95 = jnp.zeros_like(mean)
+    return mean, ci95
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC_ARGNAMES,
+                   donate_argnums=(0, 1))
+def _mc_stats_acc(acc_sum, acc_sq, params, betas, theta0, seeds, data, **kw):
+    """One seed chunk folded into the running (Σ risk, Σ risk²) curve
+    statistics. The accumulators are DONATED: XLA reuses their buffers in
+    place, so the chunked stats path carries O(C · steps) state between
+    chunks and nothing else survives a chunk."""
+    risks, _ = _mc_core_impl(params, betas, theta0, seeds, data, **kw)
+    return (acc_sum + jnp.sum(risks, axis=1),
+            acc_sq + jnp.sum(risks * risks, axis=1))
+
+
+def host_seed_stats(risks: np.ndarray) -> tuple:
+    """(C, S, steps+1) curves -> (mean, ci95), the host-side seed
+    reduction — the single definition the unchunked, chunked and
+    on-device paths all agree with."""
+    seeds = risks.shape[1]
+    mean = np.mean(risks, axis=1)
+    if seeds > 1:
+        ci95 = 1.96 * np.std(risks, axis=1, ddof=1) / np.sqrt(seeds)
+    else:
+        ci95 = np.zeros_like(mean)
+    return mean, ci95
+
+
+def finalize_moment_stats(acc_sum: np.ndarray, acc_sq: np.ndarray,
+                          n_seeds: int) -> tuple:
+    """(Σx, Σx², n) -> (mean, ci95) with the ddof=1 sample variance.
+
+    The one-pass moments lose precision when the seed variance is far
+    below the squared mean (near-deterministic rows); the variance is
+    clamped at 0, which at worst underreports an already-negligible ci95.
+    """
+    mean = acc_sum / n_seeds
+    if n_seeds > 1:
+        var = np.maximum(0.0, (acc_sq - n_seeds * mean**2) / (n_seeds - 1))
+        ci95 = 1.96 * np.sqrt(var / n_seeds)
+    else:
+        ci95 = np.zeros_like(mean)
+    return mean, ci95
+
+
+# --------------------------------------------------------------------------
+# seed-chunked scheduler
+# --------------------------------------------------------------------------
+def run_chunked(params, betas, theta0, seed_ints, data, *, seed_chunk,
+                keep_seed_curves, resolve_shards, core_kwargs):
+    """Drive the seed axis in blocks of `seed_chunk` through one compiled
+    program (chunk seed ints are data). Returns the same
+    (risks, cum_energy, mean, ci95) quadruple as the single-shot paths,
+    with the first two None when `keep_seed_curves=False`.
+
+    Per-chunk peak memory is O(C · seed_chunk · steps · n_max): the
+    hoisted RNG streams re-materialize per chunk, per-seed curves either
+    stream to preallocated host arrays (`keep_seed_curves=True`) or fold
+    into donated (C, steps+1) moment accumulators.
+    """
+    seeds = len(seed_ints)
+    if seed_chunk <= 0:
+        raise ValueError(f"seed_chunk must be positive, got {seed_chunk}")
+    if seeds % seed_chunk != 0:
+        raise ValueError(
+            f"seeds ({seeds}) must divide into seed_chunk ({seed_chunk}) "
+            "blocks — pad the seed count or pick a chunk that divides it")
+    n_shards = resolve_shards(seed_chunk)
+    steps = core_kwargs["steps"]
+    n_rows = len(betas)
+    if keep_seed_curves:
+        risks = np.empty((n_rows, seeds, steps + 1), np.float32)
+        cum_e = np.empty((n_rows, seeds, steps), np.float32)
+        for off in range(0, seeds, seed_chunk):
+            blk = jnp.asarray(seed_ints[off:off + seed_chunk])
+            r, ce = _mc_core(params, betas, theta0, blk, data,
+                             n_shards=n_shards, **core_kwargs)
+            risks[:, off:off + seed_chunk] = np.asarray(r)
+            cum_e[:, off:off + seed_chunk] = np.asarray(ce)
+        return (risks, cum_e) + host_seed_stats(risks)
+    acc_sum = jnp.zeros((n_rows, steps + 1), jnp.float32)
+    acc_sq = jnp.zeros((n_rows, steps + 1), jnp.float32)
+    for off in range(0, seeds, seed_chunk):
+        blk = jnp.asarray(seed_ints[off:off + seed_chunk])
+        acc_sum, acc_sq = _mc_stats_acc(
+            acc_sum, acc_sq, params, betas, theta0, blk, data,
+            n_shards=n_shards, **core_kwargs)
+    mean, ci95 = finalize_moment_stats(
+        np.asarray(acc_sum), np.asarray(acc_sq), seeds)
+    return None, None, mean, ci95
+
+
+# --------------------------------------------------------------------------
+# analytic memory model
+# --------------------------------------------------------------------------
+_F32 = 4  # bytes
+
+
+def estimate_peak_bytes(*, n_rows: int, seeds: int, steps: int, n_max: int,
+                        dim: int, algo_set=("gbma",), seed_chunk=None,
+                        n_antennas=None, m_sizes=(), b_max: int = 0,
+                        keep_seed_curves: bool = True,
+                        rng_plan: str = "hoisted",
+                        invert_channel: bool = False) -> dict:
+    """Analytic peak-memory estimate (bytes) of one engine call, per the
+    execution-layer memory model (docs/performance.md).
+
+    Counts the O(C · S_live · steps)-scaling buffers that dominate at
+    scale — the hoisted per-stream RNG draws, the scanned per-seed curve
+    outputs, and the per-step gradient temporaries — for S_live =
+    seed_chunk (when chunking) or the full seed count. Deliberately an
+    estimate: XLA fusion removes some temporaries and adds others, so
+    treat it as the scaling model the knobs are chosen against, not an
+    allocator ground truth.
+    """
+    s_live = seeds if seed_chunk is None else min(seed_chunk, seeds)
+    m_live = max(m_sizes) if m_sizes else (n_antennas or 1)
+    per_traj_draws = 0
+    # draws hoist only on homogeneous calls (see _mc_core_impl)
+    if rng_plan == "hoisted" and len(algo_set) == 1:
+        for a in algo_set:
+            spec = ALGO_REGISTRY.get(a)
+            if spec is None or spec.hoist_draws is None:
+                continue
+            if spec.blind:
+                # complex gain pair (m, n_max) + edge noise (m, 2, dim)
+                per_traj_draws += steps * m_live * 2 * (n_max + dim)
+            elif a == "fdm":
+                # per-node noise (n_max, dim) + gains unless inverted
+                # (the inverted channel is equalized — no gain stream)
+                per_traj_draws += steps * n_max * (
+                    dim + (0 if invert_channel else 1))
+            else:  # gbma family / power_control: gains + edge noise
+                per_traj_draws += steps * m_live * (n_max + dim)
+        if b_max > 0:
+            per_traj_draws += steps * n_max * b_max  # minibatch indices
+    draw_bytes = n_rows * s_live * per_traj_draws * _F32
+    # scanned outputs: risks (steps+1) + cum_energy (steps) per trajectory
+    curve_bytes = n_rows * s_live * (2 * steps + 1) * _F32
+    # per-step live temporaries: transmitted g + one working copy
+    temp_bytes = 2 * n_rows * s_live * n_max * dim * _F32
+    host_bytes = (n_rows * seeds * (2 * steps + 1) * _F32
+                  if keep_seed_curves else 0)
+    device_total = draw_bytes + curve_bytes + temp_bytes
+    return {
+        "device_peak_bytes": device_total,
+        "rng_draw_bytes": draw_bytes,
+        "curve_bytes": curve_bytes,
+        "grad_temp_bytes": temp_bytes,
+        "host_curve_bytes": host_bytes,
+        "s_live": s_live,
+    }

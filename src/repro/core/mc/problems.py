@@ -49,9 +49,19 @@ class ProblemSpec:
     stochastic_grad_row, when given, makes the kind stochastic-capable:
     `(row, theta, key, b_count, b_max)` draws a size-`b_max` minibatch of
     per-node sample indices from `key` inside the scan, uses the first
-    `b_count` (traced, per-row) lanes, and returns the minibatch gradient.
-    `sample_axis_field` names the data field whose axis 1 is the per-node
-    sample axis (sets the full-batch size the `batch_frac` knob scales).
+    `b_count` (traced, per-row — an int32 lane count) lanes, and returns
+    the minibatch gradient. `sample_axis_field` names the data field whose
+    axis 1 is the per-node sample axis (sets the full-batch size the
+    `batch_frac` knob scales).
+
+    sample_indices_row / stochastic_grad_from_idx optionally split the
+    stochastic gradient into its index draw (`(row, key, b_max) ->
+    (n_max, b_max)` int indices) and the gradient over given indices
+    (`(row, theta, idx, b_count)`), with stochastic_grad_row ≡ their
+    composition. The split lets the execution layer's hoisted RNG plan
+    (`mc/exec.py`) materialize the minibatch-index stream outside the
+    scan like every channel stream; kinds registered without it simply
+    keep drawing indices in-scan.
     """
 
     kind: str
@@ -60,6 +70,8 @@ class ProblemSpec:
     pad_values: dict
     stochastic_grad_row: Optional[Callable] = None
     sample_axis_field: Optional[str] = None
+    sample_indices_row: Optional[Callable] = None
+    stochastic_grad_from_idx: Optional[Callable] = None
 
 
 PROBLEMS: dict = {}  # kind -> ProblemSpec, insertion-ordered
@@ -73,21 +85,33 @@ def register_problem(
     *,
     stochastic_grad_row: Optional[Callable] = None,
     sample_axis_field: Optional[str] = None,
+    sample_indices_row: Optional[Callable] = None,
+    stochastic_grad_from_idx: Optional[Callable] = None,
     overwrite: bool = False,
 ) -> ProblemSpec:
     """Register a problem kind so library-built `MCProblem`s of that kind
     stack into padded node-count sweeps (and, with `stochastic_grad_row`,
-    run minibatch SGD inside the scan). Returns the spec."""
+    run minibatch SGD inside the scan — plus hoisted index draws when the
+    `sample_indices_row`/`stochastic_grad_from_idx` split is supplied).
+    Returns the spec."""
     if kind in PROBLEMS and not overwrite:
         raise ValueError(f"problem kind {kind!r} is already registered "
                          "(pass overwrite=True to replace it)")
     if (stochastic_grad_row is None) != (sample_axis_field is None):
         raise ValueError("stochastic_grad_row and sample_axis_field must "
                          "be given together")
+    if (sample_indices_row is None) != (stochastic_grad_from_idx is None):
+        raise ValueError("sample_indices_row and stochastic_grad_from_idx "
+                         "must be given together")
+    if sample_indices_row is not None and stochastic_grad_row is None:
+        raise ValueError("the index/gradient split refines a "
+                         "stochastic_grad_row; register that too")
     spec = ProblemSpec(kind=kind, grad_row=grad_row, risk_row=risk_row,
                        pad_values=dict(pad_values),
                        stochastic_grad_row=stochastic_grad_row,
-                       sample_axis_field=sample_axis_field)
+                       sample_axis_field=sample_axis_field,
+                       sample_indices_row=sample_indices_row,
+                       stochastic_grad_from_idx=stochastic_grad_from_idx)
     PROBLEMS[kind] = spec
     return spec
 
@@ -293,15 +317,9 @@ def _logistic_grad_row(row: dict, theta: Array) -> Array:
     return g * row["mask"][:, None]
 
 
-def _logistic_sgrad_row(row: dict, theta: Array, key: Array,
-                        b_count: Array, b_max: int) -> Array:
-    """Minibatch twin of `_logistic_grad_row`: every node draws `b_max`
-    with-replacement sample indices from ITS local shard (one key per
-    slot), uses the first `b_count` (traced — the per-row `batch_frac`
-    knob) lanes, and averages. At b_count == k this is an unbiased
-    bootstrap estimate, not the full-batch gradient — the exact full-batch
-    limit is the static `batch_frac == 1.0` path, which skips sampling
-    entirely.
+def _logistic_sample_idx_row(row: dict, key: Array, b_max: int) -> Array:
+    """The logistic minibatch index draw: (n_max, b_max) with-replacement
+    per-node sample indices for one slot key.
 
     Index entry (n, j) draws as a SCALAR from
     `fold_in(fold_in(key, j), n)` rather than one (n_max, b_max)-shaped
@@ -314,18 +332,44 @@ def _logistic_sgrad_row(row: dict, theta: Array, key: Array,
     n_max, k, _ = row["Xn"].shape
     nodes = jnp.arange(n_max, dtype=jnp.uint32)
     lane_keys = [jax.random.fold_in(key, j) for j in range(b_max)]
-    idx = jnp.stack(
+    return jnp.stack(
         [jax.vmap(lambda n, kj=kj: jax.random.randint(
             jax.random.fold_in(kj, n), (), 0, k))(nodes)
          for kj in lane_keys], axis=1)
+
+
+def _logistic_sgrad_from_idx_row(row: dict, theta: Array, idx: Array,
+                                 b_count: Array) -> Array:
+    """Minibatch logistic gradient over ALREADY-DRAWN indices: uses the
+    first `b_count` (traced int32 — the per-row `batch_frac` knob) of the
+    idx lanes and averages. The lane count divides as float32 at this
+    single use site; it is carried as int32 so large per-node sample
+    counts survive exactly (a float32 lane count silently rounds above
+    2^24)."""
+    b_max = idx.shape[1]
     Xs = jnp.take_along_axis(row["Xn"], idx[:, :, None], axis=1)
     ys = jnp.take_along_axis(row["yn"], idx, axis=1)
     lane = (jnp.arange(b_max) < b_count).astype(jnp.float32)[None, :]
     m = ys * jnp.einsum("nbf,f->nb", Xs, theta)
     coef = -jax.nn.sigmoid(-m) * ys * lane
-    g = jnp.einsum("nb,nbf->nf", coef, Xs) / b_count
+    g = jnp.einsum("nb,nbf->nf", coef, Xs) \
+        / jnp.asarray(b_count, jnp.float32)
     g = g + row["lam"] * theta[None, :]
     return g * row["mask"][:, None]
+
+
+def _logistic_sgrad_row(row: dict, theta: Array, key: Array,
+                        b_count: Array, b_max: int) -> Array:
+    """Minibatch twin of `_logistic_grad_row`: every node draws `b_max`
+    with-replacement sample indices from ITS local shard (one key per
+    slot), uses the first `b_count` (traced — the per-row `batch_frac`
+    knob) lanes, and averages. At b_count == k this is an unbiased
+    bootstrap estimate, not the full-batch gradient — the exact full-batch
+    limit is the static `batch_frac == 1.0` path, which skips sampling
+    entirely. Composition of the registered index/gradient split, so the
+    in-scan and hoisted-index plans are value-identical."""
+    idx = _logistic_sample_idx_row(row, key, b_max)
+    return _logistic_sgrad_from_idx_row(row, theta, idx, b_count)
 
 
 def _logistic_risk_row(row: dict, theta: Array) -> Array:
@@ -420,7 +464,9 @@ register_problem("localization", _localization_grad_row,
 register_problem("logistic", _logistic_grad_row, _logistic_risk_row,
                  {"Xn": 0.0, "yn": 0.0},
                  stochastic_grad_row=_logistic_sgrad_row,
-                 sample_axis_field="Xn")
+                 sample_axis_field="Xn",
+                 sample_indices_row=_logistic_sample_idx_row,
+                 stochastic_grad_from_idx=_logistic_sgrad_from_idx_row)
 
 
 def _per_node_fields() -> dict:

@@ -67,7 +67,8 @@ def _magnitude_m2(fading: str, p: dict) -> Array:
     raise ValueError(f"unknown fading model: {fading}")
 
 
-def _sample_gains(key: Array, fading: str, p: dict, shape: tuple) -> Array:
+def _sample_gains(key: Array, fading: str, p: dict, shape: tuple,
+                  phase_zero: bool = False) -> Array:
     """Traceable twin of `channel.sample_gains` over dynamic scalar params.
 
     Split order and draw shapes match `sample_gains` exactly, so a fixed key
@@ -75,9 +76,17 @@ def _sample_gains(key: Array, fading: str, p: dict, shape: tuple) -> Array:
     then agree to f32 rounding). The phase factor is applied
     unconditionally: with phase_error_max == 0 the uniform draw is 0 and
     cos(0) == 1, identical to the skipped branch.
+
+    `phase_zero` (static) asserts that every row's phase_error_max is 0 and
+    skips the phase draw entirely — value-identical (h · cos(0) == h
+    bit-for-bit, and the phase stream hashes its own key half, so no other
+    draw shifts) but half the per-gain threefry work. The execution layer's
+    hoisted RNG plan sets it from the batch's configs.
     """
     k_mag, k_ph = jax.random.split(key)
     h = _sample_magnitude(k_mag, fading, p, shape)
+    if phase_zero:
+        return h.astype(jnp.float32)
     phi = jax.random.uniform(k_ph, shape, minval=-p["phase_error_max"],
                              maxval=p["phase_error_max"])
     return (h * jnp.cos(phi)).astype(jnp.float32)
@@ -97,7 +106,8 @@ def _sample_complex_gains(key: Array, fading: str, p: dict,
 
 
 def _sample_gains_padded(key: Array, fading: str, p: dict,
-                         n_sizes: tuple, n_max: int) -> Array:
+                         n_sizes: tuple, n_max: int,
+                         phase_zero: bool = False) -> Array:
     """(n_max,) gains whose first n entries equal the unpadded (n,) draw.
 
     Threefry streams depend on the draw shape, so sampling (n_max,) and
@@ -107,9 +117,10 @@ def _sample_gains_padded(key: Array, fading: str, p: dict,
     single full-size branch this is the plain sampler (no switch traced).
     """
     if len(n_sizes) == 1 and n_sizes[0] == n_max:
-        return _sample_gains(key, fading, p, (n_max,))
+        return _sample_gains(key, fading, p, (n_max,), phase_zero)
     branches = [
-        (lambda k, n=n: jnp.pad(_sample_gains(k, fading, p, (n,)),
+        (lambda k, n=n: jnp.pad(_sample_gains(k, fading, p, (n,),
+                                              phase_zero),
                                 (0, n_max - n)))
         for n in n_sizes
     ]
@@ -238,19 +249,22 @@ def _sample_magnitude_dynamic_n(kd_mag: Array, fading: str, p: dict,
 
 
 def _sample_gains_dynamic_n(key: Array, fading: str, p: dict,
-                            n_max: int) -> Array:
+                            n_max: int, phase_zero: bool = False) -> Array:
     """Bit-exact twin of `_sample_gains(key, fading, p, (n,))` zero-padded
     to (n_max,), with n = p['n_nodes'] traced — one static-shape program
-    covers every node count in the sweep."""
+    covers every node count in the sweep. `phase_zero` skips the phase
+    stream statically (value-identical; see `_sample_gains`)."""
     n = p["n_nodes"].astype(jnp.int32)
     k_mag, k_ph = jax.random.split(key)
     h = _sample_magnitude_dynamic_n(jax.random.key_data(k_mag), fading, p,
                                     n, n_max)
-    a = p["phase_error_max"]
-    phi = _u01_to_uniform(
-        _bits_to_u01(_dynamic_bits(jax.random.key_data(k_ph), n, n_max)),
-        -a, a)
-    h = (h * jnp.cos(phi)).astype(jnp.float32)
+    if not phase_zero:
+        a = p["phase_error_max"]
+        phi = _u01_to_uniform(
+            _bits_to_u01(_dynamic_bits(jax.random.key_data(k_ph), n, n_max)),
+            -a, a)
+        h = h * jnp.cos(phi)
+    h = h.astype(jnp.float32)
     return jnp.where(jnp.arange(n_max) < n, h, jnp.float32(0.0))
 
 
@@ -279,12 +293,12 @@ def _dynamic_threefry_ok() -> bool:
 
 
 def _row_gains(key: Array, fading: str, p: dict, n_sizes: tuple,
-               n_max: int) -> Array:
+               n_max: int, phase_zero: bool = False) -> Array:
     """This row's (n_max,) zero-padded slot gains: dynamic-count program
     when available (no per-N branches), per-N `lax.switch` otherwise."""
     if len(n_sizes) > 1 and _dynamic_threefry_ok():
-        return _sample_gains_dynamic_n(key, fading, p, n_max)
-    return _sample_gains_padded(key, fading, p, n_sizes, n_max)
+        return _sample_gains_dynamic_n(key, fading, p, n_max, phase_zero)
+    return _sample_gains_padded(key, fading, p, n_sizes, n_max, phase_zero)
 
 
 def _row_complex_gains(key: Array, fading: str, p: dict, n_sizes: tuple,

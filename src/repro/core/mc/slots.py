@@ -46,11 +46,20 @@ class SlotCtx:
     n_antennas: static broadcast antenna count (None = single antenna,
               RNG-identical to `GBMASimulator`).
     m_sizes:  distinct per-row antenna counts (static; empty = broadcast).
-    h_slot:   this slot's pre-sampled gain vector when the engine hoisted
-              the gain sampling out of the scan (node-count sweeps); drawn
-              from exactly the k_h the slot fn would have split off.
+    h_slot:   this slot's pre-sampled gain vector when the legacy inscan
+              plan hoisted the gain sampling out of the scan (node-count
+              sweeps); drawn from exactly the k_h the slot fn would have
+              split off.
     ota_impl: 'inline' (engine einsum) or 'pallas'/'ref'/'auto' to route
               the OTA superposition through `repro.kernels.ota`.
+    phase_zero: static promise that every row's phase_error_max is 0 —
+              lets the hoisted draw twins skip the precoded-phase stream
+              (value-identical; see `sampling._sample_gains`).
+    draws:    this slot's pre-materialized draw dict under the execution
+              layer's hoisted RNG plan (`mc/exec.py`) — the per-step slice
+              of whatever this algorithm's `hoist_draws` returned. None =
+              draw from the slot key inside the slot fn (inscan plan, or
+              an algorithm registered without a hoist twin).
     """
 
     fading: str
@@ -63,6 +72,8 @@ class SlotCtx:
     h_min: float
     h_slot: Optional[Array] = None
     ota_impl: str = "inline"
+    phase_zero: bool = False
+    draws: Optional[dict] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,8 +93,18 @@ class AlgoSpec:
                     truncation in the scan (`blind_ec` semantics).
     hoist_gains(invert_channel) -> bool: whether the slot's scalar-gain
                     draw may be hoisted out of the scan on node-count
-                    sweeps (single-antenna only; the engine checks the
-                    antenna config separately).
+                    sweeps under the LEGACY inscan plan (single-antenna
+                    only; the engine checks the antenna config
+                    separately).
+    hoist_draws(step_keys, ctx, n_max, d) -> dict: the algorithm's draw
+                    twin for the execution layer's hoisted RNG plan
+                    (`mc/exec.py`): materializes every random stream the
+                    slot fn consumes for ALL steps at once — key-split
+                    order identical to the in-scan draws — returning a
+                    dict of (steps, ...) arrays whose per-step slices
+                    arrive back as `ctx.draws`. None = the algorithm only
+                    runs its in-scan draw path (the hoisted plan passes
+                    `draws=None` for it).
     theorem1:       the Theorem-1 bound applies (single-antenna precoded
                     GBMA — the setting the theorem covers).
     """
@@ -96,6 +117,7 @@ class AlgoSpec:
     nesterov: bool = False
     error_feedback: bool = False
     hoist_gains: Callable[[bool], bool] = staticmethod(lambda inv: False)
+    hoist_draws: Optional[Callable] = None
     theorem1: bool = False
 
 
@@ -108,10 +130,13 @@ def register_algo(name: str,
                   uses_gamma: bool = False, nesterov: bool = False,
                   error_feedback: bool = False,
                   hoist_gains: Optional[Callable[[bool], bool]] = None,
+                  hoist_draws: Optional[Callable] = None,
                   theorem1: bool = False,
                   overwrite: bool = False) -> AlgoSpec:
     """Register a per-slot algorithm under `name` (the `run_mc(algo=)`
-    value). Returns the spec; `ALGOS` updates automatically."""
+    value). Returns the spec; `ALGOS` updates automatically. Algorithms
+    registered without a `hoist_draws` twin still run under the hoisted
+    RNG plan — they just keep drawing inside the scan."""
     if name in ALGO_REGISTRY and not overwrite:
         raise ValueError(f"algo {name!r} is already registered "
                          "(pass overwrite=True to replace it)")
@@ -119,6 +144,7 @@ def register_algo(name: str,
                     uses_gamma=uses_gamma, nesterov=nesterov,
                     error_feedback=error_feedback,
                     hoist_gains=hoist_gains or (lambda inv: False),
+                    hoist_draws=hoist_draws,
                     theorem1=theorem1)
     ALGO_REGISTRY[name] = spec
     return spec
@@ -137,12 +163,65 @@ def __getattr__(name: str):
 
 # --------------------------------------------------------------------------
 # slot implementations (mirror the reference simulators' RNG usage)
+#
+# Each slot fn consumes `ctx.draws` when the hoisted RNG plan supplied it
+# and falls back to drawing from the slot key otherwise; each family's
+# `*_hoist_draws` twin vmaps the SAME draw code over the step keys, so the
+# two plans are value-identical by construction.
 # --------------------------------------------------------------------------
+def _ctx_with_draws(ctx: SlotCtx, draws) -> SlotCtx:
+    return dataclasses.replace(ctx, draws=draws)
+
+
+def _step_antenna_keys(key: Array, ctx: SlotCtx) -> Array:
+    """One slot's antenna keys: the per-row counts-as-data replay when the
+    antenna count is row data, the plain split for a static M."""
+    if ctx.m_sizes:
+        return _antenna_keys(key, ctx.m_sizes, ctx.p)
+    return jax.random.split(key, ctx.n_antennas)
+
+
+def _gains_deterministic(ctx: SlotCtx) -> bool:
+    """Whether this batch's precoded gains consume NO randomness (equal
+    fading with the phase stream statically zero): the hoist twins then
+    leave 'h' out of the draw dict — materializing a (steps, n_max)
+    broadcast buffer is pure memory traffic — and the slot fns recompute
+    the broadcast inline, which is value-identical by definition."""
+    return ctx.fading == "equal" and ctx.phase_zero
+
+
+def _deterministic_gains(key: Array, ctx: SlotCtx, n_max: int) -> Array:
+    """The inline (n_max,) gain vector for `_gains_deterministic` batches,
+    multiplied by the validity mask to make it an OPAQUE operand: without
+    that, XLA sees a scalar broadcast and lowers the slot superposition as
+    an unvectorized full reduce (measured ~2.4x slower than the matvec at
+    N=4096) instead of the matvec every random h takes. The multiply is
+    bit-exact: valid lanes hold exactly 1.0 (h·1 == h), and padded lanes
+    are exactly 0 on both sides (the padded samplers zero-pad).
+    (`lax.optimization_barrier` would be the canonical tool, but it has no
+    vmap batching rule on the supported JAX range.)"""
+    h = _row_gains(key, ctx.fading, ctx.p, ctx.n_sizes, n_max,
+                   ctx.phase_zero)
+    return h * ctx.mask
+
+
+def _ota_draw(key: Array, ctx: SlotCtx, n_max: int, d: int) -> dict:
+    """One OTA slot's draws — the k → (k_h, k_w) chain of `_ota_slot`:
+    the (n_max,) channel gains and the (d,) edge noise."""
+    k_h, k_w = jax.random.split(key)
+    out = {"w": jax.random.normal(k_w, (d,), jnp.float32)}
+    if not _gains_deterministic(ctx):
+        out["h"] = _row_gains(k_h, ctx.fading, ctx.p, ctx.n_sizes, n_max,
+                              ctx.phase_zero)
+    return out
+
+
 def _ota_slot(g: Array, key: Array, ctx: SlotCtx, h_slot=None) -> Array:
     """Single-antenna OTA superposition (Eq. 8): v = (1/N) Σ h_n g_n + w.
 
     slot key → (k_h, k_w); k_h draws the (n_max,) gains unless the caller
-    hoisted them (`h_slot`), k_w the (d,) edge noise — split-for-split
+    hoisted them (`ctx.draws` under the hoisted plan, `h_slot` under the
+    legacy N-sweep hoist), k_w the (d,) edge noise — split-for-split
     identical to `gbma.ota_aggregate`. With `ctx.ota_impl != 'inline'` the
     superposition + noise-add routes through the tiled
     `repro.kernels.ota.ota_edge_aggregate` kernel (pallas on TPU, jnp
@@ -150,21 +229,39 @@ def _ota_slot(g: Array, key: Array, ctx: SlotCtx, h_slot=None) -> Array:
     the kernel's static `noise_scale` stays 1.
     """
     p = ctx.p
-    k_h, k_w = jax.random.split(key)
-    h = _row_gains(k_h, ctx.fading, p, ctx.n_sizes, g.shape[0]) \
-        if h_slot is None else h_slot
+    if ctx.draws is not None:
+        w = ctx.draws["w"]
+        h = ctx.draws.get("h")
+        if h is None:  # deterministic gains were (rightly) not hoisted
+            h = _deterministic_gains(key, ctx, g.shape[0])
+    else:
+        k_h, k_w = jax.random.split(key)
+        h = _row_gains(k_h, ctx.fading, p, ctx.n_sizes, g.shape[0]) \
+            if h_slot is None else h_slot
+        w = jax.random.normal(k_w, (g.shape[1],), dtype=g.dtype)
     std = p["noise_std"] / (p["n_nodes"] * jnp.sqrt(p["energy"]))
     if ctx.ota_impl != "inline":
         from repro.kernels.ota.ops import ota_edge_aggregate
 
-        z = jax.random.normal(k_w, (g.shape[1],), dtype=g.dtype)
         # valid only when every row transmits at the full static node count
         # (run_mc enforces this): the kernel normalizes by the static N
-        return ota_edge_aggregate(g, h, std * z, noise_scale=1.0,
+        return ota_edge_aggregate(g, h, std * w, noise_scale=1.0,
                                   impl=ctx.ota_impl,
                                   interpret=jax.default_backend() != "tpu")
     v = jnp.einsum("n,nd->d", h, g) / p["n_nodes"]
-    return v + std * jax.random.normal(k_w, v.shape, dtype=v.dtype)
+    return v + std * w
+
+
+def _gbma_hoist_draws(step_keys: Array, ctx: SlotCtx, n_max: int,
+                      d: int) -> dict:
+    """All-steps draw twin of `_gbma_slot`: single-antenna slots hoist to
+    {'h': (steps, n_max), 'w': (steps, d)}; antenna paths (static M or
+    per-row counts) insert an antenna axis after steps."""
+    if ctx.n_antennas is None and not ctx.m_sizes:
+        return jax.vmap(lambda k: _ota_draw(k, ctx, n_max, d))(step_keys)
+    return jax.vmap(lambda k: jax.vmap(
+        lambda ak: _ota_draw(ak, ctx, n_max, d))(
+            _step_antenna_keys(k, ctx)))(step_keys)
 
 
 def _gbma_slot(g: Array, key: Array, ctx: SlotCtx) -> Array:
@@ -178,21 +275,44 @@ def _gbma_slot(g: Array, key: Array, ctx: SlotCtx) -> Array:
     the first m of its replayed split(key, m).
     """
     p = ctx.p
-    if ctx.m_sizes:
-        keys = _antenna_keys(key, ctx.m_sizes, p)
-        v = jax.vmap(lambda k: _ota_slot(g, k, ctx))(keys)
-        amask = (jnp.arange(v.shape[0]) < p["n_antennas"]).astype(v.dtype)
-        return jnp.einsum("m,md->d", amask, v) / p["n_antennas"]
-    if ctx.n_antennas is None:
-        return _ota_slot(g, key, ctx, ctx.h_slot)
-    keys = jax.random.split(key, ctx.n_antennas)
-    v = jax.vmap(lambda k: _ota_slot(g, k, ctx))(keys)
-    return jnp.mean(v, axis=0)
+    if ctx.m_sizes or ctx.n_antennas is not None:
+        if ctx.draws is not None:
+            v = jax.vmap(lambda dr: _ota_slot(
+                g, key, _ctx_with_draws(ctx, dr)))(ctx.draws)
+        else:
+            v = jax.vmap(lambda k: _ota_slot(g, k, ctx))(
+                _step_antenna_keys(key, ctx))
+        if ctx.m_sizes:
+            amask = (jnp.arange(v.shape[0])
+                     < p["n_antennas"]).astype(v.dtype)
+            return jnp.einsum("m,md->d", amask, v) / p["n_antennas"]
+        return jnp.mean(v, axis=0)
+    return _ota_slot(g, key, ctx, ctx.h_slot)
 
 
 def _centralized_slot(g: Array, key: Array, ctx: SlotCtx) -> Array:
-    """Noiseless benchmark GD: the slot key is unused."""
+    """Noiseless benchmark GD: the slot key is unused (and there is no
+    hoist twin — nothing random to hoist)."""
     return jnp.sum(g, axis=0) / ctx.p["n_nodes"]
+
+
+def _blind_antenna_draw(key: Array, ctx: SlotCtx, n_max: int,
+                        d: int) -> dict:
+    """One antenna's draw chain in `_blind_slot` — k → (k_h, k_w): the
+    complex gain parts (a, b) and the stacked real/imag edge noise."""
+    k_h, k_w = jax.random.split(key)
+    a, b = _row_complex_gains(k_h, ctx.fading, ctx.p, ctx.n_sizes, n_max)
+    return {"a": a, "b": b,
+            "z": jax.random.normal(k_w, (2, d), jnp.float32)}
+
+
+def _blind_hoist_draws(step_keys: Array, ctx: SlotCtx, n_max: int,
+                       d: int) -> dict:
+    """All-steps draw twin of `_blind_slot`: (steps, m, ...) complex-gain
+    and edge-noise streams (m = static M or the padded per-row axis)."""
+    return jax.vmap(lambda k: jax.vmap(
+        lambda ak: _blind_antenna_draw(ak, ctx, n_max, d))(
+            _step_antenna_keys(k, ctx)))(step_keys)
 
 
 def _blind_slot(g: Array, key: Array, ctx: SlotCtx) -> Array:
@@ -205,23 +325,47 @@ def _blind_slot(g: Array, key: Array, ctx: SlotCtx) -> Array:
     m2 = _magnitude_m2(ctx.fading, p)
     std = p["noise_std"] / jnp.sqrt(p["energy"])
 
-    def antenna(k):
-        k_h, k_w = jax.random.split(k)
-        a, b = _row_complex_gains(k_h, ctx.fading, p, ctx.n_sizes, n_max)
-        z = jax.random.normal(k_w, (2, g.shape[1]), dtype=g.dtype)
+    def combine(a, b, z):
         y_r = jnp.einsum("n,nd->d", a, g) + std * z[0]
         y_i = jnp.einsum("n,nd->d", b, g) + std * z[1]
         return jnp.sum(a) * y_r + jnp.sum(b) * y_i
 
-    if ctx.m_sizes:
-        keys = _antenna_keys(key, ctx.m_sizes, p)
-        m_true = p["n_antennas"]
+    def antenna(k):
+        dr = _blind_antenna_draw(k, ctx, n_max, g.shape[1])
+        return combine(dr["a"], dr["b"], dr["z"])
+
+    if ctx.draws is not None:
+        s = jax.vmap(lambda dr: combine(dr["a"], dr["b"], dr["z"]))(
+            ctx.draws)
     else:
-        keys = jax.random.split(key, ctx.n_antennas)
-        m_true = jnp.float32(ctx.n_antennas)
-    s = jax.vmap(antenna)(keys)
+        s = jax.vmap(antenna)(_step_antenna_keys(key, ctx))
+    m_true = p["n_antennas"] if ctx.m_sizes else jnp.float32(ctx.n_antennas)
     amask = (jnp.arange(s.shape[0]) < m_true).astype(g.dtype)
     return jnp.einsum("m,md->d", amask, s) / (m_true * p["n_nodes"] * m2)
+
+
+def _fdm_draw(key: Array, ctx: SlotCtx, n_max: int, d: int) -> dict:
+    """`_fdm_slot`'s per-slot draws: the (n_max, d) per-node noise and —
+    unless the channel is inverted (gain equalized; k_h split off but
+    unconsumed, matching `baselines.FDMGD`) — the (n_max,) gains."""
+    p = ctx.p
+    k_h, k_w = jax.random.split(key)
+    if len(ctx.n_sizes) > 1 and _dynamic_threefry_ok():
+        raw = _normal_dynamic_n(k_w, p["n_nodes"].astype(jnp.int32),
+                                n_max, d)
+    else:
+        raw = _normal_padded(k_w, p["n_idx"], ctx.n_sizes, n_max, d,
+                             jnp.float32)
+    out = {"noise_raw": raw}
+    if not ctx.invert_channel and not _gains_deterministic(ctx):
+        out["h"] = _row_gains(k_h, ctx.fading, p, ctx.n_sizes, n_max,
+                              ctx.phase_zero)
+    return out
+
+
+def _fdm_hoist_draws(step_keys: Array, ctx: SlotCtx, n_max: int,
+                     d: int) -> dict:
+    return jax.vmap(lambda k: _fdm_draw(k, ctx, n_max, d))(step_keys)
 
 
 def _fdm_slot(g: Array, key: Array, ctx: SlotCtx) -> Array:
@@ -230,21 +374,44 @@ def _fdm_slot(g: Array, key: Array, ctx: SlotCtx) -> Array:
     matching `baselines.FDMGD`)."""
     p = ctx.p
     n_max = g.shape[0]
-    k_h, k_w = jax.random.split(key)
-    if len(ctx.n_sizes) > 1 and _dynamic_threefry_ok():
-        raw = _normal_dynamic_n(
-            k_w, p["n_nodes"].astype(jnp.int32), n_max, g.shape[1])
+    if ctx.draws is not None:
+        raw = ctx.draws["noise_raw"]
+        h = ctx.draws.get("h")
+        if h is None and not ctx.invert_channel:
+            h = _deterministic_gains(key, ctx, n_max)
     else:
-        raw = _normal_padded(
-            k_w, p["n_idx"], ctx.n_sizes, n_max, g.shape[1], g.dtype)
+        k_h, k_w = jax.random.split(key)
+        if len(ctx.n_sizes) > 1 and _dynamic_threefry_ok():
+            raw = _normal_dynamic_n(
+                k_w, p["n_nodes"].astype(jnp.int32), n_max, g.shape[1])
+        else:
+            raw = _normal_padded(
+                k_w, p["n_idx"], ctx.n_sizes, n_max, g.shape[1], g.dtype)
+        h = None
+        if not ctx.invert_channel:
+            h = _row_gains(k_h, ctx.fading, p, ctx.n_sizes, n_max) \
+                if ctx.h_slot is None else ctx.h_slot
     noise = p["noise_std"] / jnp.sqrt(p["energy"]) * raw
     if ctx.invert_channel:
         rx = g + noise
     else:
-        h = _row_gains(k_h, ctx.fading, p, ctx.n_sizes, n_max) \
-            if ctx.h_slot is None else ctx.h_slot
         rx = h[:, None] * g + noise
     return jnp.sum(rx * ctx.mask[:, None], axis=0) / p["n_nodes"]
+
+
+def _pc_draw(key: Array, ctx: SlotCtx, n_max: int, d: int) -> dict:
+    """`_power_control_slot`'s per-slot draws: gains + (d,) edge noise."""
+    k_h, k_w = jax.random.split(key)
+    out = {"w": jax.random.normal(k_w, (d,), jnp.float32)}
+    if not _gains_deterministic(ctx):
+        out["h"] = _row_gains(k_h, ctx.fading, ctx.p, ctx.n_sizes, n_max,
+                              ctx.phase_zero)
+    return out
+
+
+def _pc_hoist_draws(step_keys: Array, ctx: SlotCtx, n_max: int,
+                    d: int) -> dict:
+    return jax.vmap(lambda k: _pc_draw(k, ctx, n_max, d))(step_keys)
 
 
 def _power_control_slot(g: Array, key: Array, ctx: SlotCtx) -> Array:
@@ -252,14 +419,20 @@ def _power_control_slot(g: Array, key: Array, ctx: SlotCtx) -> Array:
     stay silent; the active set inverts its gains."""
     p = ctx.p
     n_max = g.shape[0]
-    k_h, k_w = jax.random.split(key)
-    h = _row_gains(k_h, ctx.fading, p, ctx.n_sizes, n_max) \
-        if ctx.h_slot is None else ctx.h_slot
+    if ctx.draws is not None:
+        w_raw = ctx.draws["w"]
+        h = ctx.draws.get("h")
+        if h is None:  # deterministic gains were (rightly) not hoisted
+            h = _deterministic_gains(key, ctx, n_max)
+    else:
+        k_h, k_w = jax.random.split(key)
+        h = _row_gains(k_h, ctx.fading, p, ctx.n_sizes, n_max) \
+            if ctx.h_slot is None else ctx.h_slot
+        w_raw = jax.random.normal(k_w, (g.shape[1],), dtype=g.dtype)
     active = (h >= ctx.h_min).astype(g.dtype) * ctx.mask
     n_active = jnp.maximum(jnp.sum(active), 1.0)
     sup = jnp.einsum("n,nd->d", active, g)
-    w = p["noise_std"] / (n_active * jnp.sqrt(p["energy"])) * (
-        jax.random.normal(k_w, (g.shape[1],), dtype=g.dtype))
+    w = p["noise_std"] / (n_active * jnp.sqrt(p["energy"])) * w_raw
     return sup / n_active + w
 
 
@@ -267,17 +440,24 @@ def _power_control_slot(g: Array, key: Array, ctx: SlotCtx) -> Array:
 # built-in registrations (order defines the historical ALGOS tuple)
 # --------------------------------------------------------------------------
 register_algo("gbma", _gbma_slot, ota=True,
-              hoist_gains=lambda inv: True, theorem1=True)
+              hoist_gains=lambda inv: True,
+              hoist_draws=_gbma_hoist_draws, theorem1=True)
 register_algo("centralized", _centralized_slot)
-register_algo("fdm", _fdm_slot, hoist_gains=lambda inv: not inv)
+register_algo("fdm", _fdm_slot, hoist_gains=lambda inv: not inv,
+              hoist_draws=_fdm_hoist_draws)
 register_algo("power_control", _power_control_slot,
-              hoist_gains=lambda inv: True)
+              hoist_gains=lambda inv: True,
+              hoist_draws=_pc_hoist_draws)
 register_algo("momentum", _gbma_slot, ota=True, uses_gamma=True,
-              hoist_gains=lambda inv: True)
+              hoist_gains=lambda inv: True,
+              hoist_draws=_gbma_hoist_draws)
 register_algo("nesterov", _gbma_slot, ota=True, uses_gamma=True,
-              nesterov=True, hoist_gains=lambda inv: True)
-register_algo("blind", _blind_slot, blind=True)
-register_algo("blind_ec", _blind_slot, blind=True, error_feedback=True)
+              nesterov=True, hoist_gains=lambda inv: True,
+              hoist_draws=_gbma_hoist_draws)
+register_algo("blind", _blind_slot, blind=True,
+              hoist_draws=_blind_hoist_draws)
+register_algo("blind_ec", _blind_slot, blind=True, error_feedback=True,
+              hoist_draws=_blind_hoist_draws)
 
 
 def _slot_update(g: Array, key: Array, *, algo: str, fading: str, p: dict,

@@ -10,8 +10,12 @@ package split along its natural layers:
   * `repro.core.mc.sampling` — the reference-twin RNG samplers (padded /
     dynamic-count threefry draws, antenna key replay).
   * `repro.core.mc.slots`    — per-slot algorithm updates behind
-    `register_algo` (`ALGOS` is derived from the registry).
-  * `repro.core.mc.engine`   — `_mc_core`, `run_mc`, `MCResult`,
+    `register_algo` (`ALGOS` is derived from the registry) + the
+    `hoist_draws` RNG-plan twins.
+  * `repro.core.mc.exec`     — the execution layer: the compiled
+    `_mc_core`, hoisted RNG plan, seed-chunked scheduler, on-device seed
+    reduction, memory model (docs/performance.md).
+  * `repro.core.mc.engine`   — row assembly + `run_mc`, `MCResult`,
     `ChannelBatch`, `energy_to_target`, the compile counter.
 
 Every name importable from `repro.core.montecarlo` before the split —
@@ -21,6 +25,7 @@ should import from `repro.core.mc` directly.
 """
 from __future__ import annotations
 
+from repro.core.mc import exec as _exec
 from repro.core.mc import problems as _problems
 from repro.core.mc import sampling as _sampling
 from repro.core.mc import slots as _slots
@@ -53,7 +58,7 @@ from repro.core.mc.slots import (
     register_algo,
 )
 
-_SUBMODULES = (_slots, _sampling, _problems)
+_SUBMODULES = (_slots, _sampling, _problems, _exec)
 
 
 def __getattr__(name: str):

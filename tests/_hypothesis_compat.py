@@ -5,8 +5,9 @@ the image, so the property tests import `given` / `settings` / `strategies`
 from here. When the real library is installed it is preferred (full shrinking
 and example databases); otherwise a deterministic, seeded sampler with the
 same decorator surface runs each property on `max_examples` pseudo-random
-draws. Supported strategies: `integers`, `floats`, `sampled_from` — exactly
-what the suite needs; extend `_Strategy` factories if a test needs more.
+draws. Supported strategies: `integers`, `floats`, `sampled_from`,
+`booleans` — exactly what the suite needs; extend `_Strategy` factories if
+a test needs more.
 """
 from __future__ import annotations
 
@@ -45,6 +46,10 @@ except ImportError:
         def sampled_from(elements):
             elems = list(elements)
             return _Strategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
 
     def settings(max_examples: int = 10, **_):
         """Records `max_examples`; `deadline` etc. are accepted and ignored."""

@@ -187,11 +187,10 @@ def test_blind_msweep_one_compile_matches_static(prob, mc):
     compile and match the static per-M runs."""
     ch = _ch()
     ms = (1, 3, 8)
-    mc_mod.clear_cache()
-    c0 = trace_count()
+    mc_mod.clear_cache()  # also zeroes the trace counter
     multi = run_mc(mc, [ch] * 3, "blind", [0.02] * 3, STEPS, SEEDS,
                    n_antennas=ms)
-    assert trace_count() - c0 == 1
+    assert trace_count() == 1
     for i, m in enumerate(ms):
         single = run_mc(mc, [ch], "blind", [0.02], STEPS, SEEDS,
                         n_antennas=m)
@@ -218,11 +217,10 @@ def test_blind_nsweep_one_compile_matches_per_n():
     probs = [MSDProblem.make(n, dim=8) for n in grid]
     mcs = [p.to_mc() for p in probs]
     ch = _ch()
-    mc_mod.clear_cache()
-    c0 = trace_count()
+    mc_mod.clear_cache()  # also zeroes the trace counter
     sweep = run_mc(mcs, [ch, ch], "blind", [0.02] * 2, STEPS, SEEDS,
                    n_antennas=4)
-    assert trace_count() - c0 == 1
+    assert trace_count() == 1
     for i, m in enumerate(mcs):
         single = run_mc(m, [ch], "blind", [0.02], STEPS, SEEDS,
                         n_antennas=4)

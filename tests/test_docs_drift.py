@@ -75,3 +75,29 @@ def test_readme_doc_links_resolve():
     readme = (ROOT / "README.md").read_text()
     for rel in re.findall(r"\]\((docs/[^)#]+)", readme):
         assert (ROOT / rel).is_file(), f"README links to missing {rel}"
+
+
+def test_performance_md_documents_the_exec_knobs():
+    """docs/performance.md is the execution layer's contract: every
+    exec-layer `run_mc` knob and the benchmark artifact it explains must
+    appear there, and both the README and docs/montecarlo.md must link
+    it."""
+    import inspect
+
+    from repro.core.montecarlo import run_mc
+
+    text = (ROOT / "docs" / "performance.md").read_text()
+    sig = inspect.signature(run_mc)
+    exec_knobs = [n for n in ("rng_plan", "seed_chunk", "keep_seed_curves")
+                  if n in sig.parameters]
+    assert exec_knobs, "run_mc lost its execution-layer knobs"
+    for knob in exec_knobs:
+        assert f"`{knob}`" in text, (
+            f"run_mc({knob}=...) is an execution-layer knob but "
+            "docs/performance.md does not document it")
+    assert "BENCH_montecarlo.json" in text
+    assert "estimate_peak_bytes" in text, (
+        "performance.md must document the memory model")
+    for linker in ("README.md", "docs/montecarlo.md"):
+        assert "performance.md" in (ROOT / linker).read_text(), (
+            f"{linker} must cross-link docs/performance.md")

@@ -47,13 +47,12 @@ def test_figure_script_runs_at_tiny_scale(name, monkeypatch):
     for attr, val in TINY.items():
         if hasattr(mod, attr):
             monkeypatch.setattr(mod, attr, val)
-    cleared = mc_mod.clear_cache()
-    c0 = mc_mod.trace_count()
+    cleared = mc_mod.clear_cache()  # also zeroes the trace counter
     rows = mod.run(verbose=False)
     assert rows, f"{name}.run() returned no rows"
     assert all(isinstance(r, str) and r for r in rows)
     if cleared:
-        compiles = mc_mod.trace_count() - c0
+        compiles = mc_mod.trace_count()
         assert compiles == mod.SMOKE_COMPILES, (
             f"{name}.run() compiled _mc_core {compiles}x, declared "
             f"SMOKE_COMPILES={mod.SMOKE_COMPILES} — a per-N/per-algo/"

@@ -184,11 +184,10 @@ def test_nsweep_one_compile_matches_per_n():
     mcs = [p.to_mc() for p in probs]
     singles = [run_mc(mc, [c], "gbma", [b], STEPS, SEEDS, pc=p.pc)
                for mc, c, b, p in zip(mcs, chs, betas, probs)]
-    mc_mod.clear_cache()
-    c0 = trace_count()
+    mc_mod.clear_cache()  # also zeroes the trace counter
     sweep = run_mc(mcs, chs, "gbma", betas, STEPS, SEEDS,
                    pc=[p.pc for p in probs])
-    assert trace_count() - c0 == 1
+    assert trace_count() == 1
     for i, single in enumerate(singles):
         np.testing.assert_allclose(sweep.risks[i], single.risks[0],
                                    rtol=1e-5, atol=1e-9)
@@ -226,10 +225,9 @@ def test_algo_batch_one_compile_matches_individual(prob, mc):
     ch = _ch()
     beta = stepsize_theorem1(prob.pc, ch, N, safety=0.5)
     algos = ("gbma", "fdm", "centralized")
-    mc_mod.clear_cache()
-    c0 = trace_count()
+    mc_mod.clear_cache()  # also zeroes the trace counter
     multi = run_mc(mc, [ch] * 3, algos, [beta] * 3, STEPS, SEEDS)
-    assert trace_count() - c0 == 1
+    assert trace_count() == 1
     for i, a in enumerate(algos):
         single = run_mc(mc, [ch], a, [beta], STEPS, SEEDS)
         np.testing.assert_allclose(multi.risks[i], single.risks[0],
