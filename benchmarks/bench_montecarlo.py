@@ -40,6 +40,16 @@ Workloads:
    curves) warm-for-warm on the same workload, plus the plan-only chunked
    A/B.
 
+6. **train_100m_ota**: the channel-transport layer's exactness-vs-speed
+   tradeoff on a training-shaped gradient pytree (a transformer-like leaf
+   mix, multi-million-D at full scale). One `transport.aggregate('gbma')`
+   slot per configuration: untiled (`FULL_CONCAT`, one (N, D) slot call —
+   the reference), block-tiled (`block_d` columns per tile), and
+   block-tiled with `transmit_dtype='bfloat16'`. Records warm times plus
+   the max deviation of each path from the untiled f32 reference — tiled
+   must sit at f32-ulp scale (≤ 1e-6), bf16-transmit at quantization
+   scale.
+
 `--smoke` shrinks every workload to CI size, writes
 `BENCH_montecarlo.smoke.json` (never the tracked full-scale record),
 asserts the warm timings are finite and the curve agreements hold, and
@@ -77,6 +87,8 @@ SWEEP_FRAC_GRID = (0.75, 0.5, 0.25)
 # runs only under seed_chunk (the point of the chunked scheduler). dim=24
 # keeps the slot channel-dominated — the regime the RNG plan targets
 LARGE = {"n": 4096, "dim": 24, "steps": 150, "seeds": 1024, "chunk": 32}
+# the transport workload: N nodes x D total parameters, tiled at block_d
+TRAIN_OTA = {"n": 8, "d": 2 * 1024 * 1024, "block_d": 256 * 1024}
 MEM_BUDGET_GIB = 2.0
 WARM_REPS = 3
 OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_montecarlo.json")
@@ -348,13 +360,70 @@ def bench_large_chunked(warm_reps: int = 2) -> dict:
     }
 
 
+def bench_train_100m_ota() -> dict:
+    """Transport-layer exactness-vs-speed: one gbma slot on a
+    training-shaped gradient pytree, untiled vs block-tiled vs
+    bf16-transmit (see module docstring, workload 6). The tiled and bf16
+    paths are compared value-wise against the untiled f32 reference —
+    the columns the bench smoke asserts on."""
+    from repro.core import transport
+
+    n, d, block_d = TRAIN_OTA["n"], TRAIN_OTA["d"], TRAIN_OTA["block_d"]
+    # transformer-ish leaf mix: one dominant embedding panel, two
+    # projection-sized leaves, one tiny vector leaf (exercises blocks that
+    # span a leaf, tile inside a leaf, and degenerate single-tile leaves)
+    sizes = {"embed": d // 2, "attn": d // 4, "ffn": d // 4 - 128,
+             "bias": 128}
+    ks = jax.random.split(jax.random.key(0), len(sizes))
+    grads = {name: jax.random.normal(k, (n, sz), jnp.float32)
+             for (name, sz), k in zip(sizes.items(), ks)}
+    ch = ChannelConfig(fading="rayleigh", noise_std=0.05, energy=1.0,
+                       phase_error_max=0.3)
+    slot_key = jax.random.key(1)
+
+    def make(block, tx_dtype=None):
+        cfg = transport.TransportConfig(n_nodes=n, channel=ch,
+                                        block_d=block,
+                                        transmit_dtype=tx_dtype)
+        fn = jax.jit(
+            lambda g, k: transport.aggregate("gbma", g, k, cfg)[0])
+        return lambda: jax.block_until_ready(fn(grads, slot_key))
+
+    t_untiled, v_untiled = _warm(make(transport.FULL_CONCAT))
+    t_tiled, v_tiled = _warm(make(block_d))
+    t_bf16, v_bf16 = _warm(make(block_d, "bfloat16"))
+
+    def max_abs(a, b):
+        return float(max(
+            jnp.max(jnp.abs(x - y))
+            for x, y in zip(jax.tree_util.tree_leaves(a),
+                            jax.tree_util.tree_leaves(b))))
+
+    return {
+        "workload": {"aggregator": "gbma", "n_nodes": n, "total_d": d,
+                     "block_d": block_d, "leaf_sizes": sizes,
+                     "fading": "rayleigh",
+                     "timing": "warm steady-state, best-of reps; one "
+                               "aggregate() slot per call"},
+        "untiled_warm_s": round(t_untiled, 4),
+        "tiled_warm_s": round(t_tiled, 4),
+        "bf16_tiled_warm_s": round(t_bf16, 4),
+        "tiled_speedup_vs_untiled": round(t_untiled / t_tiled, 2),
+        "bf16_speedup_vs_tiled": round(t_tiled / t_bf16, 2),
+        "tiled_max_abs_diff": max_abs(v_tiled, v_untiled),
+        "bf16_max_abs_diff": max_abs(v_bf16, v_untiled),
+    }
+
+
 def _smoke_shrink():
     """CI-size constants: every path exercised, nothing slow."""
-    global N, STEPS, SEEDS, SWEEP_N_GRID, SWEEP_M_GRID, LARGE, WARM_REPS
+    global N, STEPS, SEEDS, SWEEP_N_GRID, SWEEP_M_GRID, LARGE, WARM_REPS, \
+        TRAIN_OTA
     N, STEPS, SEEDS = 48, 40, 2
     SWEEP_N_GRID = (16, 25)
     SWEEP_M_GRID = (1, 3)
     LARGE = {"n": 256, "dim": 16, "steps": 30, "seeds": 16, "chunk": 4}
+    TRAIN_OTA = {"n": 4, "d": 8192, "block_d": 2048}
     WARM_REPS = 2
 
 
@@ -366,12 +435,14 @@ def run(verbose: bool = True, smoke: bool = False) -> list[str]:
     m_sweep = bench_m_sweep()
     frac_sweep = bench_frac_sweep()
     large = bench_large_chunked(warm_reps=1 if smoke else 3)
+    train_ota = bench_train_100m_ota()
     record = {
         **single,
         "n_sweep": sweep,
         "fig7_m_sweep": m_sweep,
         "fig8_frac_sweep": frac_sweep,
         "large_chunked": large,
+        "train_100m_ota": train_ota,
         "timing_methodology": {
             "cold": "jit cache cleared, one call, compiles included",
             "warm": f"best of {WARM_REPS} after one untimed warm-up",
@@ -413,6 +484,16 @@ def run(verbose: bool = True, smoke: bool = False) -> list[str]:
         f"{large['max_rel_curve_diff']:.2e}",
         f"bench_montecarlo,large_runs_only_under_seed_chunk,"
         f"{int(large['runs_only_under_seed_chunk'])}",
+        f"bench_montecarlo,train_ota_untiled_warm_s,"
+        f"{train_ota['untiled_warm_s']:.4f}",
+        f"bench_montecarlo,train_ota_tiled_warm_s,"
+        f"{train_ota['tiled_warm_s']:.4f}",
+        f"bench_montecarlo,train_ota_bf16_warm_s,"
+        f"{train_ota['bf16_tiled_warm_s']:.4f}",
+        f"bench_montecarlo,train_ota_tiled_max_abs_diff,"
+        f"{train_ota['tiled_max_abs_diff']:.2e}",
+        f"bench_montecarlo,train_ota_bf16_max_abs_diff,"
+        f"{train_ota['bf16_max_abs_diff']:.2e}",
         f"bench_montecarlo,json,{out_path}",
     ]
     if verbose:
@@ -432,9 +513,22 @@ def _smoke_assert(record: dict) -> None:
         ("fig7_m_sweep", record["fig7_m_sweep"]["one_compile_warm_s"]),
         ("fig8_frac_sweep", record["fig8_frac_sweep"]["one_compile_warm_s"]),
         ("large_chunked", record["large_chunked"]["new_path_warm_s"]),
+        ("train_100m_ota", record["train_100m_ota"]["tiled_warm_s"]),
+        ("train_100m_ota_bf16",
+         record["train_100m_ota"]["bf16_tiled_warm_s"]),
     ):
         if not (np.isfinite(warm) and warm > 0):
             problems.append(f"{key}: warm time {warm!r} not finite/positive")
+    ota = record["train_100m_ota"]
+    if not ota["tiled_max_abs_diff"] <= 1e-6:
+        problems.append(
+            f"train_100m_ota: tiled deviates from untiled by "
+            f"{ota['tiled_max_abs_diff']:.2e} > 1e-6 (must be f32-ulp)")
+    if not 0 < ota["bf16_max_abs_diff"] <= 0.05:
+        problems.append(
+            f"train_100m_ota: bf16-transmit deviation "
+            f"{ota['bf16_max_abs_diff']:.2e} outside (0, 0.05] — expected "
+            "quantization-sized, nonzero")
     for key, rel, tol in (
         ("single", record["max_rel_curve_diff"], 1e-4),
         ("n_sweep", record["n_sweep"]["max_rel_curve_diff"], 1e-5),

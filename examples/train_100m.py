@@ -3,10 +3,21 @@ transformer for a few hundred steps with GBMA over-the-air gradient
 aggregation, on synthetic token data.
 
 Defaults are sized for this CPU container (~15 min); pass --steps/--seq/
---batch to scale up. `--aggregator centralized` gives the noiseless
-benchmark; `--aggregator fdm` the orthogonal-channel baseline.
+--batch to scale up. `--aggregator` takes ANY registered MAC algorithm:
+`centralized` is the noiseless benchmark, `fdm` the orthogonal-channel
+baseline, and the transport-routed family trains over the simulated MAC
+slot-for-slot with the Monte Carlo engine —
 
     PYTHONPATH=src python examples/train_100m.py --steps 300
+    PYTHONPATH=src python examples/train_100m.py \
+        --aggregator blind --antennas 8
+    PYTHONPATH=src python examples/train_100m.py \
+        --aggregator blind_ec --antennas 8 --power-budget 50
+    PYTHONPATH=src python examples/train_100m.py \
+        --aggregator nesterov --gamma 0.9 --optimizer gd
+
+See docs/training.md for the routing rules, block tiling (`--block-d`)
+and the bf16-transmit path (`--transmit-dtype bfloat16`).
 """
 import sys
 

@@ -17,19 +17,28 @@ Three implementation tiers, all realizing Eq. (8)–(9):
       gradient by the local node gain, `psum` over the node axes (= analog
       superposition over the MAC), normalize by N, add edge noise. Used for
       exposition and cross-validated against tier (ii) in tests.
+
+Tier (i) and the tree helpers are thin veneers over the unified
+channel-transport layer (`repro.core.transport`), which routes every slot
+through the `mc/slots.py` algo registry — one definition of each MAC
+algorithm shared by the Monte Carlo engine and real-model training. The
+veneers keep this module's historical signatures and RNG streams
+(split-for-split); values agree with the pre-transport implementations to
+f32 ulp (<= 1e-6): the only arithmetic change is that channel constants
+like the edge-noise std are now computed in traced f32 (the engine's
+convention) instead of host-side f64, a one-ulp rounding difference.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Callable, Optional, Sequence, Tuple
+from typing import Any, Callable, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.compat import tree_flatten, tree_map, tree_unflatten
-from repro.core.channel import (ChannelConfig, edge_noise_std,
-                                sample_complex_gains, sample_gains)
+from repro.compat import tree_map
+from repro.core import transport
+from repro.core.channel import ChannelConfig, edge_noise_std, sample_gains
 
 Array = jax.Array
 PyTree = Any
@@ -44,20 +53,19 @@ def ota_aggregate(
     cfg: ChannelConfig,
     use_kernel: bool = False,
 ) -> Array:
-    """One MAC slot: returns v_k of shape (d,) per Eq. (8)."""
-    n = grads.shape[0]
-    k_h, k_w = jax.random.split(key)
-    h = sample_gains(k_h, cfg, (n,))
-    if use_kernel:
-        from repro.kernels.ota import ops as ota_ops
+    """One MAC slot: returns v_k of shape (d,) per Eq. (8).
 
-        noise = jax.random.normal(k_w, grads.shape[1:], dtype=grads.dtype)
-        return ota_ops.ota_edge_aggregate(
-            grads, h, noise, noise_scale=edge_noise_std(cfg, n)
-        )
-    v = jnp.einsum("n,nd->d", h, grads) / n
-    w = edge_noise_std(cfg, n) * jax.random.normal(k_w, v.shape, dtype=v.dtype)
-    return v + w
+    A veneer over `transport.aggregate('gbma', ...)` — the slot key splits
+    k -> (k_h, k_w) exactly as before (gains then edge noise), so fixed
+    seeds reproduce; the received update is computed in f32 and cast back
+    to `grads.dtype`. `use_kernel` routes the superposition through
+    `repro.kernels.ota` (pallas on TPU, jnp oracle elsewhere)."""
+    impl = ("pallas" if jax.default_backend() == "tpu" else "ref") \
+        if use_kernel else "inline"
+    tcfg = transport.TransportConfig(
+        n_nodes=grads.shape[0], channel=cfg, ota_impl=impl)
+    v, _, _ = transport.aggregate("gbma", grads, key, tcfg)
+    return v.astype(grads.dtype)
 
 
 @dataclasses.dataclass
@@ -153,23 +161,20 @@ def perturb_gradients(
 ) -> PyTree:
     """Add the edge noise w_k to the superposed gradient tree (Eq. 8).
 
-    Per-leaf independent normals with std sigma_w/(N sqrt(E_N)); leaf keys are
-    derived via fold_in on the flattened leaf index so the tree structure, not
-    leaf order in memory, defines the stream. SPMD-safe: same key on every
-    device yields identical noise, consistent with any output sharding.
+    Per-leaf independent normals with std sigma_w/(N sqrt(E_N)); leaf keys
+    come from `split(key, n_leaves)` so the tree structure, not leaf order
+    in memory, defines the stream. SPMD-safe: same key on every device
+    yields identical noise, consistent with any output sharding. The draw
+    itself is `transport.add_tree_noise` (bit-identical to the historical
+    inline loop); only the std constant stays host-side f64 here, so this
+    fused path is byte-for-byte stable across the transport refactor.
     """
     if not gcfg.enabled:
         return grads
     if dtype is None:
         dtype = jnp.dtype(gcfg.noise_dtype)
     std = edge_noise_std(gcfg.channel, gcfg.n_nodes)
-    leaves, treedef = tree_flatten(grads)
-    keys = jax.random.split(key, len(leaves))
-    noisy = [
-        (g + std * jax.random.normal(k, g.shape, dtype=dtype).astype(g.dtype))
-        for g, k in zip(leaves, keys)
-    ]
-    return tree_unflatten(treedef, noisy)
+    return transport.add_tree_noise(grads, key, std, noise_dtype=dtype)
 
 
 # --------------------------------------------------------------------------
@@ -213,10 +218,16 @@ def ota_aggregate_multiantenna(
     superposition; MRC-style averaging divides both the gradient-distortion
     variance (sigma_h^2 -> sigma_h^2/M) and the noise variance by M — the
     fading effect vanishes as M grows even without any phase correction at
-    the transmitters."""
-    keys = jax.random.split(key, n_antennas)
-    v = jax.vmap(lambda k: ota_aggregate(grads, k, cfg))(keys)
-    return jnp.mean(v, axis=0)
+    the transmitters.
+
+    Veneer over `transport.aggregate('gbma', ..., n_antennas=M)`: the key
+    splits `split(key, M)` into per-antenna slot chains exactly as the
+    historical vmap did (M=1 included — its extra split is part of the
+    stream)."""
+    tcfg = transport.TransportConfig(
+        n_nodes=grads.shape[0], channel=cfg, n_antennas=n_antennas)
+    v, _, _ = transport.aggregate("gbma", grads, key, tcfg)
+    return v.astype(grads.dtype)
 
 
 def blind_ota_aggregate(
@@ -242,22 +253,16 @@ def blind_ota_aggregate(
     equal-gain (scale 1) GBMA update as M grows — no transmitter CSI
     needed. Effective noise variance ≈ σ_w²/(E_N N M E[h²]) per coordinate
     (vs σ_w²/(E_N N²) for precoded GBMA).
+
+    Veneer over `transport.aggregate('blind', ...)` (the engine's
+    `_blind_slot`): key chain slot -> `split(key, M)` -> per antenna
+    (k_h complex gains, k_w stacked real/imag noise), split-for-split the
+    historical stream.
     """
-    n = grads.shape[0]
-    m2 = cfg.magnitude_m2
-    std = cfg.noise_std / math.sqrt(cfg.energy)
-
-    def antenna(k):
-        k_h, k_w = jax.random.split(k)
-        a, b = sample_complex_gains(k_h, cfg, (n,))
-        z = jax.random.normal(k_w, (2,) + grads.shape[1:], dtype=grads.dtype)
-        y_r = jnp.einsum("n,nd->d", a, grads) + std * z[0]
-        y_i = jnp.einsum("n,nd->d", b, grads) + std * z[1]
-        return jnp.sum(a) * y_r + jnp.sum(b) * y_i
-
-    keys = jax.random.split(key, n_antennas)
-    s = jax.vmap(antenna)(keys)
-    return jnp.sum(s, axis=0) / (n_antennas * n * m2)
+    tcfg = transport.TransportConfig(
+        n_nodes=grads.shape[0], channel=cfg, n_antennas=n_antennas)
+    v, _, _ = transport.aggregate("blind", grads, key, tcfg)
+    return v.astype(grads.dtype)
 
 
 # --------------------------------------------------------------------------

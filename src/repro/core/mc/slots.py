@@ -244,10 +244,14 @@ def _ota_slot(g: Array, key: Array, ctx: SlotCtx, h_slot=None) -> Array:
         from repro.kernels.ota.ops import ota_edge_aggregate
 
         # valid only when every row transmits at the full static node count
-        # (run_mc enforces this): the kernel normalizes by the static N
+        # (run_mc enforces this): the kernel normalizes by the static N.
+        # out_dtype matches the inline einsum's promotion (f32 gains x g),
+        # so bf16-transmit blocks still emit an f32 received update.
         return ota_edge_aggregate(g, h, std * w, noise_scale=1.0,
                                   impl=ctx.ota_impl,
-                                  interpret=jax.default_backend() != "tpu")
+                                  interpret=jax.default_backend() != "tpu",
+                                  out_dtype=jnp.promote_types(
+                                      g.dtype, jnp.float32))
     v = jnp.einsum("n,nd->d", h, g) / p["n_nodes"]
     return v + std * w
 
@@ -458,6 +462,50 @@ register_algo("blind", _blind_slot, blind=True,
               hoist_draws=_blind_hoist_draws)
 register_algo("blind_ec", _blind_slot, blind=True, error_feedback=True,
               hoist_draws=_blind_hoist_draws)
+
+
+# --------------------------------------------------------------------------
+# block-shaped entry point (the channel-transport layer's tiling surface)
+# --------------------------------------------------------------------------
+# d-axis layout of the hoisted draw dicts: these keys carry a trailing
+# axis of length d and slice per column block; every other key ('h', 'a',
+# 'b') is per-node/per-antenna only and is shared by all blocks of a slot.
+_DRAW_D_KEYS = ("w", "z", "noise_raw")
+
+
+def slice_draws(draws: Optional[dict], lo: int, hi: int) -> Optional[dict]:
+    """Column-block [lo, hi) view of one slot's draw dict.
+
+    Slicing the d-carrying streams ('w' (d,), 'z' (..., 2, d),
+    'noise_raw' (n_max, d)) on their LAST axis and passing the per-node
+    streams through whole keeps block-tiled slot evaluation value-
+    identical to the untiled call: every slot computation is
+    per-coordinate given its draws, so coordinate c of the update depends
+    only on column c of g and of the d-carrying draws. (The draws match
+    bitwise; the one residual tiling artifact is XLA reassociating the
+    f32 node-superposition reduction per block shape — a few ulp.)"""
+    if draws is None:
+        return None
+    return {k: (v[..., lo:hi] if k in _DRAW_D_KEYS else v)
+            for k, v in draws.items()}
+
+
+def slot_update_block(algo: str, g: Array, key: Array, ctx: SlotCtx,
+                      lo: int, hi: int) -> Array:
+    """One column block of a slot update: `g` is the (n_max, hi-lo) block
+    of the transmitted vectors, `ctx.draws` the FULL-d draw dict (sliced
+    here). Requires hoisted draws for any algorithm that consumes
+    randomness — re-running a slot fn's in-scan draw path per block would
+    repeat the same key (correlated noise across blocks) and break the
+    tiled==untiled guarantee. `repro.core.transport` enforces that."""
+    spec = ALGO_REGISTRY[algo]
+    if ctx.draws is None and spec.hoist_draws is not None:
+        raise ValueError(
+            f"slot_update_block({algo!r}) needs pre-materialized draws "
+            "(ctx.draws): per-block in-slot draws would reuse the slot key "
+            "across blocks")
+    ctx_blk = dataclasses.replace(ctx, draws=slice_draws(ctx.draws, lo, hi))
+    return spec.slot_fn(g, key, ctx_blk)
 
 
 def _slot_update(g: Array, key: Array, *, algo: str, fading: str, p: dict,

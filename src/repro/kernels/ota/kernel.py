@@ -51,7 +51,7 @@ def _ota_kernel(g_ref, h_ref, w_ref, o_ref, acc_ref, *, n_nodes: int,
 @functools.partial(
     jax.jit,
     static_argnames=("noise_scale", "n_nodes", "node_blk", "lane_blk",
-                     "interpret"),
+                     "interpret", "out_dtype"),
 )
 def ota_edge_aggregate_kernel(
     grads: jax.Array,  # (N, d)
@@ -63,15 +63,22 @@ def ota_edge_aggregate_kernel(
     node_blk: int = DEFAULT_NODE_BLK,
     lane_blk: int = DEFAULT_LANE_BLK,
     interpret: bool = False,
+    out_dtype=None,
 ) -> jax.Array:
     """`n_nodes` is the matched-filter normalization N (Eq. 8). Callers that
     zero-pad the node dimension pass the TRUE node count here: padded rows
     have zero gain and add nothing to the superposition, so normalizing by
     the true N inside the kernel is exact — no host-side rescaling (which
-    would double-round the noise term through the output dtype)."""
+    would double-round the noise term through the output dtype).
+
+    `out_dtype` (default: grads.dtype) is the emission dtype of the f32
+    VMEM accumulator — the bf16-transmit/f32-accumulate transport path
+    streams bf16 gradient tiles but keeps the received update in f32."""
     n, d = grads.shape
     if n_nodes is None:
         n_nodes = n
+    if out_dtype is None:
+        out_dtype = grads.dtype
     node_blk = min(node_blk, n)
     lane_blk = min(lane_blk, d)
     if n % node_blk or d % lane_blk:
@@ -94,7 +101,7 @@ def ota_edge_aggregate_kernel(
             pl.BlockSpec((1, lane_blk), lambda i, j: (0, i)),  # noise
         ],
         out_specs=pl.BlockSpec((1, lane_blk), lambda i, j: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, d), grads.dtype),
+        out_shape=jax.ShapeDtypeStruct((1, d), out_dtype),
         scratch_shapes=[pltpu.VMEM((1, lane_blk), jnp.float32)],
         interpret=interpret,
     )(grads, gains.reshape(n, 1), noise.reshape(1, d))

@@ -10,10 +10,17 @@ def ota_edge_aggregate_ref(
     gains: jax.Array,  # (N,)
     noise: jax.Array,  # (d,)
     *,
-    noise_scale: float,
+    noise_scale,
+    out_dtype=None,
 ) -> jax.Array:
+    """`noise_scale` may be a python float or a traced f32 scalar; the
+    arithmetic is identical either way. `out_dtype` (default: grads.dtype)
+    selects the emission dtype AFTER the f32 accumulation — the
+    bf16-transmit/f32-accumulate path requests f32 out for bf16 grads."""
+    if out_dtype is None:
+        out_dtype = grads.dtype
     n = grads.shape[0]
     v = jnp.einsum(
         "n,nd->d", gains.astype(jnp.float32), grads.astype(jnp.float32)
     ) / n
-    return (v + noise_scale * noise.astype(jnp.float32)).astype(grads.dtype)
+    return (v + noise_scale * noise.astype(jnp.float32)).astype(out_dtype)

@@ -1,23 +1,35 @@
 """Training launcher: `python -m repro.launch.train --arch repro-100m
 --steps 200 --aggregator gbma`. Runs on the local device(s); the production
 mesh path is exercised by dryrun.py (this container has one real CPU core).
+
+`--aggregator` accepts EVERY algorithm in the MAC registry
+(`mc/slots.ALGO_REGISTRY`): gbma/fdm/centralized run the fused production
+path; blind/blind_ec/momentum/nesterov/power_control route through the
+channel-transport layer (per-node gradients over the simulated MAC — see
+docs/training.md). The blind family needs `--antennas`; `--power-budget`
+bounds blind_ec's per-node slot energy; `--block-d` / `--transmit-dtype`
+expose the transport's tiling and bf16-transmit knobs.
 """
 from __future__ import annotations
 
 import argparse
+import math
 
 import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import ckpt
 from repro.configs.registry import get_config
+from repro.core import transport
 from repro.core.channel import ChannelConfig
 from repro.core.gbma import GBMAConfig
+from repro.core.mc.slots import ALGO_REGISTRY
 from repro.data.synthetic import SyntheticTokens, TokenDatasetConfig
 from repro.models.model import build_model
 from repro.optim.gd import get_optimizer
 from repro.training.loop import run_training
-from repro.training.train_step import TrainConfig, build_train_step
+from repro.training.train_step import (TrainConfig, build_train_step,
+                                       resolve_route)
 
 
 def main() -> None:
@@ -27,7 +39,7 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--aggregator", default="gbma",
-                    choices=("gbma", "fdm", "centralized"))
+                    choices=tuple(ALGO_REGISTRY))
     ap.add_argument("--nodes", type=int, default=8)
     ap.add_argument("--noise-std", type=float, default=0.01)
     ap.add_argument("--energy-eps", type=float, default=None,
@@ -35,6 +47,21 @@ def main() -> None:
     ap.add_argument("--fading", default="rayleigh")
     ap.add_argument("--optimizer", default="momentum")
     ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--antennas", type=int, default=None,
+                    help="edge antenna count M (required for blind/"
+                         "blind_ec; MRC path for precoded aggregators)")
+    ap.add_argument("--power-budget", type=float, default=None,
+                    help="blind_ec per-node per-slot squared-norm budget")
+    ap.add_argument("--gamma", type=float, default=0.9,
+                    help="receiver momentum of momentum/nesterov "
+                         "aggregators")
+    ap.add_argument("--block-d", type=int, default=None,
+                    help="transport column-tile width (default: one block "
+                         "per parameter leaf)")
+    ap.add_argument("--transmit-dtype", default=None,
+                    choices=(None, "bfloat16"),
+                    help="cast transmitted gradient blocks (transport "
+                         "route); accumulation stays f32")
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-test reduced config")
     ap.add_argument("--checkpoint", default=None)
@@ -51,10 +78,19 @@ def main() -> None:
 
     energy = (args.nodes ** (args.energy_eps - 2.0)
               if args.energy_eps is not None else 1.0)
+    channel = ChannelConfig(fading=args.fading, noise_std=args.noise_std,
+                            energy=energy)
+    route = resolve_route(TrainConfig(aggregator=args.aggregator))
     tcfg = TrainConfig(
         aggregator=args.aggregator,
-        gbma=GBMAConfig(n_nodes=args.nodes, channel=ChannelConfig(
-            fading=args.fading, noise_std=args.noise_std, energy=energy)))
+        gbma=GBMAConfig(n_nodes=args.nodes, channel=channel),
+        transport=transport.TransportConfig(
+            n_nodes=args.nodes, channel=channel, n_antennas=args.antennas,
+            power_budget=(args.power_budget if args.power_budget is not None
+                          else math.inf),
+            gamma=args.gamma, stepsize=args.lr, block_d=args.block_d,
+            transmit_dtype=args.transmit_dtype)
+        if route == "transport" else None)
     opt = get_optimizer(args.optimizer, args.lr)
     step = build_train_step(model, tcfg, opt)
 
@@ -75,7 +111,7 @@ def main() -> None:
             yield b
 
     params, opt_state, hist = run_training(
-        step, params, opt.init(params), batches(), args.steps,
+        step, params, step.init_state(params), batches(), args.steps,
         log_every=max(args.steps // 20, 1))
     if args.checkpoint:
         ckpt.save(args.checkpoint, params)

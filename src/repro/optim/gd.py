@@ -81,10 +81,19 @@ def adam(stepsize: float, b1: float = 0.9, b2: float = 0.999,
     return Optimizer(init, update)
 
 
-def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
-    leaves = jax.tree_util.tree_leaves(grads)
-    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                        for g in leaves))
+def global_norm(grads: PyTree) -> jax.Array:
+    """f32 global L2 norm of a gradient tree."""
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree_util.tree_leaves(grads)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float,
+                        norm: Optional[jax.Array] = None) -> PyTree:
+    """Scale `grads` so the global norm is at most `max_norm`. Pass a
+    pre-computed `global_norm(grads)` as `norm` to avoid recomputing the
+    reduction when the caller also reports it as a metric."""
+    if norm is None:
+        norm = global_norm(grads)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
     return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads)
 

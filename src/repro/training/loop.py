@@ -34,9 +34,14 @@ def run_training(
             m["step"] = step
             m["wall_s"] = time.time() - t0
             history.append(m)
+            extras = ""
+            if m.get("clip_frac", 0.0) > 0.0:
+                extras += " clipped"
+            if "tx_energy" in m:
+                extras += f" tx {m['tx_energy']:.3g}"
             print(f"step {step:5d} loss {m['loss']:.4f} "
-                  f"gnorm {m['grad_norm']:.3f} ({m['wall_s']:.1f}s)",
-                  flush=True)
+                  f"gnorm {m['grad_norm']:.3f}{extras} "
+                  f"({m['wall_s']:.1f}s)", flush=True)
         if checkpoint_fn and checkpoint_every and step and \
                 step % checkpoint_every == 0:
             checkpoint_fn(params, opt_state, step)

@@ -1,0 +1,135 @@
+"""Capture golden trajectories of the training + aggregation stack.
+
+Run from the repo root (`PYTHONPATH=src python tests/golden/capture.py`)
+at the commit whose behaviour is the reference. The npz files it writes
+are consumed by `tests/test_transport.py::TestGoldenCompat` to pin the
+gbma/fdm/centralized production training paths and the tier-(i)
+`ota_aggregate` / `GBMASimulator` helpers across refactors: trajectories
+must reproduce bit-for-bit (or at the documented <=1e-6 tolerance where a
+float32-vs-float64 scalar-constant rounding is the named cause).
+
+The captured operating points deliberately exercise the awkward corners:
+a non-zero phase error (the precoded-phase stream), energy != 1 (the
+edge-noise std constant is computed in python float64 and rounds to f32
+differently than a traced-f32 chain), and an active clip_norm.
+"""
+from __future__ import annotations
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+HERE = pathlib.Path(__file__).resolve().parent
+
+
+def _tiny_model():
+    from repro.configs.registry import get_config
+    from repro.models.model import build_model
+
+    cfg = get_config("repro-100m").with_(
+        n_layers=1, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+        d_ff=64, vocab_size=64, logit_chunk=32, attn_block_q=16,
+        attn_block_kv=32)
+    return build_model(cfg)
+
+
+def capture_training() -> dict:
+    from repro.core.channel import ChannelConfig
+    from repro.core.gbma import GBMAConfig
+    from repro.data.synthetic import SyntheticTokens, TokenDatasetConfig
+    from repro.optim.gd import momentum
+    from repro.training.loop import run_training
+    from repro.training.train_step import TrainConfig, build_train_step
+
+    out = {}
+    runs = {
+        "gbma": dict(aggregator="gbma", noise_std=0.05, clip=None),
+        "fdm": dict(aggregator="fdm", noise_std=0.05, clip=None),
+        "centralized": dict(aggregator="centralized", noise_std=0.0,
+                            clip=None),
+        "gbma_clip": dict(aggregator="gbma", noise_std=0.05, clip=0.5),
+    }
+    for name, r in runs.items():
+        m = _tiny_model()
+        params = m.init_params(jax.random.key(0))
+        ds = SyntheticTokens(TokenDatasetConfig(
+            vocab_size=m.cfg.vocab_size, seq_len=16, global_batch=8,
+            seed=3))
+        tcfg = TrainConfig(
+            aggregator=r["aggregator"],
+            gbma=GBMAConfig(n_nodes=4, channel=ChannelConfig(
+                fading="rayleigh", noise_std=r["noise_std"], energy=1.0,
+                phase_error_max=0.3)),
+            clip_norm=r["clip"])
+        opt = momentum(0.05)
+        step = build_train_step(m, tcfg, opt)
+        batches = ({"tokens": t} for t in ds)
+        params, _, hist = run_training(
+            step, params, opt.init(params), batches, 4, log_every=1)
+        leaves = jax.tree_util.tree_leaves(params)
+        out[f"{name}_losses"] = np.asarray(
+            [h["loss"] for h in hist], np.float32)
+        out[f"{name}_params"] = np.concatenate(
+            [np.asarray(x, np.float32).ravel() for x in leaves])
+    return out
+
+
+def capture_tier_i() -> dict:
+    from repro.core.channel import ChannelConfig
+    from repro.core.gbma import GBMASimulator, ota_aggregate
+
+    out = {}
+    grads = jax.random.normal(jax.random.key(7), (8, 33))
+    for tag, cfg in {
+        "rayleigh": ChannelConfig(fading="rayleigh", noise_std=1.0,
+                                  energy=2.0, phase_error_max=0.3),
+        "equal": ChannelConfig(fading="equal", noise_std=0.5, energy=1.0),
+    }.items():
+        v = ota_aggregate(grads, jax.random.key(11), cfg)
+        out[f"ota_{tag}"] = np.asarray(v, np.float32)
+
+    cfg = ChannelConfig(fading="rayleigh", noise_std=1.0, energy=1.0)
+    target = jnp.linspace(-1.0, 1.0, 12)
+    wts = jnp.linspace(0.5, 1.5, 6)
+    sim = GBMASimulator(
+        grad_fn=lambda th: wts[:, None] * (th - target)[None, :],
+        channel=cfg, stepsize=0.2)
+    traj = sim.run(jnp.zeros(12), steps=20, key=jax.random.key(5))
+    out["sim_traj"] = np.asarray(traj, np.float32)
+    return out
+
+
+def capture_tree_noise() -> dict:
+    from repro.core.channel import ChannelConfig
+    from repro.core.gbma import GBMAConfig, perturb_gradients
+    from repro.training.train_step import _fdm_noise
+
+    gcfg = GBMAConfig(n_nodes=4, channel=ChannelConfig(
+        fading="rayleigh", noise_std=0.7, energy=2.0))
+    tree = {
+        "a": jnp.ones((5, 3), jnp.float32),
+        "b": {"c": jnp.full((4,), 2.0, jnp.bfloat16)},
+    }
+    pg = perturb_gradients(tree, jax.random.key(21), gcfg)
+    fd = _fdm_noise(tree, jax.random.key(22), gcfg)
+    return {
+        "perturb_a": np.asarray(pg["a"], np.float32),
+        "perturb_b": np.asarray(pg["b"]["c"].astype(jnp.float32)),
+        "fdm_a": np.asarray(fd["a"], np.float32),
+        "fdm_b": np.asarray(fd["b"]["c"].astype(jnp.float32)),
+    }
+
+
+def main() -> None:
+    np.savez_compressed(HERE / "train_head.npz", **capture_training())
+    np.savez_compressed(HERE / "tier_i_head.npz",
+                        **capture_tier_i(), **capture_tree_noise())
+    for f in ("train_head.npz", "tier_i_head.npz"):
+        with np.load(HERE / f) as z:
+            print(f, {k: z[k].shape for k in z.files})
+
+
+if __name__ == "__main__":
+    main()

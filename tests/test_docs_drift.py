@@ -101,3 +101,32 @@ def test_performance_md_documents_the_exec_knobs():
     for linker in ("README.md", "docs/montecarlo.md"):
         assert "performance.md" in (ROOT / linker).read_text(), (
             f"{linker} must cross-link docs/performance.md")
+
+
+def test_training_md_pins_the_transport_surface():
+    """docs/training.md is the training-route contract: every registry
+    aggregator must appear in its routing table, the transport knobs it
+    documents must exist on TransportConfig, and both the README and
+    docs/algorithms.md must link it."""
+    import dataclasses
+
+    from repro.core.transport import TransportConfig
+
+    text = (ROOT / "docs" / "training.md").read_text()
+    for algo in ALGOS:
+        assert f"`{algo}`" in text, (
+            f"aggregator {algo!r} is in the MAC registry but missing from "
+            "docs/training.md's routing table — say which route it takes")
+    fields = {f.name for f in dataclasses.fields(TransportConfig)}
+    for knob in ("block_d", "transmit_dtype", "ota_impl", "mc_steps",
+                 "power_budget"):
+        assert knob in fields, f"TransportConfig lost documented knob {knob}"
+        assert knob in text, (
+            f"TransportConfig.{knob} is undocumented in docs/training.md")
+    for phrase in ("FULL_CONCAT", "init_state", "tx_energy", "grad_norm",
+                   "clip_frac", "hoist_draws"):
+        assert phrase in text, (
+            f"docs/training.md must document {phrase!r}")
+    for linker in ("README.md", "docs/algorithms.md"):
+        assert "training.md" in (ROOT / linker).read_text(), (
+            f"{linker} must cross-link docs/training.md")

@@ -54,6 +54,37 @@ def test_ota_kernel_padding_path_odd_shapes(n, d):
                                atol=1e-7)
 
 
+def test_ota_noise_scale_is_traced_one_compile():
+    """Regression: `noise_scale` is a traced operand, so sweeping noise
+    levels (or N, whose edge-noise std depends on it) at fixed shapes must
+    compile the wrapper exactly once per (shape, impl) — not once per
+    float value. Values must still track the operand exactly."""
+    from repro.kernels.ota import ops as ota_ops
+
+    if not ota_ops.clear_cache():
+        pytest.skip("jit cache clearing unsupported on this JAX")
+    k = jax.random.key(3)
+    g = jax.random.normal(k, (8, 64))
+    h = jnp.abs(jax.random.normal(jax.random.fold_in(k, 1), (8,)))
+    w = jax.random.normal(jax.random.fold_in(k, 2), (64,))
+    outs = [np.array(ota_edge_aggregate(g, h, w, noise_scale=s,
+                                        impl="pallas", interpret=True))
+            for s in (0.0, 0.1, 0.37, 2.5)]
+    assert ota_ops.trace_count() == 1, "noise_scale retriggered compilation"
+    base = outs[0]
+    for s, out in zip((0.1, 0.37, 2.5), outs[1:]):
+        np.testing.assert_allclose(out - base, s * np.array(w), atol=1e-6)
+    # a python float and a traced scalar hit the same compiled program
+    ota_edge_aggregate(g, h, w, noise_scale=jnp.float32(1.3), impl="pallas",
+                       interpret=True)
+    assert ota_ops.trace_count() == 1
+    # ref impl is its own (impl,) cache entry, also traced-once
+    ota_ops.clear_cache()
+    for s in (0.2, 0.9):
+        ota_edge_aggregate(g, h, w, noise_scale=s, impl="ref")
+    assert ota_ops.trace_count() == 1
+
+
 # ---------------------------------------------------------- attention kernel
 @pytest.mark.parametrize("b,hq,hkv,s,d,kw", [
     (2, 4, 4, 256, 64, {}),
