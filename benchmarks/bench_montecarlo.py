@@ -40,7 +40,15 @@ Workloads:
    curves) warm-for-warm on the same workload, plus the plan-only chunked
    A/B.
 
-6. **train_100m_ota**: the channel-transport layer's exactness-vs-speed
+6. **large_chunked_placed**: the same LARGE workload under `auto_plan` —
+   placement ON (every visible device on the ("rows", "mc") mesh) vs
+   forced OFF on the same plan, warm-for-warm, plus the auto plan's mean
+   curve against the hand-tuned legacy-kwargs chunked path. Each entry
+   records the device topology and resolved `ExecPlan`, so records from
+   the 1-device bench run and the 4-forced-host-device CI job are
+   directly comparable.
+
+7. **train_100m_ota**: the channel-transport layer's exactness-vs-speed
    tradeoff on a training-shaped gradient pytree (a transformer-like leaf
    mix, multi-million-D at full scale). One `transport.aggregate('gbma')`
    slot per configuration: untiled (`FULL_CONCAT`, one (N, D) slot call —
@@ -71,6 +79,7 @@ from benchmarks.common import MSDProblem, average_runs
 from repro.core.channel import ChannelConfig
 from repro.core.gbma import GBMASimulator
 from repro.core.mc.exec import estimate_peak_bytes
+from repro.core.mc.plan import ExecPlan, auto_plan, resolve_seed_shards
 from repro.core.montecarlo import clear_cache, run_mc, trace_count
 from repro.core.theory import stepsize_theorem1
 
@@ -90,6 +99,11 @@ LARGE = {"n": 4096, "dim": 24, "steps": 150, "seeds": 1024, "chunk": 32}
 # the transport workload: N nodes x D total parameters, tiled at block_d
 TRAIN_OTA = {"n": 8, "d": 2 * 1024 * 1024, "block_d": 256 * 1024}
 MEM_BUDGET_GIB = 2.0
+# auto_plan's per-device chunk-sizing target for the placed entry: None =
+# the planner's 128 MiB default (reproduces LARGE's hand-tuned chunk=32
+# at full scale); --smoke shrinks it so chunking is still exercised at
+# CI-size seed counts
+AUTO_TARGET_CHUNK_BYTES = None
 WARM_REPS = 3
 OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_montecarlo.json")
 # --smoke writes here instead: CI-size numbers must never clobber the
@@ -128,6 +142,19 @@ def _rel(a, b) -> float:
 def _warm_step_us(warm_s: float, rows: int, steps: int, seeds: int) -> float:
     """Warm time per (row, seed, step) trajectory step, in microseconds."""
     return warm_s / (rows * steps * seeds) * 1e6
+
+
+def _topology(plan: ExecPlan = None, seeds: int = None) -> dict:
+    """Device-topology stamp for a BENCH entry: records are compared
+    across machines and placements, so each entry carries the device
+    count and platform it ran on — plus, for engine entries, the
+    resolved ExecPlan and its concrete 'mc' mesh size."""
+    t = {"device_count": jax.device_count(),
+         "platform": jax.default_backend()}
+    if plan is not None:
+        t["n_shards"] = resolve_seed_shards(plan, seeds)
+        t["plan"] = plan.asdict()
+    return t
 
 
 def bench_single_config() -> dict:
@@ -360,6 +387,78 @@ def bench_large_chunked(warm_reps: int = 2) -> dict:
     }
 
 
+def bench_large_chunked_placed(warm_reps: int = 2) -> dict:
+    """The placed execution-plan entry: the LARGE workload under
+    `auto_plan` with placement ON (every visible device) vs forced OFF
+    (`n_shards=0, row_shards=1` on the same plan), interleaved
+    warm-for-warm, plus the auto plan's mean curve against the
+    hand-tuned legacy-kwargs path (`seed_chunk=LARGE['chunk']`,
+    `keep_seed_curves=False`).
+
+    One process sees one device topology (XLA fixes it at startup), so
+    the 1-device column comes from the default bench run and the
+    4-device column from the CI multi-device smoke job
+    (`XLA_FLAGS=--xla_force_host_platform_device_count=4`) — the
+    `topology` field is what makes the two JSON artifacts comparable.
+    On a single device the placed and unplaced plans coincide and their
+    diff column is exactly 0.
+    """
+    n, dim = LARGE["n"], LARGE["dim"]
+    steps, seeds = LARGE["steps"], LARGE["seeds"]
+    prob = MSDProblem.make(n, dim=dim)
+    mc = prob.to_mc()
+    ch = ChannelConfig(fading="rayleigh", scale=1.0, noise_std=1.0,
+                       energy=1.0 / n)
+    beta = 0.01
+    plan = auto_plan(
+        n_rows=1, seeds=seeds, steps=steps, n_max=n, dim=dim,
+        keep_seed_curves=False,
+        memory_budget_bytes=int(MEM_BUDGET_GIB * 2**30),
+        target_chunk_bytes=AUTO_TARGET_CHUNK_BYTES)
+    unplaced = plan.replace(n_shards=0, row_shards=1)
+
+    def run_placed():
+        return run_mc(mc, [ch], "gbma", [beta], steps, seeds,
+                      plan=plan).mean
+
+    def run_unplaced():
+        return run_mc(mc, [ch], "gbma", [beta], steps, seeds,
+                      plan=unplaced).mean
+
+    def default_kwargs():
+        # the behavior-pinned legacy path on the same workload (the
+        # hand-tuned chunk from the large_chunked entry)
+        return run_mc(mc, [ch], "gbma", [beta], steps, seeds,
+                      seed_chunk=LARGE["chunk"],
+                      keep_seed_curves=False, shard_seeds=False).mean
+
+    # interleaved reps, same rationale as bench_large_chunked
+    mean_placed = run_placed()
+    mean_unplaced = run_unplaced()
+    t_placed = t_unplaced = float("inf")
+    for _ in range(warm_reps):
+        t0 = time.perf_counter()
+        run_unplaced()
+        t_unplaced = min(t_unplaced, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_placed()
+        t_placed = min(t_placed, time.perf_counter() - t0)
+    mean_default = default_kwargs()
+    return {
+        "workload": {"problem": "msd_regression", "n_nodes": n, "dim": dim,
+                     "steps": steps, "seeds": seeds, "fading": "rayleigh",
+                     "timing": "warm steady-state, best-of reps, "
+                               "interleaved placed/unplaced"},
+        "topology": _topology(plan, seeds),
+        "placed_warm_s": round(t_placed, 3),
+        "unplaced_warm_s": round(t_unplaced, 3),
+        "placed_warm_step_us": round(
+            _warm_step_us(t_placed, 1, steps, seeds), 3),
+        "placed_vs_unplaced_max_rel_diff": _rel(mean_placed, mean_unplaced),
+        "auto_vs_default_max_rel_diff": _rel(mean_placed, mean_default),
+    }
+
+
 def bench_train_100m_ota() -> dict:
     """Transport-layer exactness-vs-speed: one gbma slot on a
     training-shaped gradient pytree, untiled vs block-tiled vs
@@ -418,13 +517,16 @@ def bench_train_100m_ota() -> dict:
 def _smoke_shrink():
     """CI-size constants: every path exercised, nothing slow."""
     global N, STEPS, SEEDS, SWEEP_N_GRID, SWEEP_M_GRID, LARGE, WARM_REPS, \
-        TRAIN_OTA
+        TRAIN_OTA, AUTO_TARGET_CHUNK_BYTES
     N, STEPS, SEEDS = 48, 40, 2
     SWEEP_N_GRID = (16, 25)
     SWEEP_M_GRID = (1, 3)
     LARGE = {"n": 256, "dim": 16, "steps": 30, "seeds": 16, "chunk": 4}
     TRAIN_OTA = {"n": 4, "d": 8192, "block_d": 2048}
     WARM_REPS = 2
+    # CI-size seed counts fit the planner's 128 MiB default all-live;
+    # shrink the target so the placed entry still exercises chunking
+    AUTO_TARGET_CHUNK_BYTES = 256 * 1024
 
 
 def run(verbose: bool = True, smoke: bool = False) -> list[str]:
@@ -435,13 +537,25 @@ def run(verbose: bool = True, smoke: bool = False) -> list[str]:
     m_sweep = bench_m_sweep()
     frac_sweep = bench_frac_sweep()
     large = bench_large_chunked(warm_reps=1 if smoke else 3)
+    placed = bench_large_chunked_placed(warm_reps=1 if smoke else 3)
     train_ota = bench_train_100m_ota()
+    # every entry carries the topology it ran on; engine entries also
+    # record the ExecPlan they resolved to (the kwargs entries ran under
+    # the shim's behavior-pinned plans)
+    single["topology"] = _topology(ExecPlan(), SEEDS)
+    for entry in (sweep, m_sweep, frac_sweep):
+        entry["topology"] = _topology(ExecPlan(), SEEDS)
+    large["topology"] = _topology(
+        ExecPlan(seed_chunk=LARGE["chunk"], keep_seed_curves=False),
+        LARGE["seeds"])
+    train_ota["topology"] = _topology()
     record = {
         **single,
         "n_sweep": sweep,
         "fig7_m_sweep": m_sweep,
         "fig8_frac_sweep": frac_sweep,
         "large_chunked": large,
+        "large_chunked_placed": placed,
         "train_100m_ota": train_ota,
         "timing_methodology": {
             "cold": "jit cache cleared, one call, compiles included",
@@ -484,6 +598,16 @@ def run(verbose: bool = True, smoke: bool = False) -> list[str]:
         f"{large['max_rel_curve_diff']:.2e}",
         f"bench_montecarlo,large_runs_only_under_seed_chunk,"
         f"{int(large['runs_only_under_seed_chunk'])}",
+        f"bench_montecarlo,large_placed_warm_s,"
+        f"{placed['placed_warm_s']:.3f}",
+        f"bench_montecarlo,large_unplaced_warm_s,"
+        f"{placed['unplaced_warm_s']:.3f}",
+        f"bench_montecarlo,large_placed_n_shards,"
+        f"{placed['topology']['n_shards']}",
+        f"bench_montecarlo,large_placed_vs_unplaced_max_rel_diff,"
+        f"{placed['placed_vs_unplaced_max_rel_diff']:.2e}",
+        f"bench_montecarlo,large_auto_vs_default_max_rel_diff,"
+        f"{placed['auto_vs_default_max_rel_diff']:.2e}",
         f"bench_montecarlo,train_ota_untiled_warm_s,"
         f"{train_ota['untiled_warm_s']:.4f}",
         f"bench_montecarlo,train_ota_tiled_warm_s,"
@@ -513,6 +637,10 @@ def _smoke_assert(record: dict) -> None:
         ("fig7_m_sweep", record["fig7_m_sweep"]["one_compile_warm_s"]),
         ("fig8_frac_sweep", record["fig8_frac_sweep"]["one_compile_warm_s"]),
         ("large_chunked", record["large_chunked"]["new_path_warm_s"]),
+        ("large_chunked_placed",
+         record["large_chunked_placed"]["placed_warm_s"]),
+        ("large_chunked_placed_unplaced",
+         record["large_chunked_placed"]["unplaced_warm_s"]),
         ("train_100m_ota", record["train_100m_ota"]["tiled_warm_s"]),
         ("train_100m_ota_bf16",
          record["train_100m_ota"]["bf16_tiled_warm_s"]),
@@ -537,6 +665,12 @@ def _smoke_assert(record: dict) -> None:
          record["fig8_frac_sweep"]["max_rel_curve_diff"], 1e-4),
         ("large_chunked",
          record["large_chunked"]["max_rel_curve_diff"], 1e-5),
+        ("large_chunked_placed (placement invariance)",
+         record["large_chunked_placed"]["placed_vs_unplaced_max_rel_diff"],
+         1e-6),
+        ("large_chunked_placed (auto vs default kwargs)",
+         record["large_chunked_placed"]["auto_vs_default_max_rel_diff"],
+         1e-6),
     ):
         if not rel <= tol:
             problems.append(f"{key}: max_rel_curve_diff {rel:.2e} > {tol}")

@@ -84,12 +84,14 @@ def timed(fn, *args, reps: int = 3):
 
 
 def run_msd_figure(fading: str, prefix: str, n_grid, eps_grid,
-                   steps: int, seeds: int) -> list[str]:
+                   steps: int, seeds: int, plan=None) -> list[str]:
     """Shared body of paper Figs. 2 (equal gains) and 3 (Rayleigh):
     (a) a node-count sweep at E_N = 1 — ONE padded/masked engine compile,
     one (problem, channel, stepsize) row per N — and (b) an energy sweep
     E_N = N^{eps-2} at the largest N, one vmapped call over energies.
-    Both overlay the Theorem-1 bound and emit mean ± ci95 curve rows."""
+    Both overlay the Theorem-1 bound and emit mean ± ci95 curve rows.
+    `plan` passes through to `run_mc(plan=...)` (an ExecPlan or "auto");
+    None keeps the figure-scale defaults."""
     from repro.core.channel import ChannelConfig
     from repro.core.montecarlo import run_mc
     from repro.core.theory import stepsize_theorem1
@@ -101,7 +103,7 @@ def run_msd_figure(fading: str, prefix: str, n_grid, eps_grid,
     betas = [stepsize_theorem1(p.pc, ch, n, safety=0.9)
              for p, ch, n in zip(probs, chs, n_grid)]
     res = run_mc([p.to_mc() for p in probs], chs, "gbma", betas, steps,
-                 seeds, pc=[p.pc for p in probs])
+                 seeds, pc=[p.pc for p in probs], plan=plan)
     ks = np.arange(steps + 1)
     for i, n in enumerate(n_grid):
         emp, bound = res.mean[i], res.bounds[i]
@@ -118,7 +120,7 @@ def run_msd_figure(fading: str, prefix: str, n_grid, eps_grid,
            for eps in eps_grid]
     betas = [stepsize_theorem1(prob.pc, ch, n, safety=0.9) for ch in chs]
     res = run_mc(prob.to_mc(), chs, "gbma", betas, steps, seeds,
-                 pc=prob.pc)
+                 pc=prob.pc, plan=plan)
     for i, eps in enumerate(eps_grid):
         rows.append(f"{prefix}b,eps={eps},final_emp,{res.mean[i][-1]:.6e}")
         rows.append(f"{prefix}b,eps={eps},final_bound,"

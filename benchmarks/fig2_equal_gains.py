@@ -14,8 +14,9 @@ SEEDS = 4
 SMOKE_COMPILES = 2  # engine compiles per run(), asserted by the smoke test
 
 
-def run(verbose: bool = True) -> list[str]:
-    rows = run_msd_figure("equal", "fig2", N_GRID, EPS_GRID, STEPS, SEEDS)
+def run(verbose: bool = True, plan=None) -> list[str]:
+    rows = run_msd_figure("equal", "fig2", N_GRID, EPS_GRID, STEPS, SEEDS,
+                          plan=plan)
     if verbose:
         print("\n".join(rows))
     return rows

@@ -13,9 +13,9 @@ SEEDS = 4
 SMOKE_COMPILES = 2  # engine compiles per run(), asserted by the smoke test
 
 
-def run(verbose: bool = True) -> list[str]:
+def run(verbose: bool = True, plan=None) -> list[str]:
     rows = run_msd_figure("rayleigh", "fig3", N_GRID, EPS_GRID, STEPS,
-                          SEEDS)
+                          SEEDS, plan=plan)
     if verbose:
         print("\n".join(rows))
     return rows

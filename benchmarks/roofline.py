@@ -170,6 +170,19 @@ def mc_run(verbose: bool = True) -> list[str]:
         rows += _mc_entry_rows(
             "large_chunked", "gbma", lwl["n_nodes"], lwl["dim"], 1,
             large["new_path_warm_step_us"], peaks)
+    placed = rec.get("large_chunked_placed")
+    if placed and "placed_warm_step_us" in placed:
+        pwl = placed["workload"]
+        rows += _mc_entry_rows(
+            "large_chunked_placed", "gbma", pwl["n_nodes"], pwl["dim"], 1,
+            placed["placed_warm_step_us"], peaks)
+        topo = placed.get("topology", {})
+        rows.append(
+            f"roofline_mc,large_chunked_placed,"
+            f"devices={topo.get('device_count', 1)},"
+            f"n_shards={topo.get('n_shards', 0)},"
+            f"placed_warm_s={placed.get('placed_warm_s')},"
+            f"unplaced_warm_s={placed.get('unplaced_warm_s')}")
     m_sweep = rec.get("fig7_m_sweep")
     if m_sweep and "one_compile_warm_step_us" in m_sweep \
             and "dim" in m_sweep["workload"]:

@@ -1,7 +1,13 @@
 """Benchmark runner — one module per paper table/figure plus the roofline
-table. Prints `name,label,value` CSV rows; `python -m benchmarks.run`."""
+table. Prints `name,label,value` CSV rows; `python -m benchmarks.run`.
+
+`--plan-auto` routes figure scripts whose `run()` takes a `plan` kwarg
+through `run_mc(plan="auto")` — the self-planned execution strategy
+(chunking/placement derived from the memory model and device topology,
+docs/performance.md) instead of the figure-scale defaults."""
 from __future__ import annotations
 
+import inspect
 import sys
 import time
 
@@ -28,13 +34,18 @@ def main() -> None:
         ("bench_montecarlo (engine vs seed per-seed loop)", bench_montecarlo),
         ("roofline (EXPERIMENTS §Roofline)", roofline),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    argv = [a for a in sys.argv[1:] if a != "--plan-auto"]
+    plan_auto = len(argv) != len(sys.argv) - 1
+    only = argv[0] if argv else None
     for name, mod in modules:
         if only and only not in name:
             continue
         print(f"==== {name} ====", flush=True)
         t0 = time.time()
-        mod.run(verbose=True)
+        kw = {}
+        if plan_auto and "plan" in inspect.signature(mod.run).parameters:
+            kw["plan"] = "auto"
+        mod.run(verbose=True, **kw)
         print(f"---- {name}: {time.time() - t0:.1f}s ----", flush=True)
 
 

@@ -33,6 +33,16 @@ def save(path: str, tree: PyTree) -> None:
     os.replace(tmp, path)
 
 
+def peek(path: str) -> dict:
+    """Raw {flat_key: array} view of a checkpoint, no template needed.
+
+    For callers that must inspect identity/cursor leaves (e.g. a workload
+    fingerprint) before they can know what shapes to validate against —
+    the resume path of `repro.core.mc.exec.run_chunked`."""
+    with np.load(path, allow_pickle=False) as data:
+        return dict(data.items())
+
+
 def restore(path: str, template: PyTree) -> PyTree:
     with np.load(path, allow_pickle=False) as data:
         flat = dict(data.items())

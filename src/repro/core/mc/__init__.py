@@ -10,9 +10,13 @@ Layers (see each module's docstring):
   * `slots`    — per-slot algorithm updates behind `register_algo`
     (`ALGOS` derives from the registry) + each algorithm's `hoist_draws`
     RNG-plan twin.
-  * `exec`     — the execution layer: the compiled `_mc_core`, the
-    hoisted counter-based RNG plan, the seed-chunked scheduler with
-    donated stat carries, the on-device seed reduction, and the analytic
+  * `plan`     — `ExecPlan` (one sweep's execution strategy) +
+    `auto_plan` deriving it from the analytic memory model, a memory
+    budget and the device topology.
+  * `exec`     — the execution layer: the compiled `_mc_core` placed on
+    a ("rows", "mc") device mesh, the hoisted counter-based RNG plan,
+    the seed-chunked resumable scheduler with donated Chan-merged
+    moment carries, the on-device seed reduction, and the analytic
     memory model (`estimate_peak_bytes`) — see docs/performance.md.
   * `engine`   — row assembly + the public `run_mc`, `MCResult`,
     `ChannelBatch`, `energy_to_target`.
@@ -28,6 +32,7 @@ from repro.core.mc.engine import (
     trace_count,
 )
 from repro.core.mc.exec import estimate_peak_bytes
+from repro.core.mc.plan import ExecPlan, auto_plan, validate_plan
 from repro.core.mc.problems import (
     MCProblem,
     MCProblemBatch,
@@ -59,12 +64,14 @@ __all__ = [
     "ALGOS",
     "AlgoSpec",
     "ChannelBatch",
+    "ExecPlan",
     "MCProblem",
     "MCProblemBatch",
     "MCResult",
     "PROBLEMS",
     "ProblemSpec",
     "SlotCtx",
+    "auto_plan",
     "clear_cache",
     "energy_to_target",
     "estimate_peak_bytes",
@@ -75,4 +82,5 @@ __all__ = [
     "register_problem",
     "run_mc",
     "trace_count",
+    "validate_plan",
 ]

@@ -48,6 +48,12 @@ from repro.core.mc.exec import (  # noqa: F401  (re-exported surface)
     clear_cache,
     trace_count,
 )
+from repro.core.mc.plan import (
+    ExecPlan,
+    auto_plan,
+    resolve_seed_shards,
+    validate_plan,
+)
 from repro.core.mc.problems import MCProblem, MCProblemBatch, PROBLEMS
 from repro.core.mc.slots import ALGO_REGISTRY
 from repro.core.theory import ProblemConstants, theorem1_bound
@@ -121,6 +127,7 @@ class MCResult:
     ci95: np.ndarray
     cum_energy: Optional[np.ndarray]
     bounds: Optional[np.ndarray]
+    plan: Optional[ExecPlan] = None  # the resolved ExecPlan this ran under
 
 
 def _resolve_n_shards(n_seeds: int, shard_seeds: Optional[bool]) -> int:
@@ -212,10 +219,13 @@ def run_mc(
     power_budget: Optional[Union[float, Sequence[float]]] = None,
     shard_seeds: Optional[bool] = None,
     batch_frac: Union[float, Sequence[float]] = 1.0,
-    ota_impl: str = "auto",
-    rng_plan: str = "hoisted",
+    ota_impl: Optional[str] = None,
+    rng_plan: Optional[str] = None,
     seed_chunk: Optional[int] = None,
-    keep_seed_curves: bool = True,
+    keep_seed_curves: Optional[bool] = None,
+    plan: Union[ExecPlan, str, None] = None,
+    resume_dir: Optional[str] = None,
+    memory_budget_bytes: Optional[int] = None,
 ) -> MCResult:
     """Run `seeds` Monte Carlo trajectories for each batch row.
 
@@ -257,7 +267,17 @@ def run_mc(
     `repro.kernels.ota.ota_edge_aggregate` path for the single-antenna OTA
     superposition.
 
-    Execution-layer knobs (docs/performance.md):
+    Execution strategy (docs/performance.md): HOW the sweep executes is
+    one `repro.core.mc.plan.ExecPlan`. Three ways to choose it:
+
+    `plan=` an `ExecPlan` pins every field (rng_plan, seed_chunk,
+    n_shards, row_shards, keep_seed_curves, ota_impl); `plan="auto"`
+    derives one from the analytic memory model, the per-device memory
+    budget (`memory_budget_bytes=`, default: backend-reported limit or
+    2 GiB) and the visible device topology via `auto_plan`; or leave
+    `plan=None` and set the legacy knobs below — they build the
+    equivalent plan (behavior-pinned), and mixing them with `plan=` is
+    an error. The resolved plan is recorded on `MCResult.plan`.
 
     `rng_plan`: 'hoisted' (default) materializes every randomness stream
     in one batched counter-based draw per stream outside the scan —
@@ -274,6 +294,13 @@ def run_mc(
     on device — only (C, steps+1) statistics transfer to host, and
     `MCResult.risks`/`cum_energy` are None (so `energy_to_target`, which
     needs per-seed curves, requires the default True).
+
+    `resume_dir`: chunked reduced sweeps (`seed_chunk` set,
+    `keep_seed_curves=False`) checkpoint their (chunk cursor, Chan
+    moments) to this directory after every chunk and restore from it on
+    the next call — an interrupted-then-resumed sweep is bit-identical
+    to an uninterrupted one (counter-based RNG; see
+    `exec.run_chunked`).
     """
     ch_batch = channels if isinstance(channels, ChannelBatch) \
         else ChannelBatch.stack(list(channels))
@@ -290,9 +317,29 @@ def run_mc(
             raise ValueError(f"unknown algo {a!r}; expected one of "
                              f"{tuple(ALGO_REGISTRY)}")
     specs = [ALGO_REGISTRY[a] for a in algos]
-    if rng_plan not in ("hoisted", "inscan"):
+    if rng_plan is not None and rng_plan not in ("hoisted", "inscan"):
         raise ValueError(
             f"rng_plan must be 'hoisted' or 'inscan', got {rng_plan!r}")
+    if plan is not None:
+        clash = [name for name, v in (
+            ("rng_plan", rng_plan), ("seed_chunk", seed_chunk),
+            ("keep_seed_curves", keep_seed_curves),
+            ("ota_impl", ota_impl), ("shard_seeds", shard_seeds))
+            if v is not None]
+        if clash:
+            raise ValueError(
+                f"plan= already pins the execution strategy; drop the "
+                f"conflicting legacy knob(s) {clash} or encode them in "
+                "the ExecPlan")
+        if isinstance(plan, str) and plan != "auto":
+            raise ValueError(
+                f"plan must be an ExecPlan or the string 'auto', "
+                f"got {plan!r}")
+    if memory_budget_bytes is not None and plan != "auto":
+        raise ValueError(
+            "memory_budget_bytes only parameterizes plan='auto' — an "
+            "explicit ExecPlan or the legacy knobs already fix the chunk "
+            "size")
 
     # ---- normalize the antenna axis ------------------------------------
     if n_antennas is None or isinstance(n_antennas, (int, np.integer)):
@@ -351,7 +398,47 @@ def run_mc(
 
     n_sizes = tuple(sorted(set(n_nodes)))
     algo_set = tuple(dict.fromkeys(algos))
-    ota_resolved = _resolve_ota_impl(ota_impl, n_sizes)
+
+    # ---- resolve the execution plan ------------------------------------
+    # Three sources, one record: an explicit ExecPlan, "auto" (derived
+    # from the memory model + topology), or the legacy kwargs building
+    # the equivalent plan. The legacy shim is behavior-pinned: every
+    # sentinel (None) maps to the exact pre-plan default, and
+    # shard_seeds=True resolves through the legacy rule (including its
+    # divisibility error) before the plan is built.
+    if isinstance(plan, ExecPlan):
+        eff_plan = plan
+    elif plan == "auto":
+        eff_plan = auto_plan(
+            n_rows=n_rows, seeds=seeds, steps=steps, n_max=n_max, dim=dim,
+            algo_set=algo_set, n_antennas=n_antennas, m_sizes=m_sizes,
+            b_max=b_max, invert_channel=invert_channel,
+            memory_budget_bytes=memory_budget_bytes)
+    else:
+        shim_shards: Optional[int] = None
+        if shard_seeds is False:
+            shim_shards = 0
+        elif shard_seeds is True:
+            shim_shards = _resolve_n_shards(
+                seed_chunk if seed_chunk is not None else seeds, True)
+        eff_plan = ExecPlan(
+            rng_plan="hoisted" if rng_plan is None else rng_plan,
+            seed_chunk=seed_chunk,
+            n_shards=shim_shards,
+            row_shards=1,
+            keep_seed_curves=(True if keep_seed_curves is None
+                              else keep_seed_curves),
+            ota_impl="auto" if ota_impl is None else ota_impl)
+    validate_plan(eff_plan, seeds=seeds, n_rows=n_rows)
+    n_shards = resolve_seed_shards(eff_plan, seeds)
+    if resume_dir is not None and (eff_plan.seed_chunk is None
+                                   or eff_plan.keep_seed_curves):
+        raise ValueError(
+            "resume_dir requires a chunked reduced sweep — a plan with "
+            "seed_chunk set and keep_seed_curves=False (only the chunk "
+            "cursor and moment accumulators are checkpointed)")
+
+    ota_resolved = _resolve_ota_impl(eff_plan.ota_impl, n_sizes)
     # static promise for the hoisted plan's phase-stream shortcut: every
     # row's phase draw is over [-0, 0] (cos(0)=1, value-identical to
     # skip). Only hoist-eligible calls (hoisted plan, one algorithm WITH
@@ -359,7 +446,7 @@ def run_mc(
     # True/False split would needlessly fragment the jit cache across
     # phase settings that the legacy body treats as pure data.
     phase_zero = (
-        rng_plan == "hoisted" and len(algo_set) == 1
+        eff_plan.rng_plan == "hoisted" and len(algo_set) == 1
         and ALGO_REGISTRY[algo_set[0]].hoist_draws is not None
         and all(float(c.phase_error_max) == 0.0
                 for c in ch_batch.configs))
@@ -404,29 +491,31 @@ def run_mc(
         n_sizes=n_sizes, n_antennas=n_antennas, m_sizes=m_sizes,
         invert_channel=invert_channel, h_min=h_min,
         sgrad_fn=sgrad_fn, b_max=b_max, ota_impl=ota_resolved,
-        rng_plan=rng_plan, phase_zero=phase_zero,
+        rng_plan=eff_plan.rng_plan, phase_zero=phase_zero,
         sample_idx_fn=(sto_spec.sample_indices_row
                        if sto_spec is not None else None),
         sgrad_idx_fn=(sto_spec.stochastic_grad_from_idx
                       if sto_spec is not None else None))
-    if seed_chunk is not None:
+    if eff_plan.seed_chunk is not None:
         risks, cum_e, mean, ci95 = exec_mod.run_chunked(
-            params, betas, t0, seed_ints, data, seed_chunk=seed_chunk,
-            keep_seed_curves=keep_seed_curves,
-            resolve_shards=lambda s: _resolve_n_shards(s, shard_seeds),
-            core_kwargs=core_kwargs)
+            params, betas, t0, seed_ints, data,
+            seed_chunk=eff_plan.seed_chunk,
+            keep_seed_curves=eff_plan.keep_seed_curves,
+            n_shards=n_shards, row_shards=eff_plan.row_shards,
+            core_kwargs=core_kwargs, resume_dir=resume_dir)
     else:
-        n_shards = _resolve_n_shards(seeds, shard_seeds)
         seed_arr = jnp.asarray(seed_ints)
-        if keep_seed_curves:
+        if eff_plan.keep_seed_curves:
             risks, cum_e = _mc_core(params, betas, t0, seed_arr, data,
-                                    n_shards=n_shards, **core_kwargs)
+                                    n_shards=n_shards,
+                                    row_shards=eff_plan.row_shards,
+                                    **core_kwargs)
             risks, cum_e = np.asarray(risks), np.asarray(cum_e)
             mean, ci95 = exec_mod.host_seed_stats(risks)
         else:
             mean, ci95 = exec_mod._mc_stats(
                 params, betas, t0, seed_arr, data, n_shards=n_shards,
-                **core_kwargs)
+                row_shards=eff_plan.row_shards, **core_kwargs)
             mean, ci95 = np.asarray(mean), np.asarray(ci95)
             risks = cum_e = None
     bounds = None
@@ -445,7 +534,7 @@ def run_mc(
     return MCResult(
         risks=risks, mean=mean.astype(np.float32),
         ci95=ci95.astype(np.float32), cum_energy=cum_e,
-        bounds=bounds)
+        bounds=bounds, plan=eff_plan)
 
 
 def energy_to_target(res: MCResult, target: float) -> np.ndarray:

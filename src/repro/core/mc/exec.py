@@ -32,16 +32,37 @@ through `run_mc`:
 * **On-device reduction** (`keep_seed_curves=False`): when the caller
   only needs the seed-mean and ci95 (most figures), the (C, S, steps+1)
   per-seed curves never leave the device — only (C, steps+1) statistics
-  transfer to host. `energy_to_target` needs per-seed curves and raises
-  if they were reduced away.
+  transfer to host. Chunked sweeps carry exact per-chunk two-pass moments
+  and merge them with Chan's parallel algorithm (`chan_merge`) in donated
+  device buffers; under placement the per-shard moments tree-reduce
+  across the 'mc' mesh axis (`lax.psum`) before they ever leave the
+  mapped region. `energy_to_target` needs per-seed curves and raises if
+  they were reduced away.
+
+* **Placement** (`n_shards` / `row_shards`, via `plan.ExecPlan`): the
+  live seed axis and the sweep-row axis lay out over a real 2-D
+  `("rows", "mc")` device mesh (`compat.shard_map`). The hoisted
+  counter-based RNG plan materializes each trajectory's streams inside
+  the mapped region — a device draws exactly the streams of the seeds it
+  owns, so chunk streams are location-independent by construction and
+  curves do not depend on placement.
+
+* **Resume** (`run_chunked(..., resume_dir=)`): the chunked moments path
+  persists (chunk cursor, running Chan moments) through
+  `repro.checkpoint.ckpt` after every chunk, keyed by a workload
+  fingerprint. Counter-based RNG makes an interrupted-then-resumed sweep
+  bit-identical to an uninterrupted one.
 
 `estimate_peak_bytes` is the analytic memory model behind the knobs
 (documented in docs/performance.md); `benchmarks/bench_montecarlo.py`
-records it next to warm/cold timings.
+records it next to warm/cold timings. `plan.auto_plan` derives a full
+`ExecPlan` from it plus the device topology.
 """
 from __future__ import annotations
 
 import functools
+import hashlib
+import os
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +70,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.checkpoint import ckpt
 from repro.core.mc.slots import ALGO_REGISTRY, SlotCtx
 
 Array = jax.Array
@@ -81,7 +103,7 @@ def clear_cache() -> bool:
     global _TRACE_COUNT
     _TRACE_COUNT = 0
     cleared = False
-    for fn in (_mc_core, _mc_stats, _mc_stats_acc):
+    for fn in (_mc_core, _mc_stats, _mc_moments_merge):
         if hasattr(fn, "clear_cache"):
             fn.clear_cache()
             cleared = True
@@ -94,17 +116,19 @@ def clear_cache() -> bool:
 _STATIC_ARGNAMES = (
     "grad_fn", "risk_fn", "row_based", "algo_set", "fading", "steps",
     "n_sizes", "n_antennas", "m_sizes", "invert_channel", "h_min",
-    "n_shards", "sgrad_fn", "b_max", "ota_impl", "rng_plan", "phase_zero",
-    "sample_idx_fn", "sgrad_idx_fn",
+    "n_shards", "row_shards", "sgrad_fn", "b_max", "ota_impl", "rng_plan",
+    "phase_zero", "sample_idx_fn", "sgrad_idx_fn",
 )
 
 
 def _mc_core_impl(params, betas, theta0, seeds, data, *, grad_fn, risk_fn,
                   row_based, algo_set, fading, steps, n_sizes, n_antennas,
-                  m_sizes, invert_channel, h_min, n_shards, sgrad_fn=None,
-                  b_max=0, ota_impl="inline", rng_plan="hoisted",
-                  phase_zero=False, sample_idx_fn=None, sgrad_idx_fn=None):
-    """(C,)-batched rows × (S,) seeds × scan(steps), seeds sharded on 'mc'.
+                  m_sizes, invert_channel, h_min, n_shards, row_shards=1,
+                  sgrad_fn=None, b_max=0, ota_impl="inline",
+                  rng_plan="hoisted", phase_zero=False, sample_idx_fn=None,
+                  sgrad_idx_fn=None, reduce_moments=False):
+    """(C,)-batched rows × (S,) seeds × scan(steps), placed on a 2-D
+    ("rows", "mc") device mesh when `n_shards > 0` or `row_shards > 1`.
 
     `algo_set` is the deduped algorithm tuple; the row-to-algorithm
     assignment is traced data (params['algo_idx']), so re-assigning rows
@@ -138,6 +162,14 @@ def _mc_core_impl(params, betas, theta0, seeds, data, *, grad_fn, risk_fn,
     mixed batch would materialize every algorithm's streams per
     trajectory; mixed calls and 'inscan' run the legacy body (including
     PR 2's N-sweep-only gain hoisting), kept as the benchmark baseline.
+
+    `reduce_moments` (python-level, not a jit argname: the jitted
+    wrappers pin it at their call sites) switches the return value from
+    per-seed (risks, cum_energy) to exact two-pass block moments
+    (mean, M2) of shape (C, steps+1), reduced INSIDE the mapped region —
+    per-shard moments tree-reduce across the 'mc' axis with Chan's
+    multi-group merge under `lax.psum`, so only (C, steps+1) statistics
+    cross device boundaries regardless of placement.
     """
     global _TRACE_COUNT
     _TRACE_COUNT += 1  # python side effect: runs once per trace/compile
@@ -286,18 +318,41 @@ def _mc_core_impl(params, betas, theta0, seeds, data, *, grad_fn, risk_fn,
         risks = jnp.concatenate([risks, fin[None]])
         return risks, cum_e  # (steps+1,), (steps,)
 
+    placed = n_shards > 0 or row_shards > 1
+    mc_size = max(n_shards, 1)
+
     def seed_block(seeds_blk, params, betas, theta0, data):
         per_config = jax.vmap(
             lambda p, b, row: jax.vmap(
                 lambda s: trajectory(p, b, row, s, theta0))(seeds_blk))
-        return per_config(params, betas, data)
+        risks, cum_e = per_config(params, betas, data)
+        if not reduce_moments:
+            return risks, cum_e
+        # exact two-pass moments of this device's seed block, then Chan's
+        # multi-group merge across the 'mc' axis: the psum'd correction
+        # s_loc·(local_mean − global_mean)² turns per-shard M2 into the
+        # global M2 without any per-seed value crossing devices
+        s_loc = risks.shape[1]
+        lsum = jnp.sum(risks, axis=1)
+        lmean = lsum / s_loc
+        lm2 = jnp.sum(jnp.square(risks - lmean[:, None, :]), axis=1)
+        if placed:
+            gmean = jax.lax.psum(lsum, "mc") / (s_loc * mc_size)
+            gm2 = jax.lax.psum(
+                lm2 + s_loc * jnp.square(lmean - gmean), "mc")
+            return gmean, gm2
+        return lmean, lm2
 
-    if n_shards > 0:
-        mesh = compat.make_mesh((n_shards,), ("mc",))
+    if placed:
+        mesh = compat.make_mesh((row_shards, mc_size), ("rows", "mc"))
+        if reduce_moments:  # moments leave the region 'mc'-replicated
+            out_specs = (P("rows"), P("rows"))
+        else:
+            out_specs = (P("rows", "mc"), P("rows", "mc"))
         seed_block = compat.shard_map(
             seed_block, mesh=mesh,
-            in_specs=(P("mc"), P(), P(), P(), P()),
-            out_specs=(P(None, "mc"), P(None, "mc")))
+            in_specs=(P("mc"), P("rows"), P("rows"), P(), P("rows")),
+            out_specs=out_specs)
     return seed_block(seeds, params, betas, theta0, data)
 
 
@@ -320,16 +375,40 @@ def _mc_stats(params, betas, theta0, seeds, data, **kw):
     return mean, ci95
 
 
+def chan_merge(mean_a, m2_a, n_a, mean_b, m2_b, n_b):
+    """Chan's parallel-variance merge of two (mean, M2, n) moment groups.
+
+    M2 is the centered sum of squares Σ(x − mean)²; the merge is exact in
+    exact arithmetic and numerically stable where the one-pass
+    (Σx, Σx²) accumulator catastrophically cancels (variance far below
+    the squared mean). With n_a = 0 the result is group b exactly:
+    delta·n_b/n = mean_b and the cross term vanishes, so the first chunk
+    of a sweep is bit-identical to its own two-pass moments.
+
+    Works elementwise on arrays and under jit/np alike; `n_a`/`n_b` may
+    be traced scalars (chunk counts are data, not compile-time shape).
+    """
+    n = n_a + n_b
+    delta = mean_b - mean_a
+    mean = mean_a + delta * (n_b / n)
+    m2 = m2_a + m2_b + jnp.square(delta) * (n_a * n_b / n)
+    return mean, m2
+
+
 @functools.partial(jax.jit, static_argnames=_STATIC_ARGNAMES,
                    donate_argnums=(0, 1))
-def _mc_stats_acc(acc_sum, acc_sq, params, betas, theta0, seeds, data, **kw):
-    """One seed chunk folded into the running (Σ risk, Σ risk²) curve
-    statistics. The accumulators are DONATED: XLA reuses their buffers in
-    place, so the chunked stats path carries O(C · steps) state between
-    chunks and nothing else survives a chunk."""
-    risks, _ = _mc_core_impl(params, betas, theta0, seeds, data, **kw)
-    return (acc_sum + jnp.sum(risks, axis=1),
-            acc_sq + jnp.sum(risks * risks, axis=1))
+def _mc_moments_merge(acc_mean, acc_m2, n_prev, params, betas, theta0,
+                      seeds, data, **kw):
+    """One seed chunk's exact two-pass block moments Chan-merged into the
+    running (mean, M2) curve statistics. The accumulators are DONATED:
+    XLA reuses their buffers in place, so the chunked stats path carries
+    O(C · steps) state between chunks and nothing else survives a chunk.
+    `n_prev` is traced data (float32) — the chunk cursor never recompiles.
+    """
+    bmean, bm2 = _mc_core_impl(params, betas, theta0, seeds, data,
+                               reduce_moments=True, **kw)
+    n_b = jnp.float32(seeds.shape[0])
+    return chan_merge(acc_mean, acc_m2, n_prev, bmean, bm2, n_b)
 
 
 def host_seed_stats(risks: np.ndarray) -> tuple:
@@ -345,28 +424,73 @@ def host_seed_stats(risks: np.ndarray) -> tuple:
     return mean, ci95
 
 
-def finalize_moment_stats(acc_sum: np.ndarray, acc_sq: np.ndarray,
+def finalize_merged_stats(mean: np.ndarray, m2: np.ndarray,
                           n_seeds: int) -> tuple:
-    """(Σx, Σx², n) -> (mean, ci95) with the ddof=1 sample variance.
+    """Chan-merged (mean, M2, n) -> (mean, ci95), ddof=1 sample variance.
 
-    The one-pass moments lose precision when the seed variance is far
-    below the squared mean (near-deterministic rows); the variance is
-    clamped at 0, which at worst underreports an already-negligible ci95.
+    M2 = Σ(x − mean)² is nonnegative by construction (up to rounding in
+    the merge's cross terms, hence the max with 0) — unlike the retired
+    one-pass (Σx, Σx²) accumulator, whose difference of large squares
+    collapsed ci95 to 0 on near-deterministic rows.
     """
-    mean = acc_sum / n_seeds
     if n_seeds > 1:
-        var = np.maximum(0.0, (acc_sq - n_seeds * mean**2) / (n_seeds - 1))
+        var = np.maximum(0.0, np.asarray(m2)) / (n_seeds - 1)
         ci95 = 1.96 * np.sqrt(var / n_seeds)
     else:
         ci95 = np.zeros_like(mean)
-    return mean, ci95
+    return np.asarray(mean), ci95
 
 
 # --------------------------------------------------------------------------
-# seed-chunked scheduler
+# seed-chunked scheduler (+ resume)
 # --------------------------------------------------------------------------
+_RESUME_FILE = "mc_chunked_resume.npz"
+
+
+def _hash_array_leaf(h, name, value) -> None:
+    arr = np.asarray(value)
+    h.update(f"{name}:{arr.dtype.str}:{arr.shape};".encode())
+    h.update(np.ascontiguousarray(arr).tobytes())
+
+
+def _workload_fingerprint(params, betas, theta0, seed_ints, data,
+                          seed_chunk, n_rows, n_shards, row_shards,
+                          core_kwargs) -> np.ndarray:
+    """sha256 identity of a chunked sweep, as a (32,) uint8 leaf.
+
+    Covers the static core kwargs (callables by qualname — stable across
+    processes, unlike their reprs), the numeric workload (channel/algo
+    params, stepsizes, theta0, problem data — a different noise_std or
+    stepsize is a different sweep even though every static matches), the
+    full seed-int sequence, the chunk size, the row count and the mesh
+    shape. Two sweeps with equal fingerprints replay identical chunk
+    streams in identical order, so a checkpoint from one resumes the
+    other bit-identically; placement is included because the
+    cross-device moment reduction order is part of the accumulators'
+    bit pattern.
+    """
+    h = hashlib.sha256()
+    for name in sorted(core_kwargs):
+        v = core_kwargs[name]
+        if callable(v):
+            v = getattr(v, "__qualname__", repr(v))
+        h.update(f"{name}={v!r};".encode())
+    for name in sorted(params):
+        _hash_array_leaf(h, f"params.{name}", params[name])
+    for name in sorted(data):
+        _hash_array_leaf(h, f"data.{name}", data[name])
+    _hash_array_leaf(h, "betas", betas)
+    _hash_array_leaf(h, "theta0", theta0)
+    h.update(np.ascontiguousarray(
+        np.asarray(seed_ints, np.int64)).tobytes())
+    h.update(f"chunk={seed_chunk};rows={n_rows};"
+             f"mesh={row_shards}x{n_shards};".encode())
+    return np.frombuffer(h.digest(), np.uint8)
+
+
 def run_chunked(params, betas, theta0, seed_ints, data, *, seed_chunk,
-                keep_seed_curves, resolve_shards, core_kwargs):
+                keep_seed_curves, n_shards, row_shards=1, core_kwargs,
+                resume_dir=None):
     """Drive the seed axis in blocks of `seed_chunk` through one compiled
     program (chunk seed ints are data). Returns the same
     (risks, cum_energy, mean, ci95) quadruple as the single-shot paths,
@@ -374,8 +498,20 @@ def run_chunked(params, betas, theta0, seed_ints, data, *, seed_chunk,
 
     Per-chunk peak memory is O(C · seed_chunk · steps · n_max): the
     hoisted RNG streams re-materialize per chunk, per-seed curves either
-    stream to preallocated host arrays (`keep_seed_curves=True`) or fold
-    into donated (C, steps+1) moment accumulators.
+    stream to preallocated host arrays (`keep_seed_curves=True`) or
+    Chan-merge into donated (C, steps+1) moment accumulators.
+    `n_shards`/`row_shards` place each chunk on the ("rows", "mc") mesh.
+
+    `resume_dir` (moments path only) persists (fingerprint, chunk
+    cursor, acc_mean, acc_m2) to `<resume_dir>/mc_chunked_resume.npz`
+    after every chunk, and restores from it when present: the sweep
+    restarts at the first unfinished chunk with the saved accumulators.
+    Counter-based RNG replays each chunk's streams exactly and the f32
+    host round-trip is value-preserving, so interrupted-then-resumed
+    equals uninterrupted bit-for-bit. A checkpoint written by a
+    different workload (fingerprint mismatch) raises instead of
+    silently corrupting the sweep; a finished sweep's checkpoint
+    short-circuits straight to finalization.
     """
     seeds = len(seed_ints)
     if seed_chunk <= 0:
@@ -384,28 +520,59 @@ def run_chunked(params, betas, theta0, seed_ints, data, *, seed_chunk,
         raise ValueError(
             f"seeds ({seeds}) must divide into seed_chunk ({seed_chunk}) "
             "blocks — pad the seed count or pick a chunk that divides it")
-    n_shards = resolve_shards(seed_chunk)
     steps = core_kwargs["steps"]
     n_rows = len(betas)
     if keep_seed_curves:
+        if resume_dir is not None:
+            raise ValueError(
+                "resume_dir requires the reduced-moments path "
+                "(keep_seed_curves=False): per-seed curves are not "
+                "checkpointed between chunks")
         risks = np.empty((n_rows, seeds, steps + 1), np.float32)
         cum_e = np.empty((n_rows, seeds, steps), np.float32)
         for off in range(0, seeds, seed_chunk):
             blk = jnp.asarray(seed_ints[off:off + seed_chunk])
             r, ce = _mc_core(params, betas, theta0, blk, data,
-                             n_shards=n_shards, **core_kwargs)
+                             n_shards=n_shards, row_shards=row_shards,
+                             **core_kwargs)
             risks[:, off:off + seed_chunk] = np.asarray(r)
             cum_e[:, off:off + seed_chunk] = np.asarray(ce)
         return (risks, cum_e) + host_seed_stats(risks)
-    acc_sum = jnp.zeros((n_rows, steps + 1), jnp.float32)
-    acc_sq = jnp.zeros((n_rows, steps + 1), jnp.float32)
-    for off in range(0, seeds, seed_chunk):
+    fp = _workload_fingerprint(params, betas, theta0, seed_ints, data,
+                               seed_chunk, n_rows, n_shards, row_shards,
+                               core_kwargs)
+    start = 0
+    acc_mean = jnp.zeros((n_rows, steps + 1), jnp.float32)
+    acc_m2 = jnp.zeros((n_rows, steps + 1), jnp.float32)
+    ckpt_path = None
+    if resume_dir is not None:
+        ckpt_path = os.path.join(resume_dir, _RESUME_FILE)
+        if os.path.exists(ckpt_path):
+            raw = ckpt.peek(ckpt_path)
+            if not np.array_equal(raw.get("fingerprint"), fp):
+                raise ValueError(
+                    f"checkpoint at {ckpt_path} belongs to a different "
+                    "workload (fingerprint mismatch) — point resume_dir "
+                    "at this sweep's own directory or remove the stale "
+                    "checkpoint")
+            start = int(raw["next_off"])
+            acc_mean = jnp.asarray(raw["acc_mean"])
+            acc_m2 = jnp.asarray(raw["acc_m2"])
+    for off in range(start, seeds, seed_chunk):
         blk = jnp.asarray(seed_ints[off:off + seed_chunk])
-        acc_sum, acc_sq = _mc_stats_acc(
-            acc_sum, acc_sq, params, betas, theta0, blk, data,
-            n_shards=n_shards, **core_kwargs)
-    mean, ci95 = finalize_moment_stats(
-        np.asarray(acc_sum), np.asarray(acc_sq), seeds)
+        acc_mean, acc_m2 = _mc_moments_merge(
+            acc_mean, acc_m2, np.float32(off), params, betas, theta0, blk,
+            data, n_shards=n_shards, row_shards=row_shards, **core_kwargs)
+        if ckpt_path is not None:
+            # np.asarray copies to host BEFORE the next merge donates the
+            # accumulator buffers back to XLA
+            ckpt.save(ckpt_path, {
+                "fingerprint": fp,
+                "next_off": np.int64(off + seed_chunk),
+                "acc_mean": np.asarray(acc_mean),
+                "acc_m2": np.asarray(acc_m2)})
+    mean, ci95 = finalize_merged_stats(
+        np.asarray(acc_mean), np.asarray(acc_m2), seeds)
     return None, None, mean, ci95
 
 
@@ -420,37 +587,37 @@ def estimate_peak_bytes(*, n_rows: int, seeds: int, steps: int, n_max: int,
                         n_antennas=None, m_sizes=(), b_max: int = 0,
                         keep_seed_curves: bool = True,
                         rng_plan: str = "hoisted",
-                        invert_channel: bool = False) -> dict:
+                        invert_channel: bool = False,
+                        n_shards: int = 1, row_shards: int = 1) -> dict:
     """Analytic peak-memory estimate (bytes) of one engine call, per the
     execution-layer memory model (docs/performance.md).
 
     Counts the O(C · S_live · steps)-scaling buffers that dominate at
-    scale — the hoisted per-stream RNG draws, the scanned per-seed curve
-    outputs, and the per-step gradient temporaries — for S_live =
+    scale — the hoisted per-stream RNG draws (per-algorithm widths from
+    `slots.hoist_draw_elems`, next to the registry), the scanned per-seed
+    curve outputs, and the per-step gradient temporaries — for S_live =
     seed_chunk (when chunking) or the full seed count. Deliberately an
     estimate: XLA fusion removes some temporaries and adds others, so
     treat it as the scaling model the knobs are chosen against, not an
     allocator ground truth.
+
+    Under placement every counted buffer is sharded over the
+    (row_shards × n_shards) mesh — each device materializes only its own
+    seeds' streams — so `per_device_peak_bytes` is the whole-call total
+    divided by the mesh size; it is the figure `plan.auto_plan` sizes
+    chunks against.
     """
+    from repro.core.mc import slots
+
     s_live = seeds if seed_chunk is None else min(seed_chunk, seeds)
     m_live = max(m_sizes) if m_sizes else (n_antennas or 1)
     per_traj_draws = 0
     # draws hoist only on homogeneous calls (see _mc_core_impl)
     if rng_plan == "hoisted" and len(algo_set) == 1:
         for a in algo_set:
-            spec = ALGO_REGISTRY.get(a)
-            if spec is None or spec.hoist_draws is None:
-                continue
-            if spec.blind:
-                # complex gain pair (m, n_max) + edge noise (m, 2, dim)
-                per_traj_draws += steps * m_live * 2 * (n_max + dim)
-            elif a == "fdm":
-                # per-node noise (n_max, dim) + gains unless inverted
-                # (the inverted channel is equalized — no gain stream)
-                per_traj_draws += steps * n_max * (
-                    dim + (0 if invert_channel else 1))
-            else:  # gbma family / power_control: gains + edge noise
-                per_traj_draws += steps * m_live * (n_max + dim)
+            per_traj_draws += slots.hoist_draw_elems(
+                a, steps=steps, n_max=n_max, dim=dim, m_live=m_live,
+                invert_channel=invert_channel)
         if b_max > 0:
             per_traj_draws += steps * n_max * b_max  # minibatch indices
     draw_bytes = n_rows * s_live * per_traj_draws * _F32
@@ -461,8 +628,10 @@ def estimate_peak_bytes(*, n_rows: int, seeds: int, steps: int, n_max: int,
     host_bytes = (n_rows * seeds * (2 * steps + 1) * _F32
                   if keep_seed_curves else 0)
     device_total = draw_bytes + curve_bytes + temp_bytes
+    mesh_size = max(n_shards, 1) * max(row_shards, 1)
     return {
         "device_peak_bytes": device_total,
+        "per_device_peak_bytes": -(-device_total // mesh_size),
         "rng_draw_bytes": draw_bytes,
         "curve_bytes": curve_bytes,
         "grad_temp_bytes": temp_bytes,

@@ -464,6 +464,28 @@ register_algo("blind_ec", _blind_slot, blind=True, error_feedback=True,
               hoist_draws=_blind_hoist_draws)
 
 
+def hoist_draw_elems(name: str, *, steps: int, n_max: int, dim: int,
+                     m_live: int, invert_channel: bool) -> int:
+    """f32-element count of one trajectory's hoisted draw streams for the
+    named algorithm — the registry's side of the execution layer's
+    analytic memory model (`exec.estimate_peak_bytes`). Lives next to
+    `register_algo` so a new algorithm's `hoist_draws` twin and its
+    memory footprint stay in one file. Unregistered algorithms and those
+    without a hoist twin draw in-scan: 0 hoisted elements."""
+    spec = ALGO_REGISTRY.get(name)
+    if spec is None or spec.hoist_draws is None:
+        return 0
+    if spec.blind:
+        # complex gain pair (m, n_max) + edge noise (m, 2, dim)
+        return steps * m_live * 2 * (n_max + dim)
+    if name == "fdm":
+        # per-node noise (n_max, dim) + gains unless inverted
+        # (the inverted channel is equalized — no gain stream)
+        return steps * n_max * (dim + (0 if invert_channel else 1))
+    # gbma family / power_control: gains + edge noise
+    return steps * m_live * (n_max + dim)
+
+
 # --------------------------------------------------------------------------
 # block-shaped entry point (the channel-transport layer's tiling surface)
 # --------------------------------------------------------------------------

@@ -26,6 +26,7 @@ should import from `repro.core.mc` directly.
 from __future__ import annotations
 
 from repro.core.mc import exec as _exec
+from repro.core.mc import plan as _plan
 from repro.core.mc import problems as _problems
 from repro.core.mc import sampling as _sampling
 from repro.core.mc import slots as _slots
@@ -58,7 +59,7 @@ from repro.core.mc.slots import (
     register_algo,
 )
 
-_SUBMODULES = (_slots, _sampling, _problems, _exec)
+_SUBMODULES = (_slots, _sampling, _problems, _exec, _plan)
 
 
 def __getattr__(name: str):

@@ -103,6 +103,32 @@ def test_performance_md_documents_the_exec_knobs():
             f"{linker} must cross-link docs/performance.md")
 
 
+def test_performance_md_documents_the_exec_plan_surface():
+    """The plan/place/run/reduce pipeline is part of the execution-layer
+    contract: every `ExecPlan` field, the plan entry points, the resume
+    knob and the placed benchmark entry must appear in
+    docs/performance.md — adding a plan field without documenting it
+    fails tier-1."""
+    import dataclasses
+
+    from repro.core.mc import ExecPlan
+
+    text = (ROOT / "docs" / "performance.md").read_text()
+    for f in dataclasses.fields(ExecPlan):
+        assert f"`{f.name}`" in text, (
+            f"ExecPlan.{f.name} is an execution-plan field but "
+            "docs/performance.md does not document it")
+    for name in ("ExecPlan", "auto_plan", "resume_dir", "chan_merge",
+                 "shard_map", "large_chunked_placed", "topology",
+                 "fingerprint", "xla_force_host_platform_device_count"):
+        assert name in text, (
+            f"docs/performance.md must document {name!r} (plan/placement/"
+            "resume sections)")
+    bench_src = (ROOT / "benchmarks" / "bench_montecarlo.py").read_text()
+    assert "large_chunked_placed" in bench_src, (
+        "the documented large_chunked_placed entry left the benchmark")
+
+
 def test_training_md_pins_the_transport_surface():
     """docs/training.md is the training-route contract: every registry
     aggregator must appear in its routing table, the transport knobs it

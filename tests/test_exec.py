@@ -334,14 +334,14 @@ def test_single_seed_reduced_stats(mc):
     np.testing.assert_allclose(red.mean, full.mean, rtol=1e-6)
 
 
-def test_finalize_moment_stats_clamps_negative_variance():
-    """Deterministic rows: the one-pass variance may cancel slightly
-    negative — it must clamp to 0, not NaN."""
+def test_finalize_merged_stats_deterministic_rows():
+    """Deterministic rows: M2 is exactly 0 (centered sums of identical
+    values), so ci95 is exactly 0 — no cancellation, no NaN."""
     curves = np.full((1, 5), 0.123456, np.float32)
-    s, sq = 4 * curves, 4 * curves**2
-    mean, ci = exec_mod.finalize_moment_stats(s, sq, 4)
+    m2 = np.zeros_like(curves)
+    mean, ci = exec_mod.finalize_merged_stats(curves, m2, 4)
     np.testing.assert_allclose(mean, curves, rtol=1e-6)
-    assert np.all(np.isfinite(ci)) and np.all(ci >= 0.0)
+    assert np.all(ci == 0.0)
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,392 @@
+"""Execution plans (`repro.core.mc.plan`) + the placed, resumable
+scheduler:
+
+  * `auto_plan` derivation: chunk sizing against the per-device memory
+    target/budget, topology-driven (rows x mc) placement, the hand-tuned
+    LARGE benchmark configuration reproduced analytically;
+  * `run_mc(plan=...)` routing: ExecPlan / "auto" / legacy-kwargs shim
+    equivalence (bit-identical), conflict and validation errors, the
+    resolved plan recorded on `MCResult.plan`;
+  * Chan's parallel moment merge: hand-computed merges vs numpy ddof=1,
+    the catastrophic-cancellation regression the one-pass (Σx, Σx²)
+    accumulator failed, chunked engine ci95 vs the host two-pass;
+  * resume: interrupt at chunk k -> restore -> bit-identical moments vs
+    uninterrupted for gbma / blind / stochastic-logistic families,
+    finished-sweep short-circuit, fingerprint mismatch, validation;
+  * placement invariance: chunk streams identical across n_shards in
+    {1, 2, 4} and under row sharding (multi-device: these run in the CI
+    forced-host-device job; a subprocess twin keeps one placed
+    configuration covered on single-device tier-1).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from benchmarks.common import MSDProblem
+from repro.checkpoint import ckpt
+from repro.core.channel import ChannelConfig
+from repro.core.mc import exec as exec_mod
+from repro.core.mc import plan as plan_mod
+from repro.core.mc.exec import chan_merge, finalize_merged_stats
+from repro.core.mc.plan import ExecPlan, auto_plan, validate_plan
+from repro.core.montecarlo import logistic_mc_problem, run_mc
+from repro.data.synthetic import logistic_classification
+
+N, D, STEPS, SEEDS = 12, 8, 10, 8
+
+multidev = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs 4 devices (CI runs this under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+
+@pytest.fixture(scope="module")
+def mc():
+    return MSDProblem.make(N, dim=D).to_mc()
+
+
+def _ch(**kw):
+    kw.setdefault("fading", "rayleigh")
+    kw.setdefault("noise_std", 0.5)
+    return ChannelConfig(**kw)
+
+
+# --------------------------------------------------------------------------
+# auto_plan derivation
+# --------------------------------------------------------------------------
+def test_auto_plan_small_workload_runs_all_live():
+    p = auto_plan(n_rows=1, seeds=8, steps=10, n_max=16, dim=4,
+                  device_count=1)
+    assert p.seed_chunk is None
+    assert p.keep_seed_curves is True
+    assert p.n_shards == 0 and p.row_shards == 1
+
+
+def test_auto_plan_chunks_against_the_target():
+    # force a tiny per-device target: the chunk must divide the seeds,
+    # fit the target, and flip keep_seed_curves to the reduced path
+    p = auto_plan(n_rows=1, seeds=64, steps=50, n_max=256, dim=16,
+                  device_count=1, target_chunk_bytes=512 * 1024)
+    assert p.seed_chunk is not None and 64 % p.seed_chunk == 0
+    est = exec_mod.estimate_peak_bytes(
+        n_rows=1, seeds=64, steps=50, n_max=256, dim=16,
+        seed_chunk=p.seed_chunk, keep_seed_curves=False)
+    assert est["per_device_peak_bytes"] <= 512 * 1024
+    assert p.keep_seed_curves is False
+
+
+def test_auto_plan_reproduces_the_hand_tuned_large_config():
+    """The planner's 128 MiB cache target re-derives the benchmark's
+    hand-tuned chunk=32 on the full-scale LARGE workload (seeds=1024 x
+    N=4096) — the analytic anchor for the default target."""
+    p = auto_plan(n_rows=1, seeds=1024, steps=150, n_max=4096, dim=24,
+                  device_count=1, memory_budget_bytes=2 * 2**30)
+    assert p.seed_chunk == 32
+    assert p.keep_seed_curves is False
+
+
+def test_auto_plan_places_over_the_topology():
+    p = auto_plan(n_rows=3, seeds=16, steps=10, n_max=16, dim=4,
+                  device_count=4)
+    assert p.n_shards == 4 and p.row_shards == 1
+    # seed axis does not divide: the row axis picks up the devices
+    p = auto_plan(n_rows=4, seeds=9, steps=10, n_max=16, dim=4,
+                  device_count=4)
+    assert p.n_shards == 0 and p.row_shards == 4
+
+
+def test_auto_plan_chunk_is_a_multiple_of_the_seed_shards():
+    p = auto_plan(n_rows=1, seeds=64, steps=50, n_max=256, dim=16,
+                  device_count=4, target_chunk_bytes=512 * 1024)
+    if p.seed_chunk is not None and p.n_shards > 1:
+        assert p.seed_chunk % p.n_shards == 0
+
+
+def test_validate_plan_errors():
+    with pytest.raises(ValueError, match="rng_plan"):
+        validate_plan(ExecPlan(rng_plan="nope"), seeds=8, n_rows=1)
+    with pytest.raises(ValueError, match="divide"):
+        validate_plan(ExecPlan(seed_chunk=3), seeds=8, n_rows=1)
+    with pytest.raises(ValueError, match="positive"):
+        validate_plan(ExecPlan(seed_chunk=0), seeds=8, n_rows=1)
+    with pytest.raises(ValueError, match="n_shards"):
+        validate_plan(ExecPlan(n_shards=3), seeds=8, n_rows=1)
+    with pytest.raises(ValueError, match="row_shards"):
+        validate_plan(ExecPlan(row_shards=2), seeds=8, n_rows=3)
+
+
+def test_resolve_seed_shards_oversubscription():
+    plan = ExecPlan(n_shards=2, row_shards=2)
+    with pytest.raises(ValueError, match="device"):
+        plan_mod.resolve_seed_shards(plan, 8, device_count=2)
+
+
+# --------------------------------------------------------------------------
+# run_mc(plan=...) routing
+# --------------------------------------------------------------------------
+def test_plan_conflicts_with_legacy_knobs(mc):
+    with pytest.raises(ValueError, match="seed_chunk"):
+        run_mc(mc, [_ch()], "gbma", [0.01], STEPS, SEEDS,
+               plan=ExecPlan(), seed_chunk=4)
+    with pytest.raises(ValueError, match="plan must be"):
+        run_mc(mc, [_ch()], "gbma", [0.01], STEPS, SEEDS, plan="fastest")
+    with pytest.raises(ValueError, match="memory_budget_bytes"):
+        run_mc(mc, [_ch()], "gbma", [0.01], STEPS, SEEDS,
+               memory_budget_bytes=2**30)
+
+
+def test_kwargs_shim_is_behavior_pinned(mc):
+    """The legacy kwargs build the equivalent ExecPlan: same bits."""
+    kw = run_mc(mc, [_ch()], "gbma", [0.01], STEPS, SEEDS,
+                rng_plan="hoisted", seed_chunk=4, keep_seed_curves=False)
+    pl = run_mc(mc, [_ch()], "gbma", [0.01], STEPS, SEEDS,
+                plan=ExecPlan(seed_chunk=4, keep_seed_curves=False))
+    np.testing.assert_array_equal(kw.mean, pl.mean)
+    np.testing.assert_array_equal(kw.ci95, pl.ci95)
+
+
+def test_result_records_the_resolved_plan(mc):
+    res = run_mc(mc, [_ch()], "gbma", [0.01], STEPS, SEEDS)
+    assert res.plan == ExecPlan()
+    res = run_mc(mc, [_ch()], "gbma", [0.01], STEPS, SEEDS, plan="auto")
+    assert isinstance(res.plan, ExecPlan)
+    assert res.plan.n_shards is not None  # auto plans are fully concrete
+
+
+def test_plan_auto_matches_the_default_path(mc):
+    base = run_mc(mc, [_ch()], "gbma", [0.01], STEPS, SEEDS)
+    auto = run_mc(mc, [_ch()], "gbma", [0.01], STEPS, SEEDS, plan="auto")
+    np.testing.assert_allclose(auto.mean, base.mean, rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Chan's parallel moment merge
+# --------------------------------------------------------------------------
+def test_chan_merge_matches_numpy_over_chunks():
+    rng = np.random.default_rng(0)
+    x = rng.normal(3.0, 0.7, size=(2, 20, 6)).astype(np.float32)
+    mean = np.zeros((2, 6), np.float32)
+    m2 = np.zeros((2, 6), np.float32)
+    n = np.float32(0.0)
+    for off in range(0, 20, 5):
+        blk = x[:, off:off + 5]
+        bmean = blk.mean(axis=1)
+        bm2 = ((blk - bmean[:, None, :]) ** 2).sum(axis=1)
+        mean, m2 = chan_merge(mean, m2, n, bmean, bm2, np.float32(5.0))
+        n = n + np.float32(5.0)
+    np.testing.assert_allclose(mean, x.mean(axis=1), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(m2) / 19.0,
+                               x.var(axis=1, ddof=1), rtol=1e-4)
+    _, ci = finalize_merged_stats(np.asarray(mean), np.asarray(m2), 20)
+    ref = 1.96 * x.std(axis=1, ddof=1) / np.sqrt(20)
+    np.testing.assert_allclose(ci, ref, rtol=1e-4)
+
+
+def test_chan_merge_first_chunk_is_exact():
+    bmean = np.float32([1.5, -2.25])
+    bm2 = np.float32([0.5, 0.125])
+    mean, m2 = chan_merge(np.zeros(2, np.float32), np.zeros(2, np.float32),
+                          np.float32(0.0), bmean, bm2, np.float32(4.0))
+    np.testing.assert_array_equal(np.asarray(mean), bmean)
+    np.testing.assert_array_equal(np.asarray(m2), bm2)
+
+
+def test_chan_merge_survives_the_one_pass_cancellation():
+    """The PR-5 wart this replaces: near-deterministic rows with a large
+    mean. In f32 the one-pass Σx² − n·mean² cancels to 0 (or negative,
+    then clamped); the Chan path keeps the true variance."""
+    rng = np.random.default_rng(1)
+    x = (1e4 + rng.normal(0, 0.05, size=(1, 16, 4))).astype(np.float32)
+    true_sd = np.float64(x).std(axis=1, ddof=1)
+
+    # the retired one-pass accumulator, verbatim: the Σx² − n·mean²
+    # subtraction of two ~1e9 f32 numbers is quantized at their ulp
+    # (~128), so it returns 0 or ulp-scale garbage — never the true
+    # M2 ≈ 0.04
+    s = x.sum(axis=1)
+    sq = (x * x).sum(axis=1)
+    sd_onepass = np.sqrt(np.maximum(0.0, (sq - 16 * (s / 16) ** 2) / 15))
+    assert np.all(np.abs(sd_onepass - true_sd) > 0.5 * true_sd), \
+        "workload no longer triggers the cancellation — tighten it"
+
+    mean = np.zeros((1, 4), np.float32)
+    m2 = np.zeros((1, 4), np.float32)
+    n = np.float32(0.0)
+    for off in range(0, 16, 4):
+        blk = x[:, off:off + 4]
+        bmean = blk.mean(axis=1)
+        bm2 = ((blk - bmean[:, None, :]) ** 2).sum(axis=1)
+        mean, m2 = chan_merge(mean, m2, n, bmean, bm2, np.float32(4.0))
+        n = n + np.float32(4.0)
+    sd_chan = np.sqrt(np.asarray(m2) / 15)
+    np.testing.assert_allclose(sd_chan, true_sd, rtol=1e-2)
+
+
+def test_chunked_ci95_matches_host_two_pass(mc):
+    full = run_mc(mc, [_ch()], "gbma", [0.01], STEPS, SEEDS)
+    red = run_mc(mc, [_ch()], "gbma", [0.01], STEPS, SEEDS,
+                 seed_chunk=2, keep_seed_curves=False)
+    np.testing.assert_allclose(red.mean, full.mean, rtol=1e-5, atol=1e-9)
+    np.testing.assert_allclose(red.ci95, full.ci95, rtol=1e-4, atol=1e-8)
+
+
+# --------------------------------------------------------------------------
+# resume
+# --------------------------------------------------------------------------
+def _families(mc):
+    lg_X, lg_y, _ = logistic_classification(40, dim=6, seed=3)
+    logistic = logistic_mc_problem(lg_X, lg_y, 8, lam=0.1)
+    return {
+        "gbma": dict(problem=mc, algo="gbma", kw={}),
+        "blind": dict(problem=mc, algo="blind", kw={"n_antennas": 2}),
+        "logistic": dict(problem=logistic, algo="gbma",
+                         kw={"batch_frac": 0.5}),
+    }
+
+
+@pytest.mark.parametrize("family", ["gbma", "blind", "logistic"])
+def test_interrupted_resume_is_bit_identical(family, mc, tmp_path,
+                                             monkeypatch):
+    """Interrupt at chunk k (ckpt.save raises after k saves), rerun with
+    the same resume_dir: moments are bit-identical to the uninterrupted
+    sweep, and the resumed run starts at the first unfinished chunk."""
+    spec = _families(mc)[family]
+    args = (spec["problem"], [_ch()], spec["algo"], [0.01], STEPS, SEEDS)
+    kw = dict(seed_chunk=2, keep_seed_curves=False, **spec["kw"])
+    uninterrupted = run_mc(*args, **kw)
+
+    real_save = ckpt.save
+    calls = {"n": 0}
+
+    def dying_save(path, tree):
+        real_save(path, tree)
+        calls["n"] += 1
+        if calls["n"] >= 2:
+            raise RuntimeError("simulated preemption")
+
+    monkeypatch.setattr(ckpt, "save", dying_save)
+    with pytest.raises(RuntimeError, match="preemption"):
+        run_mc(*args, resume_dir=str(tmp_path), **kw)
+    monkeypatch.setattr(ckpt, "save", real_save)
+
+    raw = ckpt.peek(str(tmp_path / exec_mod._RESUME_FILE))
+    assert int(raw["next_off"]) == 4  # 2 chunks of 2 seeds survived
+
+    real_merge = exec_mod._mc_moments_merge
+    offs = []
+
+    def counting_merge(acc_mean, acc_m2, n_prev, *a, **k):
+        offs.append(int(np.asarray(n_prev)))
+        return real_merge(acc_mean, acc_m2, n_prev, *a, **k)
+
+    monkeypatch.setattr(exec_mod, "_mc_moments_merge", counting_merge)
+    resumed = run_mc(*args, resume_dir=str(tmp_path), **kw)
+    assert offs == [4, 6]  # only the unfinished chunks ran
+    np.testing.assert_array_equal(resumed.mean, uninterrupted.mean)
+    np.testing.assert_array_equal(resumed.ci95, uninterrupted.ci95)
+
+
+def test_finished_sweep_resume_short_circuits(mc, tmp_path, monkeypatch):
+    kw = dict(seed_chunk=2, keep_seed_curves=False,
+              resume_dir=str(tmp_path))
+    first = run_mc(mc, [_ch()], "gbma", [0.01], STEPS, SEEDS, **kw)
+
+    def no_merge(*a, **k):  # pragma: no cover - failure path
+        raise AssertionError("finished sweep must not re-run chunks")
+
+    monkeypatch.setattr(exec_mod, "_mc_moments_merge", no_merge)
+    again = run_mc(mc, [_ch()], "gbma", [0.01], STEPS, SEEDS, **kw)
+    np.testing.assert_array_equal(first.mean, again.mean)
+    np.testing.assert_array_equal(first.ci95, again.ci95)
+
+
+def test_resume_rejects_a_foreign_checkpoint(mc, tmp_path):
+    kw = dict(seed_chunk=2, keep_seed_curves=False,
+              resume_dir=str(tmp_path))
+    run_mc(mc, [_ch()], "gbma", [0.01], STEPS, SEEDS, **kw)
+    with pytest.raises(ValueError, match="fingerprint"):
+        # different stepsize = different workload, same directory
+        run_mc(mc, [_ch()], "gbma", [0.02], STEPS, SEEDS, **kw)
+
+
+def test_resume_requires_chunked_reduced_path(mc, tmp_path):
+    with pytest.raises(ValueError, match="seed_chunk"):
+        run_mc(mc, [_ch()], "gbma", [0.01], STEPS, SEEDS,
+               resume_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="keep_seed_curves"):
+        run_mc(mc, [_ch()], "gbma", [0.01], STEPS, SEEDS,
+               seed_chunk=2, resume_dir=str(tmp_path))
+
+
+# --------------------------------------------------------------------------
+# placement invariance
+# --------------------------------------------------------------------------
+@multidev
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_chunked_moments_placement_invariant(mc, n_shards):
+    """The hoisted counter-based RNG plan makes chunk streams
+    location-independent by construction: only the psum reduction order
+    differs across placements (f32 ulp scale)."""
+    base = run_mc(mc, [_ch()], "gbma", [0.01], STEPS, SEEDS,
+                  plan=ExecPlan(seed_chunk=4, n_shards=0,
+                                keep_seed_curves=False))
+    placed = run_mc(mc, [_ch()], "gbma", [0.01], STEPS, SEEDS,
+                    plan=ExecPlan(seed_chunk=4, n_shards=n_shards,
+                                  keep_seed_curves=False))
+    np.testing.assert_allclose(placed.mean, base.mean, rtol=1e-6)
+    np.testing.assert_allclose(placed.ci95, base.ci95, rtol=1e-5,
+                               atol=1e-9)
+
+
+@multidev
+def test_curves_bitwise_across_the_rows_mc_mesh(mc):
+    """Per-seed curves never cross a reduction: a (rows x mc) placement
+    returns the single-device bits exactly."""
+    chs = [_ch(), _ch(noise_std=0.7)]
+    plain = run_mc(mc, chs, "gbma", [0.01, 0.02], STEPS, SEEDS)
+    placed = run_mc(mc, chs, "gbma", [0.01, 0.02], STEPS, SEEDS,
+                    plan=ExecPlan(n_shards=2, row_shards=2))
+    np.testing.assert_array_equal(plain.risks, placed.risks)
+    np.testing.assert_array_equal(plain.cum_energy, placed.cum_energy)
+
+
+_SUBPROC_SNIPPET = """
+import json
+import numpy as np
+from benchmarks.common import MSDProblem
+from repro.core.channel import ChannelConfig
+from repro.core.mc import ExecPlan, run_mc
+
+mc = MSDProblem.make({n}, dim={d}).to_mc()
+ch = ChannelConfig(fading="rayleigh", noise_std=0.5)
+res = run_mc(mc, [ch], "gbma", [0.01], {steps}, {seeds},
+             plan=ExecPlan(seed_chunk=4, n_shards=4,
+                           keep_seed_curves=False))
+print(json.dumps(res.mean.tolist()))
+"""
+
+
+def test_forced_host_devices_match_in_process(mc):
+    """Single-device tier-1 coverage of a genuinely placed run: a
+    subprocess forces 4 host devices (XLA_FLAGS must be set before jax
+    imports, hence the subprocess) and its 4-shard chunked moments must
+    match this process's run to f32 reduction tolerance."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (env.get("PYTHONPATH"), "src") if p)
+    snippet = _SUBPROC_SNIPPET.format(n=N, d=D, steps=STEPS, seeds=SEEDS)
+    out = subprocess.run(
+        [sys.executable, "-c", snippet], env=env, capture_output=True,
+        text=True, cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.returncode == 0, out.stderr
+    sub_mean = np.asarray(json.loads(out.stdout.strip()), np.float32)
+    here = run_mc(mc, [_ch()], "gbma", [0.01], STEPS, SEEDS,
+                  seed_chunk=4, keep_seed_curves=False)
+    np.testing.assert_allclose(sub_mean, here.mean, rtol=1e-6)
