@@ -58,6 +58,16 @@ Workloads:
    must sit at f32-ulp scale (≤ 1e-6), bf16-transmit at quantization
    scale.
 
+8. **serve_coalesce**: the sweep server's coalescing win
+   (docs/serving.md). The same K-request mix (one request per
+   `SWEEP_N_GRID` node count — signature-compatible, so the server packs
+   them into one padded batch) served per-request (one dedicated
+   `run_mc` call each: one compile per N, K dispatches warm) vs
+   coalesced through `serve_sync` (one compile, one engine call per
+   seed quantum). Cold records the compile counts; warm records the
+   steady-state dispatch advantage; `max_rel_curve_diff` pins the
+   demuxed curves to the dedicated-call references.
+
 `--smoke` shrinks every workload to CI size, writes
 `BENCH_montecarlo.smoke.json` (never the tracked full-scale record),
 asserts the warm timings are finite and the curve agreements hold, and
@@ -514,6 +524,63 @@ def bench_train_100m_ota() -> dict:
     }
 
 
+def bench_serve_coalesce() -> dict:
+    """The serving entry: K signature-compatible requests served
+    per-request (a dedicated row-based `run_mc` call each) vs coalesced
+    through the sweep server (`serve_sync`: one compile, demuxed
+    `slice_result` views). See module docstring, workload 8."""
+    from repro.core.mc import MCProblemBatch
+    from repro.serving.mc_server import (McServeConfig, SweepRequest,
+                                         serve_sync)
+
+    probs = [MSDProblem.make(n) for n in SWEEP_N_GRID]
+    chs = [ChannelConfig(fading="rayleigh", scale=1.0, noise_std=1.0,
+                         energy=float(n) ** (-1.5)) for n in SWEEP_N_GRID]
+    betas = [stepsize_theorem1(p.pc, ch, n, safety=0.9)
+             for p, ch, n in zip(probs, chs, SWEEP_N_GRID)]
+    mcs = [p.to_mc() for p in probs]
+    reqs = [SweepRequest(problem=mc, channels=[ch], algo="gbma",
+                         betas=[b], steps=STEPS, seeds=SEEDS)
+            for mc, ch, b in zip(mcs, chs, betas)]
+    cfg = McServeConfig(quantum_seeds=SEEDS)
+
+    def per_request():
+        # one dedicated call per client, same row-based path the server
+        # uses — what K clients pay without a coalescing front-end
+        return [run_mc(MCProblemBatch.stack([mc]), [ch], "gbma", [b],
+                       STEPS, SEEDS, shard_seeds=False).mean[0]
+                for mc, ch, b in zip(mcs, chs, betas)]
+
+    def coalesced():
+        return [r.mean[0] for r in serve_sync(reqs, cfg)]
+
+    t_per_cold, curves_per, compiles_per = _cold(per_request)
+    t_co_cold, curves_co, compiles_co = _cold(coalesced)
+    t_per_warm, _ = _warm(per_request)
+    t_co_warm, _ = _warm(coalesced)
+    stats = serve_sync.last_stats
+    rel = float(max(_rel(cc, cp)
+                    for cc, cp in zip(curves_co, curves_per)))
+    return {
+        "workload": {"problem": "msd_regression",
+                     "n_grid": list(SWEEP_N_GRID), "steps": STEPS,
+                     "seeds": SEEDS, "fading": "rayleigh",
+                     "requests": len(reqs),
+                     "timing": "cold compiles included; warm is "
+                               "steady-state best-of"},
+        "per_request_cold_s": round(t_per_cold, 4),
+        "per_request_compiles": compiles_per,
+        "coalesced_cold_s": round(t_co_cold, 4),
+        "coalesced_compiles": compiles_co,
+        "per_request_warm_s": round(t_per_warm, 4),
+        "coalesced_warm_s": round(t_co_warm, 4),
+        "cold_speedup": round(t_per_cold / t_co_cold, 2),
+        "warm_speedup": round(t_per_warm / t_co_warm, 2),
+        "batches": len(stats.batches),
+        "max_rel_curve_diff": rel,
+    }
+
+
 def _smoke_shrink():
     """CI-size constants: every path exercised, nothing slow."""
     global N, STEPS, SEEDS, SWEEP_N_GRID, SWEEP_M_GRID, LARGE, WARM_REPS, \
@@ -539,6 +606,7 @@ def run(verbose: bool = True, smoke: bool = False) -> list[str]:
     large = bench_large_chunked(warm_reps=1 if smoke else 3)
     placed = bench_large_chunked_placed(warm_reps=1 if smoke else 3)
     train_ota = bench_train_100m_ota()
+    serve = bench_serve_coalesce()
     # every entry carries the topology it ran on; engine entries also
     # record the ExecPlan they resolved to (the kwargs entries ran under
     # the shim's behavior-pinned plans)
@@ -549,6 +617,7 @@ def run(verbose: bool = True, smoke: bool = False) -> list[str]:
         ExecPlan(seed_chunk=LARGE["chunk"], keep_seed_curves=False),
         LARGE["seeds"])
     train_ota["topology"] = _topology()
+    serve["topology"] = _topology(ExecPlan(), SEEDS)
     record = {
         **single,
         "n_sweep": sweep,
@@ -557,6 +626,7 @@ def run(verbose: bool = True, smoke: bool = False) -> list[str]:
         "large_chunked": large,
         "large_chunked_placed": placed,
         "train_100m_ota": train_ota,
+        "serve_coalesce": serve,
         "timing_methodology": {
             "cold": "jit cache cleared, one call, compiles included",
             "warm": f"best of {WARM_REPS} after one untimed warm-up",
@@ -618,6 +688,19 @@ def run(verbose: bool = True, smoke: bool = False) -> list[str]:
         f"{train_ota['tiled_max_abs_diff']:.2e}",
         f"bench_montecarlo,train_ota_bf16_max_abs_diff,"
         f"{train_ota['bf16_max_abs_diff']:.2e}",
+        f"bench_montecarlo,serve_per_request_cold_s,"
+        f"{serve['per_request_cold_s']:.4f}"
+        f",compiles={serve['per_request_compiles']}",
+        f"bench_montecarlo,serve_coalesced_cold_s,"
+        f"{serve['coalesced_cold_s']:.4f}"
+        f",compiles={serve['coalesced_compiles']}",
+        f"bench_montecarlo,serve_per_request_warm_s,"
+        f"{serve['per_request_warm_s']:.4f}",
+        f"bench_montecarlo,serve_coalesced_warm_s,"
+        f"{serve['coalesced_warm_s']:.4f}",
+        f"bench_montecarlo,serve_warm_speedup,{serve['warm_speedup']:.2f}",
+        f"bench_montecarlo,serve_max_rel_curve_diff,"
+        f"{serve['max_rel_curve_diff']:.2e}",
         f"bench_montecarlo,json,{out_path}",
     ]
     if verbose:
@@ -644,6 +727,9 @@ def _smoke_assert(record: dict) -> None:
         ("train_100m_ota", record["train_100m_ota"]["tiled_warm_s"]),
         ("train_100m_ota_bf16",
          record["train_100m_ota"]["bf16_tiled_warm_s"]),
+        ("serve_coalesce", record["serve_coalesce"]["coalesced_warm_s"]),
+        ("serve_coalesce_per_request",
+         record["serve_coalesce"]["per_request_warm_s"]),
     ):
         if not (np.isfinite(warm) and warm > 0):
             problems.append(f"{key}: warm time {warm!r} not finite/positive")
@@ -674,6 +760,16 @@ def _smoke_assert(record: dict) -> None:
     ):
         if not rel <= tol:
             problems.append(f"{key}: max_rel_curve_diff {rel:.2e} > {tol}")
+    serve = record["serve_coalesce"]
+    if serve["coalesced_compiles"] != 1:
+        problems.append(
+            f"serve_coalesce: {serve['coalesced_compiles']} compiles for "
+            "one signature-compatible request set — coalescing must pay "
+            "exactly one compile")
+    if not serve["max_rel_curve_diff"] <= 1e-6:
+        problems.append(
+            f"serve_coalesce: demuxed curves deviate from dedicated calls "
+            f"by {serve['max_rel_curve_diff']:.2e} > 1e-6")
     if problems:
         print("SMOKE FAILURES:\n  " + "\n  ".join(problems),
               file=sys.stderr)

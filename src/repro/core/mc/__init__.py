@@ -29,9 +29,10 @@ from repro.core.mc.engine import (
     clear_cache,
     energy_to_target,
     run_mc,
+    slice_result,
     trace_count,
 )
-from repro.core.mc.exec import estimate_peak_bytes
+from repro.core.mc.exec import estimate_peak_bytes, static_signature
 from repro.core.mc.plan import ExecPlan, auto_plan, validate_plan
 from repro.core.mc.problems import (
     MCProblem,
@@ -81,6 +82,8 @@ __all__ = [
     "register_algo",
     "register_problem",
     "run_mc",
+    "slice_result",
+    "static_signature",
     "trace_count",
     "validate_plan",
 ]

@@ -537,6 +537,23 @@ def run_mc(
         bounds=bounds, plan=eff_plan)
 
 
+def slice_result(res: MCResult, rows: Union[slice, Sequence[int]]) -> MCResult:
+    """A per-row view of an `MCResult`: the given row slice (or index
+    sequence) of every (C, ...) array, `None` leaves passed through.
+
+    The row axis is the sweep axis — a coalesced batch (several callers'
+    sweeps packed into one engine call, `repro.serving.mc_server`) demuxes
+    back into per-caller results with one `slice_result` per caller. The
+    sliced arrays are numpy views of the batch result, and `plan` (a
+    whole-call property) rides along unchanged.
+    """
+    idx = rows if isinstance(rows, slice) else list(rows)
+    pick = lambda a: None if a is None else a[idx]
+    return MCResult(risks=pick(res.risks), mean=pick(res.mean),
+                    ci95=pick(res.ci95), cum_energy=pick(res.cum_energy),
+                    bounds=pick(res.bounds), plan=res.plan)
+
+
 def energy_to_target(res: MCResult, target: float) -> np.ndarray:
     """Per-row mean (over seeds) total transmitted energy until the risk
     curve first hits `target` (paper Fig. 6).

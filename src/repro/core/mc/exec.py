@@ -453,6 +453,33 @@ def _hash_array_leaf(h, name, value) -> None:
     h.update(np.ascontiguousarray(arr).tobytes())
 
 
+def _hash_static_kwargs(h, statics: dict) -> None:
+    """Feed STATIC facets (jit static_argnames material) into a hash:
+    callables by qualname — stable across processes, unlike their reprs —
+    everything else by repr. Shared by the resume fingerprint and the
+    serving compile signature."""
+    for name in sorted(statics):
+        v = statics[name]
+        if callable(v):
+            v = getattr(v, "__qualname__", repr(v))
+        h.update(f"{name}={v!r};".encode())
+
+
+def static_signature(statics: dict) -> str:
+    """Compile-cache signature of one engine call: a sha256 hex digest
+    over static facets only — shapes, flags, registry callables — the
+    things `_mc_core`'s jit cache keys on. Values may be numbers,
+    strings, bools, tuples or callables; array-valued workload data does
+    NOT belong here (rows that differ only in data share a signature —
+    that is the whole point). Two calls with equal signatures trace the
+    same compiled program, so a serving router
+    (`repro.serving.mc_server`) can coalesce them into one padded batch
+    and pay exactly one compile."""
+    h = hashlib.sha256()
+    _hash_static_kwargs(h, statics)
+    return h.hexdigest()
+
+
 def _workload_fingerprint(params, betas, theta0, seed_ints, data,
                           seed_chunk, n_rows, n_shards, row_shards,
                           core_kwargs) -> np.ndarray:
@@ -470,11 +497,7 @@ def _workload_fingerprint(params, betas, theta0, seed_ints, data,
     bit pattern.
     """
     h = hashlib.sha256()
-    for name in sorted(core_kwargs):
-        v = core_kwargs[name]
-        if callable(v):
-            v = getattr(v, "__qualname__", repr(v))
-        h.update(f"{name}={v!r};".encode())
+    _hash_static_kwargs(h, core_kwargs)
     for name in sorted(params):
         _hash_array_leaf(h, f"params.{name}", params[name])
     for name in sorted(data):

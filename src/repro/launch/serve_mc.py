@@ -1,0 +1,129 @@
+"""MC sweep-server launcher.
+
+`python -m repro.launch.serve_mc` runs a demo traffic mix through the
+coalescing server (`repro.serving.mc_server`) and prints the router's
+batching stats; `--selftest` additionally pins the two serving
+invariants on a mixed compatible/incompatible request set and exits
+nonzero on violation — the CI `serve-smoke` job runs this mode:
+
+  * K signature-compatible concurrent requests execute as ONE `_mc_core`
+    compile — `trace_count()` equals the number of distinct signatures;
+  * every demuxed per-request result matches a dedicated solo `run_mc`
+    call to <= 1e-6 relative.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from repro.core.channel import ChannelConfig
+from repro.core.mc import (
+    MCProblemBatch,
+    clear_cache,
+    quadratic_mc_problem,
+    run_mc,
+    trace_count,
+)
+from repro.serving.mc_server import McServeConfig, SweepRequest, serve_sync
+
+
+def _problem(n: int, dim: int, seed: int):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, dim)).astype(np.float32)
+    y = rng.normal(size=(n,)).astype(np.float32)
+    return quadratic_mc_problem(x, y, 0.1, np.zeros(dim, np.float32))
+
+
+def _demo_requests(steps: int, seeds: int) -> list:
+    """A mixed set: three coalescible quadratic/gbma sweeps differing
+    only in row data (N, noise, stepsize), plus one momentum request and
+    one longer-horizon request — three distinct signatures."""
+    mk = lambda n, noise, beta, seed: SweepRequest(
+        problem=_problem(n, 8, seed),
+        channels=[ChannelConfig(fading="rayleigh", noise_std=noise)],
+        algo="gbma", betas=[beta], steps=steps, seeds=seeds)
+    reqs = [mk(12, 0.5, 0.08, 0), mk(20, 1.0, 0.05, 1), mk(16, 0.1, 0.1, 2)]
+    reqs.append(SweepRequest(
+        problem=_problem(16, 8, 3),
+        channels=[ChannelConfig(fading="rayleigh")],
+        algo="momentum", betas=[0.05], steps=steps, seeds=seeds))
+    reqs.append(SweepRequest(
+        problem=_problem(12, 8, 4),
+        channels=[ChannelConfig(fading="rayleigh")],
+        algo="gbma", betas=[0.08], steps=steps + 10, seeds=seeds))
+    return reqs
+
+
+def _solo(req: SweepRequest):
+    """The dedicated-call reference: the same row-based engine path the
+    server uses, one request per call."""
+    return run_mc(MCProblemBatch.stack([req.problem]),
+                  req.channels, req.algo, req.betas,
+                  req.steps, req.seeds, seed0=req.seed0,
+                  batch_frac=req.batch_frac, n_antennas=req.n_antennas,
+                  power_budget=req.power_budget, momentum=req.momentum,
+                  theta0=req.theta0, shard_seeds=False)
+
+
+def _selftest(steps: int, seeds: int, quantum: int) -> int:
+    reqs = _demo_requests(steps, seeds)
+    n_sigs = 3
+    clear_cache()
+    results = serve_sync(reqs, McServeConfig(quantum_seeds=quantum))
+    compiles = trace_count()
+    stats = serve_sync.last_stats
+    ok = True
+    if compiles != n_sigs:
+        ok = False
+        print(f"FAIL: {compiles} compiles for {n_sigs} distinct "
+              f"signatures ({len(reqs)} requests)")
+    for i, (req, res) in enumerate(zip(reqs, results)):
+        solo = _solo(req)
+        rel = np.max(np.abs(res.risks - solo.risks)
+                     / np.maximum(np.abs(solo.risks), 1e-12))
+        if not (rel <= 1e-6):
+            ok = False
+            print(f"FAIL: request {i} demux mismatch, rel={rel:.3e}")
+    n_batches = len(stats.batches)
+    if n_batches != n_sigs:
+        ok = False
+        print(f"FAIL: {n_batches} batches for {n_sigs} signatures")
+    verdict = "PASS" if ok else "FAIL"
+    print(f"selftest {verdict}: {len(reqs)} requests -> {n_batches} "
+          f"batches, {compiles} compiles, batches="
+          f"{[(b['requests'], b['rows'], b['quanta']) for b in stats.batches]}")
+    return 0 if ok else 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--seeds", type=int, default=8)
+    ap.add_argument("--quantum", type=int, default=4,
+                    help="seeds per scheduling quantum")
+    ap.add_argument("--selftest", action="store_true",
+                    help="assert one compile per distinct signature and "
+                         "demux == solo run_mc; exit nonzero on failure")
+    args = ap.parse_args()
+    if args.selftest:
+        sys.exit(_selftest(args.steps, args.seeds, args.quantum))
+    reqs = _demo_requests(args.steps, args.seeds)
+    clear_cache()
+    t0 = time.time()
+    results = serve_sync(reqs, McServeConfig(quantum_seeds=args.quantum))
+    dt = time.time() - t0
+    stats = serve_sync.last_stats
+    print(f"{len(reqs)} requests -> {len(stats.batches)} coalesced "
+          f"batches, {trace_count()} compiles, {dt:.1f}s")
+    for b in stats.batches:
+        print(f"  sig={b['signature']} requests={b['requests']} "
+              f"rows={b['rows']} seeds={b['seeds']} quanta={b['quanta']}")
+    for i, res in enumerate(results):
+        print(f"  request {i}: final mean risk {res.mean[:, -1]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,650 @@
+"""MC-as-a-service: a coalescing sweep server over the Monte Carlo engine.
+
+The expensive artifact of a Monte Carlo sweep is the compiled executable:
+`_mc_core`'s jit cache keys on static shapes and flags, and everything
+else — channel parameters, stepsizes, problem data, node counts, antenna
+counts, minibatch fractions — is row *data* the padded batch axis already
+fuses. Serving many clients is therefore a request-*coalescing* problem,
+not a request-queueing one: requests whose static facets agree can be
+packed into ONE engine call and pay one compile between them, exactly the
+way the one-compile N/M/frac sweep benchmarks do, just across strangers.
+
+The server is three small pieces:
+
+* **Signature router.** Each `SweepRequest` maps to a compile-cache
+  signature (`exec.static_signature` — the same hashing machinery the
+  resume fingerprint uses, restricted to static facets: problem kind and
+  registry row fns, dim, fading family, steps, the (seeds, seed0) axis,
+  the algorithm, stochastic/antenna modes). Signature-equal requests
+  coalesce into one padded `run_mc` batch — their node counts, channel
+  params, stepsizes, antenna counts, minibatch fractions and power
+  budgets concatenate as row data; signature-distinct requests never
+  share a batch. K concurrent requests compile exactly once per distinct
+  signature (asserted by `trace_count()` in the tests and the
+  `serve_mc --selftest` CI job).
+
+* **Admission control.** `exec.estimate_peak_bytes` prices each request
+  (and each growing batch) against `McServeConfig.memory_budget_bytes`.
+  A request whose own single-quantum working set exceeds the budget is
+  rejected at `submit` with a typed `AdmissionError`; an affordable
+  request that would push a batch over the budget (or past
+  `max_batch_rows`) closes the batch and starts the next one — same
+  signature, but scheduled separately.
+
+* **Fairness-preserving preemption.** A batch does not run its whole
+  seed axis in one blocking call: the scheduler round-robins *seed
+  quanta* of `quantum_seeds` across all live batches — the same
+  seeds-are-data slicing `run_mc(seed_chunk=)` uses internally, driven
+  here from the event loop so a 1024-seed whale cannot starve 4-seed
+  minnows. Quantum k runs `run_mc(..., seeds=q, seed0=seed0 + off)`,
+  which replays exactly the seed streams `seed0 + off .. seed0 + off + q`
+  of the uninterrupted call (counter-based RNG), so sliced results are
+  identical to single-shot ones. Seed counts that are multiples of the
+  quantum share one compiled slice shape; a ragged final quantum costs
+  one extra compile.
+
+Results demux back per request with `mc.slice_result` row views of the
+batch `MCResult`. Clients cancelling mid-batch detach their future; the
+batch still completes for its other requests (and a batch whose every
+request cancelled is dropped without running its remaining quanta).
+
+Determinism knobs — the test harness (`tests/_serving_harness.py`) and
+the bench inject both: `clock` (only used for the coalesce window;
+`ManualClock` advances virtual time without wall-clock sleeps) and
+`executor` (`InlineExecutor` runs engine calls synchronously on the loop
+thread in deterministic order; the default `LoopExecutor` uses a thread
+so the event loop stays responsive under real traffic).
+
+See docs/serving.md for the request schema and semantics;
+`repro.launch.serve_mc` is the CLI front-end.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import hashlib
+import time
+from collections import deque
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.channel import ChannelConfig
+from repro.core.mc import exec as exec_mod
+from repro.core.mc.engine import MCResult, run_mc, slice_result
+from repro.core.mc.exec import estimate_peak_bytes, host_seed_stats
+from repro.core.mc.problems import PROBLEMS, MCProblem, MCProblemBatch
+from repro.core.mc.slots import ALGO_REGISTRY
+
+
+# --------------------------------------------------------------------------
+# errors
+# --------------------------------------------------------------------------
+class ServeError(Exception):
+    """Base class of the server's typed failures."""
+
+
+class RequestError(ServeError):
+    """Malformed request payload — raised at `submit`, before the request
+    ever reaches the router queue (fail fast, nothing to poison)."""
+
+
+class AdmissionError(ServeError):
+    """Request rejected by admission control: its own single-quantum
+    working set (analytic `estimate_peak_bytes`) exceeds the server's
+    memory budget."""
+
+
+# --------------------------------------------------------------------------
+# request schema
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SweepRequest:
+    """One client's sweep: rows (channel × stepsize, sharing one problem
+    kind and one algorithm) × a private seed axis.
+
+    problem:     a library-built `MCProblem` shared by every row, or one
+                 per row (node counts may differ — rows pad to the batch
+                 N_max like any engine sweep).
+    channels:    one `ChannelConfig` per row (one fading family per
+                 request; the family is static and part of the
+                 signature).
+    algo:        `ALGO_REGISTRY` name; static (part of the signature).
+    betas:       one stepsize per row (row data).
+    steps:       slot count (static).
+    seeds:       Monte Carlo seed count — the seed-axis *shape* is static,
+                 so it is part of the signature; the seed ints are data.
+    seed0:       first seed; seed s uses `jax.random.key(seed0 + s)`,
+                 the same stream a dedicated `run_mc` call would use.
+    batch_frac:  minibatch fraction (scalar or per row) for stochastic
+                 problem kinds; 1.0 = exact full-batch gradients.
+                 Full-batch and minibatch requests never coalesce (the
+                 no-sampling path is a different, cheaper program).
+    n_antennas:  edge antenna count M (scalar broadcast or per row;
+                 required for blind algorithms). Normalized to per-row
+                 data so M-heterogeneous requests coalesce.
+    power_budget: per-slot per-node transmit budget (scalar or per row;
+                 row data, only `blind_ec` rows enforce it).
+    momentum:    γ for momentum/nesterov rows (whole-call scalar, so it
+                 is part of the signature).
+    theta0:      shared starting iterate (whole-call data: requests must
+                 agree on it to coalesce, so its bytes fold into the
+                 signature); None = zeros.
+    """
+
+    problem: Union[MCProblem, Sequence[MCProblem]]
+    channels: Sequence[ChannelConfig]
+    algo: str
+    betas: Sequence[float]
+    steps: int
+    seeds: int
+    seed0: int = 0
+    batch_frac: Union[float, Sequence[float]] = 1.0
+    n_antennas: Optional[Union[int, Sequence[int]]] = None
+    power_budget: Optional[Union[float, Sequence[float]]] = None
+    momentum: float = 0.9
+    theta0: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class McServeConfig:
+    """Server policy knobs (all documented in docs/serving.md).
+
+    memory_budget_bytes: admission budget the analytic
+        `estimate_peak_bytes` working sets are priced against.
+    quantum_seeds: seeds per scheduling quantum — the preemption grain.
+        Requests whose seed count is a multiple of it share one compiled
+        slice shape.
+    max_batch_rows: hard cap on rows per coalesced engine call.
+    coalesce_window: seconds `serve_forever` waits after a wakeup for
+        straggler requests before draining (0 = drain immediately).
+    """
+
+    memory_budget_bytes: int = 2 * 2**30
+    quantum_seeds: int = 64
+    max_batch_rows: int = 256
+    coalesce_window: float = 0.0
+
+
+# --------------------------------------------------------------------------
+# injectable clock / executor
+# --------------------------------------------------------------------------
+class WallClock:
+    """Real time: `serve_forever`'s coalesce window sleeps on the loop."""
+
+    def time(self) -> float:
+        return time.monotonic()
+
+    async def sleep(self, dt: float) -> None:
+        await asyncio.sleep(dt)
+
+
+class LoopExecutor:
+    """Default executor: engine calls run in the loop's default thread
+    pool so the event loop keeps accepting submissions mid-quantum."""
+
+    async def run(self, fn, info: Optional[dict] = None):
+        return await asyncio.get_running_loop().run_in_executor(None, fn)
+
+
+class InlineExecutor:
+    """Deterministic executor: the engine call runs synchronously on the
+    loop thread — quanta execute in exactly the order the scheduler
+    issues them. One cooperative yield per quantum lets submissions that
+    arrive mid-drain enqueue (and be served in the same drain pass)
+    without introducing any thread or timing nondeterminism. Used by the
+    tests, the bench and `serve_sync`."""
+
+    async def run(self, fn, info: Optional[dict] = None):
+        await asyncio.sleep(0)
+        return fn()
+
+
+# --------------------------------------------------------------------------
+# internal records
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Pending:
+    req: "_NormRequest"
+    future: asyncio.Future
+
+
+@dataclasses.dataclass(frozen=True)
+class _NormRequest:
+    """Validated, normalized request: per-row tuples throughout."""
+
+    problems: tuple  # one MCProblem per row
+    channels: tuple
+    algo: str
+    betas: tuple
+    steps: int
+    seeds: int
+    seed0: int
+    fracs: Optional[tuple]  # None = exact full-batch (no sampling path)
+    m_per_row: Optional[tuple]
+    budgets: Optional[tuple]
+    momentum: float
+    theta0: Optional[np.ndarray]
+    signature: str
+    b_max: int
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.channels)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Router observability, asserted on by the deterministic tests."""
+
+    admitted: int = 0
+    rejected: int = 0
+    cancelled: int = 0
+    failed_batches: int = 0
+    batches: list = dataclasses.field(default_factory=list)
+
+
+class _Job:
+    """One coalesced batch in flight: merged rows + a seed cursor."""
+
+    def __init__(self, pending: Sequence[_Pending], cfg: McServeConfig):
+        self.pending = list(pending)
+        self.cfg = cfg
+        first = pending[0].req
+        self.signature = first.signature
+        self.algo = first.algo
+        self.steps, self.seeds = first.steps, first.seeds
+        self.seed0 = first.seed0
+        self.momentum, self.theta0 = first.momentum, first.theta0
+        self.problems, self.channels, self.betas = [], [], []
+        self.spans = []
+        fracs, m_rows, budgets = [], [], []
+        off = 0
+        for p in pending:
+            r = p.req
+            self.problems += list(r.problems)
+            self.channels += list(r.channels)
+            self.betas += list(r.betas)
+            fracs += list(r.fracs) if r.fracs is not None else []
+            m_rows += list(r.m_per_row) if r.m_per_row is not None else []
+            budgets += list(r.budgets if r.budgets is not None
+                            else (float("inf"),) * r.n_rows)
+            self.spans.append((off, off + r.n_rows))
+            off += r.n_rows
+        self.n_rows = off
+        self.fracs = tuple(fracs) if first.fracs is not None else None
+        self.m_per_row = tuple(m_rows) if first.m_per_row is not None \
+            else None
+        self.budgets = (tuple(budgets)
+                        if any(np.isfinite(b) for b in budgets) else None)
+        self.off = 0  # seed cursor
+        self.quanta_run = 0
+        self.risks = np.empty((off, self.seeds, self.steps + 1), np.float32)
+        self.cum_e = np.empty((off, self.seeds, self.steps), np.float32)
+
+    @property
+    def done(self) -> bool:
+        return self.off >= self.seeds
+
+    @property
+    def abandoned(self) -> bool:
+        """Every client detached (cancelled) — remaining quanta are
+        freed instead of computing results nobody will read."""
+        return all(p.future.done() for p in self.pending)
+
+
+# --------------------------------------------------------------------------
+# the server
+# --------------------------------------------------------------------------
+class McSweepServer:
+    """Asyncio front-end: `await submit(request)` -> per-request
+    `MCResult`. Drive it either with `start()`/`stop()` (the
+    `serve_forever` router task) or by calling `drain()` explicitly
+    after a round of submissions (tests, `serve_sync`)."""
+
+    def __init__(self, cfg: McServeConfig = McServeConfig(), *,
+                 clock=None, executor=None):
+        self.cfg = cfg
+        self.clock = clock if clock is not None else WallClock()
+        self.executor = executor if executor is not None else LoopExecutor()
+        self.stats = ServeStats()
+        self._queue: list[_Pending] = []
+        self._wakeup: Optional[asyncio.Event] = None
+        self._task: Optional[asyncio.Task] = None
+        self._running = False
+
+    # ---- client surface -------------------------------------------------
+    async def submit(self, request: SweepRequest) -> MCResult:
+        """Validate, admit and enqueue a request; resolves with this
+        request's own `MCResult` slice once its batch completes. Raises
+        `RequestError`/`AdmissionError` before enqueueing — a bad request
+        never reaches the router queue."""
+        norm = self._normalize(request)
+        self._admit(norm)
+        self.stats.admitted += 1
+        fut = asyncio.get_running_loop().create_future()
+        self._queue.append(_Pending(req=norm, future=fut))
+        if self._wakeup is not None:
+            self._wakeup.set()
+        return await fut
+
+    def start(self) -> asyncio.Task:
+        """Start the router (`serve_forever`) on the running loop."""
+        self._wakeup = asyncio.Event()
+        self._running = True
+        self._task = asyncio.ensure_future(self.serve_forever())
+        return self._task
+
+    async def stop(self) -> None:
+        self._running = False
+        if self._wakeup is not None:
+            self._wakeup.set()
+        if self._task is not None:
+            await self._task
+            self._task = None
+
+    async def serve_forever(self) -> None:
+        """Router loop: wake on submission, optionally hold the coalesce
+        window open for stragglers, then drain the queue."""
+        while self._running:
+            await self._wakeup.wait()
+            self._wakeup.clear()
+            if not self._running:
+                break
+            if self.cfg.coalesce_window > 0:
+                await self.clock.sleep(self.cfg.coalesce_window)
+            await self.drain()
+
+    async def drain(self) -> None:
+        """Process everything queued now (and anything that arrives while
+        draining): coalesce by signature, then round-robin one seed
+        quantum per job until every job finishes."""
+        while self._queue:
+            pending, self._queue = self._queue, []
+            ready = deque(_Job(group, self.cfg)
+                          for group in self._coalesce(pending))
+            while ready:
+                job = ready.popleft()
+                if job.abandoned:
+                    self.stats.cancelled += len(job.pending)
+                    continue
+                if not await self._run_quantum(job):
+                    continue  # batch failed; futures already resolved
+                if job.done:
+                    self._finish(job)
+                else:
+                    ready.append(job)
+
+    # ---- validation / signature / admission -----------------------------
+    def _normalize(self, req: SweepRequest) -> _NormRequest:
+        if not isinstance(req, SweepRequest):
+            raise RequestError(
+                f"expected a SweepRequest, got {type(req).__name__}")
+        channels = tuple(req.channels)
+        n_rows = len(channels)
+        if n_rows == 0:
+            raise RequestError("request has no rows (empty channels)")
+        if not all(isinstance(c, ChannelConfig) for c in channels):
+            raise RequestError("channels must be ChannelConfig instances")
+        if len({c.fading for c in channels}) != 1:
+            raise RequestError(
+                "one request = one fading family; split per family")
+        probs = [req.problem] if isinstance(req.problem, MCProblem) \
+            else list(req.problem)
+        if not probs or not all(isinstance(p, MCProblem) for p in probs):
+            raise RequestError("problem must be MCProblem(s)")
+        if len(probs) == 1:
+            probs = probs * n_rows
+        if len(probs) != n_rows:
+            raise RequestError(
+                f"need one problem per row: {len(probs)} vs C={n_rows}")
+        kind = probs[0].kind
+        if any(p.kind != kind for p in probs):
+            raise RequestError("rows must share one problem kind")
+        if kind not in PROBLEMS or any(p.data is None for p in probs):
+            raise RequestError(
+                f"problem kind {kind!r} is not a registered library kind "
+                "— the server batches strangers' rows, which needs the "
+                "row-based PROBLEMS registry path")
+        if len({p.dim for p in probs}) != 1:
+            raise RequestError("rows must share the problem dim")
+        shapes0 = {k: np.shape(v)[1:] for k, v in probs[0].data.items()}
+        for p in probs[1:]:
+            if {k: np.shape(v)[1:] for k, v in p.data.items()} != shapes0:
+                raise RequestError(
+                    "rows must agree on every non-node data shape "
+                    "(only the node axis pads)")
+        betas = tuple(float(b) for b in np.atleast_1d(
+            np.asarray(req.betas, dtype=np.float64)))
+        if len(betas) != n_rows:
+            raise RequestError(
+                f"need one stepsize per row: {len(betas)} vs C={n_rows}")
+        if req.algo not in ALGO_REGISTRY:
+            raise RequestError(
+                f"unknown algo {req.algo!r}; expected one of "
+                f"{tuple(ALGO_REGISTRY)}")
+        if not (isinstance(req.steps, int) and req.steps > 0):
+            raise RequestError(f"steps must be a positive int, "
+                               f"got {req.steps!r}")
+        if not (isinstance(req.seeds, int) and req.seeds > 0):
+            raise RequestError(f"seeds must be a positive int, "
+                               f"got {req.seeds!r}")
+        # minibatch fractions -> per-row tuple, or None for full batch
+        fr = req.batch_frac
+        fracs = tuple(float(f) for f in (
+            (fr,) * n_rows if isinstance(fr, (int, float)) else fr))
+        if len(fracs) != n_rows:
+            raise RequestError(
+                f"need one batch_frac per row: {len(fracs)} vs C={n_rows}")
+        if any(not (0.0 < f <= 1.0) for f in fracs):
+            raise RequestError(f"batch_frac must be in (0, 1], got {fracs}")
+        b_max = 0
+        if all(f == 1.0 for f in fracs):
+            fracs = None
+        else:
+            spec = PROBLEMS[kind]
+            if spec.stochastic_grad_row is None:
+                raise RequestError(
+                    f"batch_frac < 1 needs a stochastic problem kind, "
+                    f"got {kind!r}")
+            k = probs[0].data[spec.sample_axis_field].shape[-2]
+            b_max = max(max(1, int(round(f * k))) for f in fracs)
+        # antennas -> per-row tuple (merged as data), or None
+        m = req.n_antennas
+        if m is None:
+            m_per_row = None
+            if ALGO_REGISTRY[req.algo].blind:
+                raise RequestError(
+                    f"algo {req.algo!r} is blind and needs n_antennas")
+        else:
+            m_per_row = tuple(int(x) for x in (
+                (m,) * n_rows if isinstance(m, (int, np.integer)) else m))
+            if len(m_per_row) != n_rows:
+                raise RequestError(f"need one antenna count per row: "
+                                   f"{len(m_per_row)} vs C={n_rows}")
+            if any(x < 1 for x in m_per_row):
+                raise RequestError(f"antenna counts must be >= 1: "
+                                   f"{m_per_row}")
+        pb = req.power_budget
+        if pb is None:
+            budgets = None
+        else:
+            budgets = tuple(float(b) for b in (
+                (pb,) * n_rows if isinstance(pb, (int, float)) else pb))
+            if len(budgets) != n_rows:
+                raise RequestError(f"need one power budget per row: "
+                                   f"{len(budgets)} vs C={n_rows}")
+        theta0 = None if req.theta0 is None \
+            else np.asarray(req.theta0, np.float32)
+        if theta0 is not None and theta0.shape != (probs[0].dim,):
+            raise RequestError(
+                f"theta0 shape {theta0.shape} != (dim,) = "
+                f"({probs[0].dim},)")
+        sig = self._signature(kind, probs[0], req.algo, req.steps,
+                              req.seeds, req.seed0, channels[0].fading,
+                              fracs is not None, m_per_row is not None,
+                              req.momentum, theta0)
+        return _NormRequest(
+            problems=tuple(probs), channels=channels, algo=req.algo,
+            betas=betas, steps=int(req.steps), seeds=int(req.seeds),
+            seed0=int(req.seed0), fracs=fracs, m_per_row=m_per_row,
+            budgets=budgets, momentum=float(req.momentum), theta0=theta0,
+            signature=sig, b_max=b_max)
+
+    @staticmethod
+    def _signature(kind, prob, algo, steps, seeds, seed0, fading,
+                   stochastic, antennas, momentum, theta0) -> str:
+        """The request's compile-cache signature (module docstring):
+        static facets only, via `exec.static_signature`. Node counts,
+        channel params, stepsizes, antenna counts, fractions and budgets
+        are deliberately absent — they are row data the padded batch
+        fuses. Non-node data shapes (e.g. the per-node sample count of a
+        stochastic kind) are static, so they are in."""
+        spec = PROBLEMS[kind]
+        data_shapes = tuple(sorted(
+            (name, tuple(np.shape(v)[1:]))
+            for name, v in prob.data.items()))
+        th = None if theta0 is None else hashlib.sha256(
+            np.ascontiguousarray(theta0).tobytes()).hexdigest()
+        return exec_mod.static_signature({
+            "kind": kind, "grad_fn": spec.grad_row,
+            "risk_fn": spec.risk_row, "dim": prob.dim,
+            "data_shapes": data_shapes, "fading": fading,
+            "steps": steps, "seeds": seeds, "seed0": seed0, "algo": algo,
+            "stochastic": stochastic, "antennas": antennas,
+            "momentum": momentum, "theta0": th,
+        })
+
+    def _estimate(self, reqs: Sequence[_NormRequest]) -> int:
+        """Analytic single-quantum working set of one coalesced batch."""
+        n_rows = sum(r.n_rows for r in reqs)
+        n_max = max(p.n_nodes for r in reqs for p in r.problems)
+        m_sizes = tuple(sorted({m for r in reqs
+                                for m in (r.m_per_row or ())}))
+        first = reqs[0]
+        est = estimate_peak_bytes(
+            n_rows=n_rows, seeds=first.seeds, steps=first.steps,
+            n_max=n_max, dim=first.problems[0].dim,
+            algo_set=(first.algo,),
+            seed_chunk=min(self.cfg.quantum_seeds, first.seeds),
+            m_sizes=m_sizes, b_max=first.b_max, keep_seed_curves=True)
+        return est["device_peak_bytes"]
+
+    def _admit(self, norm: _NormRequest) -> None:
+        est = self._estimate([norm])
+        if est > self.cfg.memory_budget_bytes:
+            self.stats.rejected += 1
+            raise AdmissionError(
+                f"request needs ~{est} bytes per seed quantum "
+                f"(analytic estimate_peak_bytes at quantum_seeds="
+                f"{self.cfg.quantum_seeds}) > budget "
+                f"{self.cfg.memory_budget_bytes} — shrink the request "
+                "(rows / nodes / dim) or raise the server budget")
+
+    # ---- coalescing -----------------------------------------------------
+    def _coalesce(self, pending: Sequence[_Pending]) -> list:
+        """Group signature-equal requests (submission order preserved),
+        then pack each group into batches under the admission budget and
+        the row cap. Returns a list of pending-lists, one per batch."""
+        groups: dict[str, list[_Pending]] = {}
+        for p in pending:
+            groups.setdefault(p.req.signature, []).append(p)
+        batches = []
+        for group in groups.values():
+            cur: list[_Pending] = []
+            for p in group:
+                trial = [q.req for q in cur] + [p.req]
+                rows = sum(r.n_rows for r in trial)
+                if cur and (rows > self.cfg.max_batch_rows
+                            or self._estimate(trial)
+                            > self.cfg.memory_budget_bytes):
+                    batches.append(cur)
+                    cur = [p]
+                else:
+                    cur.append(p)
+            batches.append(cur)
+        return batches
+
+    # ---- execution ------------------------------------------------------
+    def _engine_call(self, job: _Job, off: int, q: int):
+        res = run_mc(
+            MCProblemBatch.stack(job.problems), job.channels, job.algo,
+            job.betas, job.steps, q, seed0=job.seed0 + off,
+            theta0=job.theta0, n_antennas=job.m_per_row,
+            power_budget=job.budgets,
+            batch_frac=job.fracs if job.fracs is not None else 1.0,
+            momentum=job.momentum, shard_seeds=False)
+        return res.risks, res.cum_energy
+
+    async def _run_quantum(self, job: _Job) -> bool:
+        """One scheduling quantum of `job`; False when the batch failed
+        (its futures carry the exception) and must leave the ring."""
+        off = job.off
+        q = min(self.cfg.quantum_seeds, job.seeds - off)
+        info = {"signature": job.signature[:12], "off": off, "quantum": q,
+                "rows": job.n_rows}
+        try:
+            risks, cum_e = await self.executor.run(
+                lambda: self._engine_call(job, off, q), info=info)
+        except Exception as e:  # noqa: BLE001 — routed to the clients
+            self.stats.failed_batches += 1
+            for p in job.pending:
+                if not p.future.done():
+                    p.future.set_exception(
+                        ServeError(f"batch {job.signature[:12]} failed "
+                                   f"at seed offset {off}: {e!r}"))
+            return False
+        job.risks[:, off:off + q] = risks
+        job.cum_e[:, off:off + q] = cum_e
+        job.off = off + q
+        job.quanta_run += 1
+        return True
+
+    def _finish(self, job: _Job) -> None:
+        mean, ci95 = host_seed_stats(job.risks)
+        full = MCResult(risks=job.risks, mean=mean.astype(np.float32),
+                        ci95=ci95.astype(np.float32), cum_energy=job.cum_e,
+                        bounds=None, plan=None)
+        cancelled = 0
+        for p, (lo, hi) in zip(job.pending, job.spans):
+            if p.future.done():  # client cancelled mid-batch
+                cancelled += 1
+                continue
+            p.future.set_result(slice_result(full, slice(lo, hi)))
+        self.stats.cancelled += cancelled
+        self.stats.batches.append({
+            "signature": job.signature[:12],
+            "requests": len(job.pending),
+            "rows": job.n_rows,
+            "seeds": job.seeds,
+            "quanta": job.quanta_run,
+            "cancelled": cancelled,
+        })
+
+
+# --------------------------------------------------------------------------
+# synchronous convenience front-end
+# --------------------------------------------------------------------------
+def serve_sync(requests: Sequence[SweepRequest],
+               cfg: McServeConfig = None,
+               server: McSweepServer = None) -> list:
+    """One-shot synchronous façade: submit every request, coalesce, run
+    to completion on a private event loop with the deterministic inline
+    executor, return per-request `MCResult`s in submission order. The
+    entry point the bench (`serve_coalesce`) and `serve_mc` CLI use."""
+
+    async def go():
+        srv = server if server is not None else McSweepServer(
+            cfg if cfg is not None else McServeConfig(),
+            executor=InlineExecutor())
+        tasks = [asyncio.ensure_future(srv.submit(r)) for r in requests]
+        await asyncio.sleep(0)  # run each submit up to its future await
+        await srv.drain()
+        return await asyncio.gather(*tasks), srv
+
+    results, srv = asyncio.run(go())
+    serve_sync.last_stats = srv.stats  # introspection for bench/selftest
+    return results
+
+
+serve_sync.last_stats = None

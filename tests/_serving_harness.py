@@ -1,0 +1,126 @@
+"""Deterministic test harness for the MC sweep server.
+
+The server takes two injection points (`repro.serving.mc_server`
+docstring): a clock and an executor. The harness provides determinism-
+first implementations of both, plus a scripted client, so scheduling and
+fault tests run without wall-clock sleeps, threads, or timing races:
+
+* `ManualClock`   — virtual time: `sleep(dt)` advances a counter and
+                    yields once (`asyncio.sleep(0)`), recording every
+                    requested sleep for assertions. A test that "waits
+                    out" the coalesce window finishes in microseconds.
+* `TracingExecutor` — the server's deterministic `InlineExecutor` plus a
+                    call log (the router's quantum `info` dicts, in
+                    exactly the order the scheduler issued them) and
+                    scripted `after_call(k, hook)` hooks — the
+                    fault-injection point for "client cancels after
+                    quantum k" scenarios.
+* `ScriptedClient` — one client's lifecycle as explicit steps: `submit`
+                    wraps the server coroutine in a task, `cancel`
+                    detaches it mid-batch, `result`/`error` read the
+                    outcome.
+* `submit_all`    — enqueue several submissions and run each up to its
+                    internal future await (one `asyncio.sleep(0)` tick),
+                    so a following `server.drain()` sees them all queued.
+* `run`           — `asyncio.run` shorthand: every test drives its own
+                    private event loop to completion; nothing leaks
+                    between tests.
+"""
+from __future__ import annotations
+
+import asyncio
+
+from repro.serving.mc_server import InlineExecutor
+
+
+class ManualClock:
+    """Virtual time. `sleep` never touches the wall clock — it advances
+    `now`, appends to `sleeps`, and yields control once so concurrently
+    scheduled submissions interleave exactly as they would under a real
+    sleep."""
+
+    def __init__(self):
+        self.now = 0.0
+        self.sleeps = []
+
+    def time(self) -> float:
+        return self.now
+
+    async def sleep(self, dt: float) -> None:
+        self.sleeps.append(dt)
+        self.now += dt
+        await asyncio.sleep(0)
+
+
+class TracingExecutor(InlineExecutor):
+    """Inline (synchronous, deterministic order) execution with a call
+    trace and scripted fault hooks.
+
+    calls:   list of the router's `info` dicts — one per engine quantum,
+             in issue order: {"signature", "off", "quantum", "rows"}.
+    after_call(k, hook): run `hook()` right after the k-th (0-based)
+             quantum completes — e.g. cancelling a client mid-batch.
+    fail_when(pred, exc): raise `exc` instead of running any quantum
+             whose `info` satisfies `pred` — scripted engine failure.
+    """
+
+    def __init__(self):
+        self.calls = []
+        self._hooks = {}
+        self._fail = None
+
+    def after_call(self, k: int, hook) -> None:
+        self._hooks.setdefault(k, []).append(hook)
+
+    def fail_when(self, pred, exc: Exception) -> None:
+        self._fail = (pred, exc)
+
+    async def run(self, fn, info=None):
+        idx = len(self.calls)
+        self.calls.append(dict(info or {}))
+        if self._fail is not None and self._fail[0](info or {}):
+            raise self._fail[1]
+        out = await super().run(fn, info=info)
+        for hook in self._hooks.get(idx, ()):
+            hook()
+        return out
+
+
+class ScriptedClient:
+    """One client, scripted: submit -> (optionally cancel) -> result."""
+
+    def __init__(self, server, request):
+        self.server = server
+        self.request = request
+        self.task = None
+
+    def submit(self) -> "ScriptedClient":
+        self.task = asyncio.ensure_future(self.server.submit(self.request))
+        return self
+
+    def cancel(self) -> None:
+        self.task.cancel()
+
+    @property
+    def done(self) -> bool:
+        return self.task.done()
+
+    def result(self):
+        return self.task.result()
+
+    def error(self):
+        return self.task.exception()
+
+
+async def submit_all(server, requests) -> list:
+    """Enqueue every request and tick the loop once, so each submission
+    has validated, been admitted, and parked on its future — the state
+    `server.drain()` coalesces from."""
+    tasks = [asyncio.ensure_future(server.submit(r)) for r in requests]
+    await asyncio.sleep(0)
+    return tasks
+
+
+def run(coro):
+    """Drive one test coroutine on a fresh private event loop."""
+    return asyncio.run(coro)

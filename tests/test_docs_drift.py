@@ -129,6 +129,38 @@ def test_performance_md_documents_the_exec_plan_surface():
         "the documented large_chunked_placed entry left the benchmark")
 
 
+def test_serving_md_pins_the_mc_server_surface():
+    """docs/serving.md is the sweep-server contract: every request and
+    config field must appear in its schema/knob tables, the typed errors
+    and the coalescing/preemption vocabulary must be documented, the
+    harness pieces it names must exist, and the README must link it."""
+    import dataclasses
+
+    from repro.serving.mc_server import McServeConfig, SweepRequest
+
+    text = (ROOT / "docs" / "serving.md").read_text()
+    for f in dataclasses.fields(SweepRequest):
+        assert f"`{f.name}`" in text, (
+            f"SweepRequest.{f.name} is a request field but "
+            "docs/serving.md's schema table does not document it")
+    for f in dataclasses.fields(McServeConfig):
+        assert f"`{f.name}`" in text, (
+            f"McServeConfig.{f.name} is a server knob but "
+            "docs/serving.md does not document it")
+    for name in ("static_signature", "estimate_peak_bytes",
+                 "slice_result", "host_seed_stats", "trace_count",
+                 "AdmissionError", "RequestError", "ServeError",
+                 "quantum", "coalesc", "serve_sync", "serve_forever",
+                 "InlineExecutor", "ManualClock", "TracingExecutor",
+                 "serve_coalesce", "--selftest"):
+        assert name in text, (
+            f"docs/serving.md must document {name!r} (signature/"
+            "admission/preemption/harness sections)")
+    assert (ROOT / "tests" / "_serving_harness.py").is_file()
+    assert "serving.md" in (ROOT / "README.md").read_text(), (
+        "README.md must cross-link docs/serving.md")
+
+
 def test_training_md_pins_the_transport_surface():
     """docs/training.md is the training-route contract: every registry
     aggregator must appear in its routing table, the transport knobs it

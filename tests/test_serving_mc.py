@@ -1,0 +1,494 @@
+"""MC sweep server: coalescing, scheduling and fault semantics.
+
+Every test here is deterministic — no wall-clock sleeps, no threads:
+async scenarios run on a private event loop (`_serving_harness.run`)
+with the inline executor (engine quanta execute synchronously in issue
+order) and, where the coalesce window matters, a manual clock.
+
+The load-bearing assertions:
+
+  * K signature-compatible concurrent requests execute as ONE `_mc_core`
+    compile (`trace_count()`), and each demuxed per-request result
+    matches a dedicated solo `run_mc` to <= 1e-6 (acceptance criterion).
+  * Incompatible signatures never merge (property test over problem ×
+    algo × N × fading × batch_frac).
+  * Seed-quantum round-robin: a many-seed whale's batch is preempted so
+    small batches finish first.
+  * Faults stay contained: a cancelled client detaches without touching
+    batchmates, an over-budget request is rejected at submit with a
+    typed error, malformed payloads never reach the queue, an engine
+    failure resolves only its own batch's futures.
+"""
+from __future__ import annotations
+
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core.channel import ChannelConfig
+from repro.core.mc import (
+    MCProblemBatch,
+    clear_cache,
+    logistic_mc_problem,
+    quadratic_mc_problem,
+    run_mc,
+    trace_count,
+)
+from repro.serving.mc_server import (
+    AdmissionError,
+    InlineExecutor,
+    McServeConfig,
+    McSweepServer,
+    RequestError,
+    ServeError,
+    SweepRequest,
+    serve_sync,
+)
+from tests._hypothesis_compat import given, settings, strategies
+from tests._serving_harness import (
+    ManualClock,
+    ScriptedClient,
+    TracingExecutor,
+    run,
+    submit_all,
+)
+
+STEPS, SEEDS, DIM = 6, 4, 3
+
+
+# --------------------------------------------------------------------------
+# request builders
+# --------------------------------------------------------------------------
+def _quad(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, DIM)).astype(np.float32)
+    y = rng.normal(size=(n,)).astype(np.float32)
+    return quadratic_mc_problem(x, y, 0.1, np.zeros(DIM, np.float32))
+
+
+def _logistic(n: int, seed: int = 0, k: int = 4):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n * k, DIM))
+    y = np.sign(rng.normal(size=(n * k,))) + (rng.normal(size=(n * k,)) == 0)
+    return logistic_mc_problem(x, y, n, 0.1)
+
+
+def _req(n=8, noise=0.5, beta=0.08, *, kind="quadratic", algo="gbma",
+         fading="rayleigh", steps=STEPS, seeds=SEEDS, seed0=0,
+         batch_frac=1.0, n_antennas=None, data_seed=0, **kw):
+    prob = _quad(n, data_seed) if kind == "quadratic" \
+        else _logistic(n, data_seed)
+    return SweepRequest(
+        problem=prob, channels=[ChannelConfig(fading=fading,
+                                              noise_std=noise)],
+        algo=algo, betas=[beta], steps=steps, seeds=seeds, seed0=seed0,
+        batch_frac=batch_frac, n_antennas=n_antennas, **kw)
+
+
+def _solo(req: SweepRequest):
+    """Dedicated-call reference on the same row-based engine path."""
+    probs = list(req.problem) if isinstance(req.problem, (list, tuple)) \
+        else [req.problem] * len(req.channels)
+    return run_mc(MCProblemBatch.stack(probs), req.channels, req.algo,
+                  req.betas, req.steps, req.seeds, seed0=req.seed0,
+                  batch_frac=req.batch_frac, n_antennas=req.n_antennas,
+                  power_budget=req.power_budget, momentum=req.momentum,
+                  theta0=req.theta0, shard_seeds=False)
+
+
+def _assert_matches_solo(res, req, tol=1e-6):
+    solo = _solo(req)
+    np.testing.assert_allclose(res.risks, solo.risks, rtol=tol, atol=tol)
+    np.testing.assert_allclose(res.mean, solo.mean, rtol=tol, atol=tol)
+    np.testing.assert_allclose(res.ci95, solo.ci95, rtol=tol, atol=tol)
+    np.testing.assert_allclose(res.cum_energy, solo.cum_energy,
+                               rtol=tol, atol=tol)
+
+
+def _sig(req) -> str:
+    return McSweepServer()._normalize(req).signature
+
+
+# --------------------------------------------------------------------------
+# coalescing correctness
+# --------------------------------------------------------------------------
+def test_compatible_requests_coalesce_to_one_compile_and_demux():
+    """Three requests differing only in row data (N, noise, stepsize)
+    are one batch, one compile, and each client's slice matches its
+    dedicated solo run — the acceptance criterion."""
+    reqs = [_req(6, 0.5, 0.08, data_seed=0),
+            _req(12, 1.0, 0.05, data_seed=1),
+            _req(9, 0.1, 0.10, data_seed=2)]
+    assert len({_sig(r) for r in reqs}) == 1
+    clear_cache()
+    results = serve_sync(reqs, McServeConfig(quantum_seeds=SEEDS))
+    assert trace_count() == 1
+    stats = serve_sync.last_stats
+    assert [b["requests"] for b in stats.batches] == [3]
+    assert stats.batches[0]["rows"] == 3
+    for res, req in zip(results, reqs):
+        assert res.risks.shape == (1, SEEDS, STEPS + 1)
+        _assert_matches_solo(res, req)
+
+
+def test_one_compile_per_distinct_signature():
+    """Five mixed requests spanning three real static signatures (steps,
+    algo) compile exactly three times."""
+    reqs = [
+        _req(6, 0.5, 0.08, data_seed=0),
+        _req(10, 1.0, 0.05, data_seed=1),
+        _req(8, 0.3, 0.08, algo="momentum", data_seed=2),
+        _req(8, 0.5, 0.08, steps=STEPS + 4, data_seed=3),
+        _req(7, 0.2, 0.06, data_seed=4),
+    ]
+    assert len({_sig(r) for r in reqs}) == 3
+    clear_cache()
+    serve_sync(reqs, McServeConfig(quantum_seeds=SEEDS))
+    assert trace_count() == 3
+    stats = serve_sync.last_stats
+    assert sorted(b["requests"] for b in stats.batches) == [1, 1, 3]
+
+
+@settings(max_examples=4, deadline=None)
+@given(kind=strategies.sampled_from(("quadratic", "logistic")),
+       n_a=strategies.sampled_from((6, 10)),
+       n_b=strategies.sampled_from((6, 10)),
+       algo=strategies.sampled_from(("gbma", "momentum")),
+       fading=strategies.sampled_from(("rayleigh", "equal")),
+       minibatch=strategies.booleans())
+def test_property_coalescing_equivalence(kind, n_a, n_b, algo, fading,
+                                         minibatch):
+    """Property: any two compatible requests (same problem kind, algo,
+    fading, steps, seeds, batch_frac mode; any N mix) coalesce into one
+    batch whose demuxed curves match solo runs <= 1e-6; a request whose
+    signature differs (longer horizon) is never merged with them."""
+    frac = 0.5 if (minibatch and kind == "logistic") else 1.0
+    a = _req(n_a, 0.5, 0.08, kind=kind, algo=algo, fading=fading,
+             batch_frac=frac, data_seed=0)
+    b = _req(n_b, 1.0, 0.05, kind=kind, algo=algo, fading=fading,
+             batch_frac=frac, data_seed=1)
+    other = _req(n_a, 0.5, 0.08, kind=kind, algo=algo, fading=fading,
+                 batch_frac=frac, steps=STEPS + 4, data_seed=2)
+    assert _sig(a) == _sig(b) != _sig(other)
+    results = serve_sync([a, b, other], McServeConfig(quantum_seeds=SEEDS))
+    stats = serve_sync.last_stats
+    assert [b_["requests"] for b_ in stats.batches] == [2, 1]
+    assert stats.batches[0]["rows"] == 2
+    for res, req in zip(results, [a, b, other]):
+        _assert_matches_solo(res, req)
+
+
+def test_full_batch_never_merges_with_minibatch():
+    """batch_frac=1.0 rides the exact no-sampling path; merging it into
+    a frac<1 batch would silently convert it to with-replacement
+    sampling, so the stochastic mode is a signature facet."""
+    exact = _req(6, kind="logistic", batch_frac=1.0)
+    mini = _req(6, kind="logistic", batch_frac=0.5)
+    assert _sig(exact) != _sig(mini)
+    serve_sync([exact, mini], McServeConfig(quantum_seeds=SEEDS))
+    assert [b["requests"] for b in serve_sync.last_stats.batches] == [1, 1]
+
+
+def test_multi_row_requests_and_antenna_rows_coalesce():
+    """Requests carrying several rows each (their own mini-sweeps) and
+    per-row antenna counts still pack into one batch and demux whole."""
+    a = SweepRequest(problem=_quad(6, 0), algo="gbma",
+                     channels=[ChannelConfig(noise_std=0.5),
+                               ChannelConfig(noise_std=1.0)],
+                     betas=[0.08, 0.05], steps=STEPS, seeds=SEEDS,
+                     n_antennas=[1, 4])
+    b = SweepRequest(problem=_quad(9, 1), algo="gbma",
+                     channels=[ChannelConfig(noise_std=0.2)],
+                     betas=[0.1], steps=STEPS, seeds=SEEDS,
+                     n_antennas=2)
+    assert _sig(a) == _sig(b)
+    results = serve_sync([a, b], McServeConfig(quantum_seeds=SEEDS))
+    stats = serve_sync.last_stats
+    assert [s["requests"] for s in stats.batches] == [2]
+    assert stats.batches[0]["rows"] == 3
+    assert results[0].risks.shape == (2, SEEDS, STEPS + 1)
+    assert results[1].risks.shape == (1, SEEDS, STEPS + 1)
+    for res, req in zip(results, [a, b]):
+        _assert_matches_solo(res, req)
+
+
+def test_row_cap_splits_batches_of_one_signature():
+    reqs = [_req(6, 0.1 * (i + 1), data_seed=i) for i in range(4)]
+    serve_sync(reqs, McServeConfig(quantum_seeds=SEEDS, max_batch_rows=3))
+    stats = serve_sync.last_stats
+    assert [b["requests"] for b in stats.batches] == [3, 1]
+
+
+# --------------------------------------------------------------------------
+# scheduling: seed-quantum preemption
+# --------------------------------------------------------------------------
+def test_whale_cannot_starve_minnows():
+    """One 24-seed whale and two 6-seed minnows, quantum 6: the round
+    robin interleaves the whale's first quantum then lets each minnow
+    finish before the whale's remaining quanta run."""
+    whale = _req(6, 0.5, seeds=24, data_seed=0)
+    m1 = _req(6, 1.0, seeds=6, data_seed=1)
+    m2 = _req(6, 0.3, seeds=6, seed0=100, data_seed=2)
+    s_w, s_1, s_2 = (_sig(r)[:12] for r in (whale, m1, m2))
+    assert len({s_w, s_1, s_2}) == 3
+    ex = TracingExecutor()
+    srv = McSweepServer(McServeConfig(quantum_seeds=6), executor=ex)
+
+    async def inner():
+        tasks = await submit_all(srv, [whale, m1, m2])
+        await srv.drain()
+        return await asyncio.gather(*tasks)
+
+    res_w, res_1, res_2 = run(inner())
+    assert [c["signature"] for c in ex.calls] == \
+        [s_w, s_1, s_2, s_w, s_w, s_w]
+    assert [c["off"] for c in ex.calls] == [0, 0, 0, 6, 12, 18]
+    # the minnows' batches finish (stats order) before the whale's
+    assert [b["signature"] for b in srv.stats.batches] == [s_1, s_2, s_w]
+    for res, req in ((res_w, whale), (res_1, m1), (res_2, m2)):
+        _assert_matches_solo(res, req)
+
+
+def test_ragged_final_quantum_completes_exactly():
+    """A seed count that is not a multiple of the quantum: the tail
+    quantum is smaller, and the stitched curves still match solo."""
+    req = _req(6, 0.5, seeds=10, data_seed=0)
+    ex = TracingExecutor()
+    srv = McSweepServer(McServeConfig(quantum_seeds=4), executor=ex)
+
+    async def inner():
+        (task,) = await submit_all(srv, [req])
+        await srv.drain()
+        return await task
+
+    res = run(inner())
+    assert [c["quantum"] for c in ex.calls] == [4, 4, 2]
+    _assert_matches_solo(res, req)
+
+
+# --------------------------------------------------------------------------
+# fault injection
+# --------------------------------------------------------------------------
+def test_cancel_mid_batch_batchmates_unaffected():
+    """A client cancelling after the batch's first quantum detaches its
+    future; the batch runs to completion and the other two clients'
+    slices still match their solos."""
+    reqs = [_req(6, 0.5, seeds=8, data_seed=0),
+            _req(9, 1.0, seeds=8, data_seed=1),
+            _req(7, 0.2, seeds=8, data_seed=2)]
+    ex = TracingExecutor()
+    srv = McSweepServer(McServeConfig(quantum_seeds=4), executor=ex)
+
+    async def inner():
+        clients = [ScriptedClient(srv, r).submit() for r in reqs]
+        await asyncio.sleep(0)
+        ex.after_call(0, clients[1].cancel)
+        await srv.drain()
+        await asyncio.gather(*(c.task for c in clients),
+                             return_exceptions=True)
+        return clients
+
+    clients = run(inner())
+    assert len(ex.calls) == 2  # both quanta still ran
+    assert clients[1].task.cancelled()
+    assert srv.stats.cancelled == 1
+    assert srv.stats.batches[0]["requests"] == 3
+    assert srv.stats.batches[0]["cancelled"] == 1
+    for i in (0, 2):
+        _assert_matches_solo(clients[i].result(), reqs[i])
+
+
+def test_cancel_all_drops_remaining_quanta():
+    """When every client of a batch cancels, the scheduler frees the
+    batch instead of computing seeds nobody will read."""
+    reqs = [_req(6, 0.5, seeds=8, data_seed=0),
+            _req(9, 1.0, seeds=8, data_seed=1)]
+    ex = TracingExecutor()
+    srv = McSweepServer(McServeConfig(quantum_seeds=4), executor=ex)
+
+    async def inner():
+        clients = [ScriptedClient(srv, r).submit() for r in reqs]
+        await asyncio.sleep(0)
+        ex.after_call(0, clients[0].cancel)
+        ex.after_call(0, clients[1].cancel)
+        await srv.drain()
+        await asyncio.gather(*(c.task for c in clients),
+                             return_exceptions=True)
+
+    run(inner())
+    assert len(ex.calls) == 1  # second quantum never ran
+    assert srv.stats.cancelled == 2
+    assert srv.stats.batches == []  # the batch never completed
+
+
+def test_over_budget_request_rejected_small_one_served():
+    """Admission control: the analytic `estimate_peak_bytes` working set
+    gates entry — an over-budget whale gets a typed AdmissionError at
+    submit, and an affordable request submitted right after is served
+    normally (the queue is not poisoned)."""
+    small = _req(6, 0.5, data_seed=0)
+    big = SweepRequest(problem=_quad(64, 1),
+                       channels=[ChannelConfig(noise_std=0.5)] * 8,
+                       algo="gbma", betas=[0.05] * 8, steps=STEPS,
+                       seeds=256)
+    probe = McSweepServer(McServeConfig(quantum_seeds=SEEDS))
+    est_small = probe._estimate([probe._normalize(small)])
+    est_big = probe._estimate([probe._normalize(big)])
+    budget = (est_small + est_big) // 2
+    assert est_small < budget < est_big
+    srv = McSweepServer(McServeConfig(quantum_seeds=SEEDS,
+                                      memory_budget_bytes=budget))
+
+    async def inner():
+        with pytest.raises(AdmissionError, match="estimate_peak_bytes"):
+            await srv.submit(big)
+        task = asyncio.ensure_future(srv.submit(small))
+        await asyncio.sleep(0)
+        await srv.drain()
+        return await task
+
+    res = run(inner())
+    assert srv.stats.rejected == 1 and srv.stats.admitted == 1
+    _assert_matches_solo(res, small)
+
+
+def test_budget_splits_batches_instead_of_rejecting():
+    """Two affordable requests that do not fit one batch together run as
+    two batches of the same signature, both served."""
+    reqs = [_req(6, 0.5, data_seed=0), _req(6, 1.0, data_seed=1)]
+    probe = McSweepServer(McServeConfig(quantum_seeds=SEEDS))
+    est_one = probe._estimate([probe._normalize(reqs[0])])
+    est_two = probe._estimate([probe._normalize(r) for r in reqs])
+    budget = (est_one + est_two) // 2
+    assert est_one < budget < est_two
+    results = serve_sync(reqs, McServeConfig(quantum_seeds=SEEDS,
+                                             memory_budget_bytes=budget))
+    stats = serve_sync.last_stats
+    assert [b["requests"] for b in stats.batches] == [1, 1]
+    for res, req in zip(results, reqs):
+        _assert_matches_solo(res, req)
+
+
+@pytest.mark.parametrize("mutation, match", [
+    (dict(algo="warp"), "unknown algo"),
+    (dict(betas=[0.1, 0.2]), "one stepsize per row"),
+    (dict(algo="blind"), "needs n_antennas"),
+    (dict(batch_frac=0.0), "batch_frac"),
+    (dict(batch_frac=0.5), "stochastic"),  # quadratic has no minibatch
+    (dict(steps=0), "steps"),
+    (dict(channels=[]), "no rows"),
+    (dict(theta0=np.zeros(7, np.float32)), "theta0 shape"),
+])
+def test_malformed_requests_fail_fast(mutation, match):
+    """Malformed payloads raise RequestError at submit — before the
+    queue — and a valid request afterwards is served normally."""
+    base = dict(problem=_quad(6, 0),
+                channels=[ChannelConfig(noise_std=0.5)], algo="gbma",
+                betas=[0.08], steps=STEPS, seeds=SEEDS)
+    bad = SweepRequest(**{**base, **mutation})
+    srv = McSweepServer(McServeConfig(quantum_seeds=SEEDS))
+
+    async def inner():
+        with pytest.raises(RequestError, match=match):
+            await srv.submit(bad)
+        assert srv._queue == []  # never enqueued
+        task = asyncio.ensure_future(srv.submit(SweepRequest(**base)))
+        await asyncio.sleep(0)
+        await srv.drain()
+        return await task
+
+    res = run(inner())
+    assert srv.stats.admitted == 1
+    assert res.risks.shape == (1, SEEDS, STEPS + 1)
+
+
+def test_unregistered_problem_rejected():
+    """Hand-built MCProblems (closure path, no data dict) cannot batch
+    with strangers' rows; the server refuses them up front."""
+    from repro.core.mc import MCProblem
+
+    prob = MCProblem(grad_fn=lambda t: t, risk_fn=lambda t: 0.0,
+                     dim=DIM, n_nodes=4)
+    req = SweepRequest(problem=prob, channels=[ChannelConfig()],
+                       algo="gbma", betas=[0.08], steps=STEPS,
+                       seeds=SEEDS)
+
+    async def inner():
+        with pytest.raises(RequestError, match="registered"):
+            await McSweepServer().submit(req)
+
+    run(inner())
+
+
+def test_engine_failure_contained_to_its_batch():
+    """A quantum blowing up resolves only its own batch's futures with a
+    ServeError; the other signature's batch completes untouched."""
+    pair = [_req(6, 0.5, data_seed=0), _req(9, 1.0, data_seed=1)]
+    lone = _req(6, 0.5, steps=STEPS + 4, data_seed=2)
+    ex = TracingExecutor()
+    ex.fail_when(lambda info: info["rows"] == 2, RuntimeError("boom"))
+    srv = McSweepServer(McServeConfig(quantum_seeds=SEEDS), executor=ex)
+
+    async def inner():
+        tasks = await submit_all(srv, pair + [lone])
+        await srv.drain()
+        return await asyncio.gather(*tasks, return_exceptions=True)
+
+    out = run(inner())
+    assert all(isinstance(e, ServeError) for e in out[:2])
+    assert all("boom" in str(e) for e in out[:2])
+    assert srv.stats.failed_batches == 1
+    assert [b["requests"] for b in srv.stats.batches] == [1]
+    _assert_matches_solo(out[2], lone)
+
+
+# --------------------------------------------------------------------------
+# the router loop under the manual clock
+# --------------------------------------------------------------------------
+def test_serve_forever_holds_coalesce_window_without_wall_sleeps():
+    """start()/stop() lifecycle under the manual clock: the router
+    wakes on the first submission, holds the coalesce window open (a
+    virtual 2.5 s — recorded, not slept), then drains both requests as
+    one batch."""
+    reqs = [_req(6, 0.5, data_seed=0), _req(9, 1.0, data_seed=1)]
+    clock, ex = ManualClock(), TracingExecutor()
+    srv = McSweepServer(
+        McServeConfig(quantum_seeds=SEEDS, coalesce_window=2.5),
+        clock=clock, executor=ex)
+
+    async def inner():
+        srv.start()
+        results = await asyncio.gather(
+            *(srv.submit(r) for r in reqs))
+        await srv.stop()
+        return results
+
+    results = run(inner())
+    assert clock.sleeps == [2.5]
+    assert clock.now == 2.5
+    assert [b["requests"] for b in srv.stats.batches] == [2]
+    for res, req in zip(results, reqs):
+        _assert_matches_solo(res, req)
+
+
+def test_submissions_during_drain_are_picked_up():
+    """A request submitted while the router is mid-drain (scripted after
+    the first quantum) is served in the same drain pass."""
+    first = _req(6, 0.5, seeds=8, data_seed=0)
+    late = _req(9, 1.0, seeds=8, data_seed=1)
+    ex = TracingExecutor()
+    srv = McSweepServer(McServeConfig(quantum_seeds=4), executor=ex)
+
+    async def inner():
+        (t1,) = await submit_all(srv, [first])
+        holder = {}
+        ex.after_call(0, lambda: holder.setdefault(
+            "t2", asyncio.ensure_future(srv.submit(late))))
+        await srv.drain()
+        return await t1, await holder["t2"]
+
+    r1, r2 = run(inner())
+    assert len(srv.stats.batches) == 2
+    _assert_matches_solo(r1, first)
+    _assert_matches_solo(r2, late)

@@ -111,6 +111,48 @@ def test_engine_greedy_generation_deterministic(olmo_reduced):
     np.testing.assert_array_equal(np.array(out1), np.array(out2))
 
 
+def test_engine_temperature_sampling_deterministic_distinct_keys(
+        olmo_reduced, monkeypatch):
+    """Temperature sampling is still a pure function of the seed (same
+    seed ⇒ same tokens), and each decode step samples from its own
+    fold_in key — no step ever reuses another's stream."""
+    m, params = olmo_reduced
+    eng = Engine(m, params, ServeConfig(max_new_tokens=5, temperature=0.8,
+                                        seed=3))
+    prompt = {"tokens": jax.random.randint(jax.random.key(1), (2, 8), 0,
+                                           m.cfg.vocab_size)}
+    seen_keys = []
+    real_categorical = jax.random.categorical
+
+    def spy(key, logits, axis=-1):
+        seen_keys.append(np.array(jax.random.key_data(key)))
+        return real_categorical(key, logits, axis=axis)
+
+    monkeypatch.setattr(jax.random, "categorical", spy)
+    out1 = eng.generate(prompt)
+    n_calls = len(seen_keys)
+    assert n_calls == 6  # prefill sample + one per generated token
+    assert len({k.tobytes() for k in seen_keys}) == n_calls
+    out2 = eng.generate(prompt)
+    np.testing.assert_array_equal(np.array(out1), np.array(out2))
+    # the replay consumed the identical key sequence
+    assert [k.tobytes() for k in seen_keys[n_calls:]] \
+        == [k.tobytes() for k in seen_keys[:n_calls]]
+
+
+def test_engine_temperature_to_zero_matches_greedy(olmo_reduced):
+    """T → 0 sampling concentrates on the argmax token: a vanishing
+    temperature reproduces the greedy decode exactly."""
+    m, params = olmo_reduced
+    prompt = {"tokens": jax.random.randint(jax.random.key(2), (2, 8), 0,
+                                           m.cfg.vocab_size)}
+    greedy = Engine(m, params, ServeConfig(max_new_tokens=5,
+                                           temperature=0.0)).generate(prompt)
+    cold = Engine(m, params, ServeConfig(max_new_tokens=5,
+                                         temperature=1e-6)).generate(prompt)
+    np.testing.assert_array_equal(np.array(greedy), np.array(cold))
+
+
 # ---------------------------------------------------------------- sharding
 def test_fit_spec_drops_nondivisible_axes():
     import os as _os
