@@ -58,21 +58,32 @@ Workloads:
    must sit at f32-ulp scale (≤ 1e-6), bf16-transmit at quantization
    scale.
 
-8. **serve_coalesce**: the sweep server's coalescing win
-   (docs/serving.md). The same K-request mix (one request per
-   `SWEEP_N_GRID` node count — signature-compatible, so the server packs
-   them into one padded batch) served per-request (one dedicated
-   `run_mc` call each: one compile per N, K dispatches warm) vs
-   coalesced through `serve_sync` (one compile, one engine call per
-   seed quantum). Cold records the compile counts; warm records the
-   steady-state dispatch advantage; `max_rel_curve_diff` pins the
-   demuxed curves to the dedicated-call references.
+8. **serve_coalesce**: the sweep server's routing win (docs/serving.md)
+   on a heterogeneous-N request mix (`SERVE_N_GRID`: clusters of small
+   and large node counts, signature-compatible). Three servings of the
+   same K requests: per-request (one dedicated `run_mc` call each),
+   monolithic coalescing (`bucket_base=0` — every request padded to one
+   batch N_max, the pre-cost-model router), and bucketed coalescing
+   (the pad-waste-aware router on a persistent server, so its
+   shape-class registry is warm and the cost model splits whales from
+   minnows). Cold records the first-sight compile counts (a fresh
+   bucketed server merges monolithically — compiles dominate — so
+   `coalesced_compiles` stays 1); warm records the steady-state
+   tradeoff the cost model navigates: pad waste (monolithic) vs
+   dispatch count (per-request). Per-batch `pad_flops_ratio`, the
+   bucket occupancy and the demux pin (`max_rel_curve_diff` vs the
+   dedicated calls, ≤ 1e-6 — counter-based RNG) ride along.
 
 `--smoke` shrinks every workload to CI size, writes
 `BENCH_montecarlo.smoke.json` (never the tracked full-scale record),
 asserts the warm timings are finite and the curve agreements hold, and
 exits nonzero on violation — the CI bench job runs exactly that and
-uploads the JSON artifact.
+uploads the JSON artifact. Direct invocation
+(`python -m benchmarks.bench_montecarlo`, no --smoke) rewrites the
+tracked record; through `benchmarks.run` the tracked record is only
+written when the explicit `--write-bench` flag is passed (the
+bench-clobber footgun: an unfiltered figure run must not silently
+rewrite tracked numbers with contended-container timings).
 """
 from __future__ import annotations
 
@@ -98,6 +109,11 @@ STEPS = 300
 SEEDS = 4
 SWEEP_N_GRID = (100, 200, 400)
 SWEEP_M_GRID = (2, 8, 32)
+# the serving mix: heterogeneous node counts that cluster into two
+# geometric N-buckets (×2 base: {96,100,120} -> 128, {384,400} -> 512) —
+# minnows and whales the pad-waste-aware router should NOT pad together
+# warm, yet must merge cold (compiles dominate)
+SERVE_N_GRID = (96, 100, 120, 384, 400)
 # fractions < 1.0 only: a scalar batch_frac=1.0 takes the static
 # no-sampling path (a different, cheaper program than a sweep row), so
 # including it would time non-equivalent computations
@@ -454,6 +470,47 @@ def bench_large_chunked_placed(warm_reps: int = 2) -> dict:
         run_placed()
         t_placed = min(t_placed, time.perf_counter() - t0)
     mean_default = default_kwargs()
+
+    # the measured cost model's plan for the same workload: with a
+    # calibration artifact present it may re-chunk by predicted
+    # wall-clock; absent one it must equal the analytic plan exactly
+    # (behavior-pinned in tests/test_costmodel.py). When the plans
+    # differ, time both interleaved so the record shows whether the
+    # measured choice actually paid off.
+    from repro.core.mc.costmodel import load_cost_model
+
+    plan_measured = auto_plan(
+        n_rows=1, seeds=seeds, steps=steps, n_max=n, dim=dim,
+        keep_seed_curves=False,
+        memory_budget_bytes=int(MEM_BUDGET_GIB * 2**30),
+        target_chunk_bytes=AUTO_TARGET_CHUNK_BYTES,
+        cost_model="measured")
+    measured = {
+        "calibration_found": load_cost_model() is not None,
+        "plan": plan_measured.asdict(),
+        "same_as_analytic": plan_measured == plan,
+    }
+    if plan_measured == plan:
+        measured["measured_warm_s"] = round(t_placed, 3)
+    else:
+        def run_measured():
+            return run_mc(mc, [ch], "gbma", [beta], steps, seeds,
+                          plan=plan_measured).mean
+
+        mean_measured = run_measured()
+        t_meas = t_analytic = float("inf")
+        for _ in range(warm_reps):
+            t0 = time.perf_counter()
+            run_placed()
+            t_analytic = min(t_analytic, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            run_measured()
+            t_meas = min(t_meas, time.perf_counter() - t0)
+        measured["measured_warm_s"] = round(t_meas, 3)
+        measured["analytic_warm_s"] = round(t_analytic, 3)
+        measured["measured_vs_analytic_max_rel_diff"] = _rel(
+            mean_measured, mean_placed)
+
     return {
         "workload": {"problem": "msd_regression", "n_nodes": n, "dim": dim,
                      "steps": steps, "seeds": seeds, "fading": "rayleigh",
@@ -466,6 +523,7 @@ def bench_large_chunked_placed(warm_reps: int = 2) -> dict:
             _warm_step_us(t_placed, 1, steps, seeds), 3),
         "placed_vs_unplaced_max_rel_diff": _rel(mean_placed, mean_unplaced),
         "auto_vs_default_max_rel_diff": _rel(mean_placed, mean_default),
+        "measured_plan": measured,
     }
 
 
@@ -525,24 +583,25 @@ def bench_train_100m_ota() -> dict:
 
 
 def bench_serve_coalesce() -> dict:
-    """The serving entry: K signature-compatible requests served
-    per-request (a dedicated row-based `run_mc` call each) vs coalesced
-    through the sweep server (`serve_sync`: one compile, demuxed
-    `slice_result` views). See module docstring, workload 8."""
+    """The serving entry: the heterogeneous-N mix served per-request vs
+    monolithically coalesced vs bucketed through the pad-waste-aware
+    router. See module docstring, workload 8."""
     from repro.core.mc import MCProblemBatch
-    from repro.serving.mc_server import (McServeConfig, SweepRequest,
+    from repro.serving.mc_server import (InlineExecutor, McSweepServer,
+                                         McServeConfig, SweepRequest,
                                          serve_sync)
 
-    probs = [MSDProblem.make(n) for n in SWEEP_N_GRID]
+    probs = [MSDProblem.make(n) for n in SERVE_N_GRID]
     chs = [ChannelConfig(fading="rayleigh", scale=1.0, noise_std=1.0,
-                         energy=float(n) ** (-1.5)) for n in SWEEP_N_GRID]
+                         energy=float(n) ** (-1.5)) for n in SERVE_N_GRID]
     betas = [stepsize_theorem1(p.pc, ch, n, safety=0.9)
-             for p, ch, n in zip(probs, chs, SWEEP_N_GRID)]
+             for p, ch, n in zip(probs, chs, SERVE_N_GRID)]
     mcs = [p.to_mc() for p in probs]
     reqs = [SweepRequest(problem=mc, channels=[ch], algo="gbma",
                          betas=[b], steps=STEPS, seeds=SEEDS)
             for mc, ch, b in zip(mcs, chs, betas)]
     cfg = McServeConfig(quantum_seeds=SEEDS)
+    cfg_mono = McServeConfig(quantum_seeds=SEEDS, bucket_base=0)
 
     def per_request():
         # one dedicated call per client, same row-based path the server
@@ -551,43 +610,85 @@ def bench_serve_coalesce() -> dict:
                        STEPS, SEEDS, shard_seeds=False).mean[0]
                 for mc, ch, b in zip(mcs, chs, betas)]
 
-    def coalesced():
-        return [r.mean[0] for r in serve_sync(reqs, cfg)]
+    def serve_on(server):
+        return [r.mean[0] for r in serve_sync(reqs, server=server)]
 
+    # cold: a FRESH bucketed server has seen no shape class, so the cost
+    # model merges the whole signature group (compiles dominate) — the
+    # one-compile coalescing story the cold column has always told
     t_per_cold, curves_per, compiles_per = _cold(per_request)
-    t_co_cold, curves_co, compiles_co = _cold(coalesced)
+    t_co_cold, _, compiles_co = _cold(
+        lambda: [r.mean[0] for r in serve_sync(reqs, cfg)])
+
+    # warm: persistent servers. The bucketed router needs a few rounds
+    # to reach steady state — first sight merges, then the measured
+    # layout loop compiles + times the `merged` and `exact` layouts of
+    # each bucket group once — so run untimed convergence passes until
+    # its routing exploits the observations, and time THAT state (the
+    # steady state a long-lived server actually serves)
+    srv_bucketed = McSweepServer(cfg, executor=InlineExecutor())
+    srv_mono = McSweepServer(cfg_mono, executor=InlineExecutor())
+    for _ in range(5):
+        serve_on(srv_bucketed)
     t_per_warm, _ = _warm(per_request)
-    t_co_warm, _ = _warm(coalesced)
-    stats = serve_sync.last_stats
-    rel = float(max(_rel(cc, cp)
-                    for cc, cp in zip(curves_co, curves_per)))
+    t_mono_warm, _ = _warm(lambda: serve_on(srv_mono))
+    t_buck_warm, curves_buck = _warm(lambda: serve_on(srv_bucketed))
+
+    # one extra (untimed) pass per server to capture its steady-state
+    # batch layout and pad ratios
+    n0 = len(srv_bucketed.stats.batches)
+    serve_on(srv_bucketed)
+    batches_warm = srv_bucketed.stats.batches[n0:]
+    n0 = len(srv_mono.stats.batches)
+    serve_on(srv_mono)
+    mono_warm = srv_mono.stats.batches[n0:]
+
+    rel = float(max(_rel(cb, cp)
+                    for cb, cp in zip(curves_buck, curves_per)))
     return {
         "workload": {"problem": "msd_regression",
-                     "n_grid": list(SWEEP_N_GRID), "steps": STEPS,
+                     "n_grid": list(SERVE_N_GRID), "steps": STEPS,
                      "seeds": SEEDS, "fading": "rayleigh",
                      "requests": len(reqs),
                      "timing": "cold compiles included; warm is "
-                               "steady-state best-of"},
+                               "steady-state best-of on persistent "
+                               "servers (bucketed registry warm)"},
         "per_request_cold_s": round(t_per_cold, 4),
         "per_request_compiles": compiles_per,
         "coalesced_cold_s": round(t_co_cold, 4),
         "coalesced_compiles": compiles_co,
         "per_request_warm_s": round(t_per_warm, 4),
-        "coalesced_warm_s": round(t_co_warm, 4),
+        "coalesced_warm_s": round(t_buck_warm, 4),
+        "monolithic_warm_s": round(t_mono_warm, 4),
         "cold_speedup": round(t_per_cold / t_co_cold, 2),
-        "warm_speedup": round(t_per_warm / t_co_warm, 2),
-        "batches": len(stats.batches),
+        "warm_speedup": round(t_per_warm / t_buck_warm, 2),
+        "monolithic_warm_speedup": round(t_per_warm / t_mono_warm, 2),
+        "batches_warm": [
+            {k: b[k] for k in ("rows", "n_max", "bucket", "layout",
+                               "pad_flops_ratio")} for b in batches_warm],
+        "layouts": dict(srv_bucketed.stats.layouts),
+        "bucket_occupancy": {
+            str(k): v for k, v
+            in sorted(srv_bucketed.stats.bucket_occupancy.items())},
+        "pad_flops_ratio": {
+            "monolithic": max(b["pad_flops_ratio"] for b in mono_warm),
+            "bucketed_max": max(b["pad_flops_ratio"]
+                                for b in batches_warm),
+        },
         "max_rel_curve_diff": rel,
     }
 
 
 def _smoke_shrink():
     """CI-size constants: every path exercised, nothing slow."""
-    global N, STEPS, SEEDS, SWEEP_N_GRID, SWEEP_M_GRID, LARGE, WARM_REPS, \
-        TRAIN_OTA, AUTO_TARGET_CHUNK_BYTES
+    global N, STEPS, SEEDS, SWEEP_N_GRID, SWEEP_M_GRID, SERVE_N_GRID, \
+        LARGE, WARM_REPS, TRAIN_OTA, AUTO_TARGET_CHUNK_BYTES
     N, STEPS, SEEDS = 48, 40, 2
     SWEEP_N_GRID = (16, 25)
     SWEEP_M_GRID = (1, 3)
+    # same two-bucket clustering as the full grid (×2 base: {6,8,7} -> 8,
+    # {24,28,26} -> 32), CI-sized
+    SERVE_N_GRID = (6, 8, 7, 24, 28, 26)
     LARGE = {"n": 256, "dim": 16, "steps": 30, "seeds": 16, "chunk": 4}
     TRAIN_OTA = {"n": 4, "d": 8192, "block_d": 2048}
     WARM_REPS = 2
@@ -596,7 +697,8 @@ def _smoke_shrink():
     AUTO_TARGET_CHUNK_BYTES = 256 * 1024
 
 
-def run(verbose: bool = True, smoke: bool = False) -> list[str]:
+def run(verbose: bool = True, smoke: bool = False,
+        write_bench: bool = True) -> list[str]:
     if smoke:
         _smoke_shrink()
     single = bench_single_config()
@@ -635,7 +737,11 @@ def run(verbose: bool = True, smoke: bool = False) -> list[str]:
         "jax_version": jax.__version__,
         "backend": jax.default_backend(),
     }
-    out_path = SMOKE_OUT_PATH if smoke else OUT_PATH
+    # the tracked full-scale record is only rewritten by an explicit
+    # request (direct module invocation, or `benchmarks.run
+    # --write-bench`); everything else — smoke AND unflagged figure-
+    # driving runs through `benchmarks.run` — lands on the smoke path
+    out_path = OUT_PATH if (write_bench and not smoke) else SMOKE_OUT_PATH
     with open(out_path, "w") as f:
         json.dump(record, f, indent=2)
         f.write("\n")
@@ -698,9 +804,20 @@ def run(verbose: bool = True, smoke: bool = False) -> list[str]:
         f"{serve['per_request_warm_s']:.4f}",
         f"bench_montecarlo,serve_coalesced_warm_s,"
         f"{serve['coalesced_warm_s']:.4f}",
+        f"bench_montecarlo,serve_monolithic_warm_s,"
+        f"{serve['monolithic_warm_s']:.4f}",
         f"bench_montecarlo,serve_warm_speedup,{serve['warm_speedup']:.2f}",
+        f"bench_montecarlo,serve_monolithic_warm_speedup,"
+        f"{serve['monolithic_warm_speedup']:.2f}",
+        f"bench_montecarlo,serve_pad_flops_ratio,"
+        f"monolithic={serve['pad_flops_ratio']['monolithic']},"
+        f"bucketed_max={serve['pad_flops_ratio']['bucketed_max']}",
         f"bench_montecarlo,serve_max_rel_curve_diff,"
         f"{serve['max_rel_curve_diff']:.2e}",
+        f"bench_montecarlo,measured_plan_same_as_analytic,"
+        f"{int(placed['measured_plan']['same_as_analytic'])}"
+        f",calibration_found="
+        f"{int(placed['measured_plan']['calibration_found'])}",
         f"bench_montecarlo,json,{out_path}",
     ]
     if verbose:
@@ -764,12 +881,35 @@ def _smoke_assert(record: dict) -> None:
     if serve["coalesced_compiles"] != 1:
         problems.append(
             f"serve_coalesce: {serve['coalesced_compiles']} compiles for "
-            "one signature-compatible request set — coalescing must pay "
-            "exactly one compile")
+            "one signature-compatible request set — first-sight "
+            "coalescing must pay exactly one compile")
     if not serve["max_rel_curve_diff"] <= 1e-6:
         problems.append(
             f"serve_coalesce: demuxed curves deviate from dedicated calls "
             f"by {serve['max_rel_curve_diff']:.2e} > 1e-6")
+    if not serve["warm_speedup"] >= 1.0:
+        problems.append(
+            f"serve_coalesce: bucketed warm {serve['warm_speedup']}x < "
+            "1.0x vs per-request — the pad-waste-aware router must not "
+            "regress below dedicated calls")
+    if not serve["pad_flops_ratio"]["bucketed_max"] \
+            <= serve["pad_flops_ratio"]["monolithic"] + 1e-9:
+        problems.append(
+            f"serve_coalesce: bucketed pad ratio "
+            f"{serve['pad_flops_ratio']['bucketed_max']} exceeds the "
+            f"monolithic one {serve['pad_flops_ratio']['monolithic']}")
+    measured = record["large_chunked_placed"]["measured_plan"]
+    if not measured["calibration_found"] and \
+            not measured["same_as_analytic"]:
+        problems.append(
+            "large_chunked_placed: cost_model='measured' deviated from "
+            "the analytic plan with NO calibration artifact present — "
+            "the behavior pin requires exact fallback")
+    if not (np.isfinite(measured["measured_warm_s"])
+            and measured["measured_warm_s"] > 0):
+        problems.append(
+            f"large_chunked_placed: measured-plan warm time "
+            f"{measured['measured_warm_s']!r} not finite/positive")
     if problems:
         print("SMOKE FAILURES:\n  " + "\n  ".join(problems),
               file=sys.stderr)

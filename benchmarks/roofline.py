@@ -50,68 +50,24 @@ def render(path: str) -> list[str]:
 # Monte Carlo slot roofline
 # --------------------------------------------------------------------------
 def mc_slot_model(algo: str, n: int, d: int, m: int = 1) -> dict:
-    """Analytic per-(row, seed, step) cost of one engine slot, f32.
+    """The analytic per-slot cost model — now owned by
+    `repro.core.mc.costmodel` (the calibration suite fits measured step
+    times against its FLOP counts); this delegate keeps the roofline's
+    public surface."""
+    from repro.core.mc.costmodel import mc_slot_model as _model
 
-    Counts the dominant O(N·d) terms of the quadratic-problem scan body:
-
-    gbma (single antenna, hoisted plan):
-      flops: grad 4·N·d (X@θ, residual scale, +λθ) + energy 2·N·d +
-             superposition einsum 2·N·d + risk 2·d² → 8·N·d + 2·d²
-      bytes: X streamed twice (grad passes) + g materialized once and read
-             twice (energy, einsum) + gains N → (5·N·d + N) · 4
-
-    blind (M antennas): the M-antenna MRC combine adds per antenna two
-      real einsums over g (4·N·d) and the complex gain pair (2·N reads):
-      flops: 6·N·d + 2·d² + M·(4·N·d + 6·d)
-      bytes: (3·N·d + M·(2·N·d + 2·N)) · 4
-
-    A model, not an HLO count: XLA fusion removes some traffic (fused
-    grad→einsum skips one g pass) and adds some (padding); treat ratios,
-    not digits, as the signal.
-    """
-    if algo == "gbma":
-        flops = 8 * n * d + 2 * d * d
-        bytes_ = (5 * n * d + n) * 4
-    elif algo == "blind":
-        flops = 6 * n * d + 2 * d * d + m * (4 * n * d + 6 * d)
-        bytes_ = (3 * n * d + m * (2 * n * d + 2 * n)) * 4
-    else:
-        raise ValueError(f"no slot model for algo {algo!r}")
-    return {"flops": flops, "bytes": bytes_,
-            "intensity": flops / bytes_}
+    return _model(algo, n, d, m)
 
 
 def machine_peaks(dim: int = 1536, reps: int = 3) -> dict:
-    """Microbenchmarked machine peaks: f32 matmul GFLOP/s and big-copy
-    GiB/s — the two roofline ceilings. In-process so the numbers share
-    the bench run's thermal/contention conditions."""
-    import time
+    """Microbenchmarked machine peaks (f32 matmul GFLOP/s + big-copy
+    GiB/s), served through the calibration artifact: a platform/device-
+    count entry that already holds peaks is reused instead of
+    re-measuring on every roofline/bench invocation
+    (`costmodel.cached_machine_peaks`)."""
+    from repro.core.mc.costmodel import cached_machine_peaks
 
-    import jax
-    import jax.numpy as jnp
-    import numpy as np
-
-    a = jnp.asarray(np.random.rand(dim, dim), jnp.float32)
-    mm = jax.jit(lambda x: x @ x)
-    jax.block_until_ready(mm(a))
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(mm(a))
-        best = min(best, time.perf_counter() - t0)
-    peak_flops = 2 * dim**3 / best
-
-    big = jnp.asarray(np.random.rand(64 * 2**20 // 4), jnp.float32)  # 64 MiB
-    cp = jax.jit(lambda x: x + 1.0)
-    jax.block_until_ready(cp(big))
-    best_bw = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(cp(big))
-        best_bw = min(best_bw, time.perf_counter() - t0)
-    peak_bw = 2 * big.size * 4 / best_bw  # read + write
-    return {"peak_gflops": peak_flops / 1e9,
-            "peak_gibs": peak_bw / 2**30}
+    return cached_machine_peaks(dim=dim, reps=reps)
 
 
 def _mc_entry_rows(label: str, algo: str, n: int, d: int, m: int,

@@ -4,7 +4,13 @@ table. Prints `name,label,value` CSV rows; `python -m benchmarks.run`.
 `--plan-auto` routes figure scripts whose `run()` takes a `plan` kwarg
 through `run_mc(plan="auto")` — the self-planned execution strategy
 (chunking/placement derived from the memory model and device topology,
-docs/performance.md) instead of the figure-scale defaults."""
+docs/performance.md) instead of the figure-scale defaults.
+
+`--write-bench` lets modules whose `run()` takes a `write_bench` kwarg
+(the tracked-record benches) rewrite their tracked JSON. Without it an
+unfiltered `python -m benchmarks.run` routes those records to the
+`.smoke.json` path — a figure-driving run on a contended container must
+never silently clobber `benchmarks/BENCH_montecarlo.json`."""
 from __future__ import annotations
 
 import inspect
@@ -34,8 +40,10 @@ def main() -> None:
         ("bench_montecarlo (engine vs seed per-seed loop)", bench_montecarlo),
         ("roofline (EXPERIMENTS §Roofline)", roofline),
     ]
-    argv = [a for a in sys.argv[1:] if a != "--plan-auto"]
-    plan_auto = len(argv) != len(sys.argv) - 1
+    flags = set(a for a in sys.argv[1:] if a.startswith("--"))
+    argv = [a for a in sys.argv[1:] if not a.startswith("--")]
+    plan_auto = "--plan-auto" in flags
+    write_bench = "--write-bench" in flags
     only = argv[0] if argv else None
     for name, mod in modules:
         if only and only not in name:
@@ -43,8 +51,11 @@ def main() -> None:
         print(f"==== {name} ====", flush=True)
         t0 = time.time()
         kw = {}
-        if plan_auto and "plan" in inspect.signature(mod.run).parameters:
+        params = inspect.signature(mod.run).parameters
+        if plan_auto and "plan" in params:
             kw["plan"] = "auto"
+        if "write_bench" in params:
+            kw["write_bench"] = write_bench
         mod.run(verbose=True, **kw)
         print(f"---- {name}: {time.time() - t0:.1f}s ----", flush=True)
 

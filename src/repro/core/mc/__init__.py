@@ -12,7 +12,14 @@ Layers (see each module's docstring):
     RNG-plan twin.
   * `plan`     — `ExecPlan` (one sweep's execution strategy) +
     `auto_plan` deriving it from the analytic memory model, a memory
-    budget and the device topology.
+    budget and the device topology (or, with `cost_model="measured"`,
+    from the calibration-fed cost model).
+  * `costmodel` — the measured per-workload cost model: a one-time
+    calibration suite persisted as a versioned JSON artifact keyed by
+    platform/device-count, `CostModel.predict_step_us/predict_run_us`
+    consumed by `auto_plan` and the sweep server's pad-waste-aware
+    coalescer, and the cached machine-peaks microbench the roofline
+    renders.
   * `exec`     — the execution layer: the compiled `_mc_core` placed on
     a ("rows", "mc") device mesh, the hoisted counter-based RNG plan,
     the seed-chunked resumable scheduler with donated Chan-merged
@@ -32,7 +39,15 @@ from repro.core.mc.engine import (
     slice_result,
     trace_count,
 )
-from repro.core.mc.exec import estimate_peak_bytes, static_signature
+from repro.core.mc.costmodel import (
+    CalibrationConfig,
+    CostModel,
+    Workload,
+    analytic_cost_model,
+    load_cost_model,
+)
+from repro.core.mc.exec import cache_epoch, estimate_peak_bytes, \
+    static_signature
 from repro.core.mc.plan import ExecPlan, auto_plan, validate_plan
 from repro.core.mc.problems import (
     MCProblem,
@@ -64,8 +79,14 @@ __all__ = [
     "ALGO_REGISTRY",
     "ALGOS",
     "AlgoSpec",
+    "CalibrationConfig",
     "ChannelBatch",
+    "CostModel",
     "ExecPlan",
+    "Workload",
+    "analytic_cost_model",
+    "cache_epoch",
+    "load_cost_model",
     "MCProblem",
     "MCProblemBatch",
     "MCResult",

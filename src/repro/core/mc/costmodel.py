@@ -1,0 +1,614 @@
+"""Measured per-workload cost model for the Monte Carlo engine.
+
+The execution layer so far priced its choices with an *analytic* memory
+model (`exec.estimate_peak_bytes`) and an assumed cache-resident chunk
+target. This module closes ROADMAP's remaining self-tuning item: fold
+the MEASURED roofline into the planner's and the serving router's
+decisions.
+
+Three pieces:
+
+* **Calibration** (`calibrate` / `python -m repro.core.mc.costmodel`):
+  a small one-time microbench suite — per-slot warm step time over an
+  (algo family × N × dim) grid, a dispatch-overhead probe (chunked vs
+  all-live on the same workload), a chunk-size working-set profile
+  (warm step time vs per-device live bytes), a compile-time probe, and
+  the machine peaks (`measure_machine_peaks`: f32 matmul GFLOP/s +
+  big-copy GiB/s — the same microbench `benchmarks/roofline.py`
+  renders). Results persist as a **versioned JSON calibration
+  artifact** keyed by `<platform>/<device_count>`
+  (`benchmarks/CALIBRATION_mc.json` by default; override with the
+  `REPRO_CALIBRATION_PATH` env var). A version bump or a
+  platform/device-count mismatch makes an entry stale — it is simply
+  not loaded.
+
+* **`CostModel`** — `predict_step_us(plan, workload)` and
+  `predict_run_us(plan, workload)`: the predicted per-(row, seed, step)
+  slot time and total wall-clock of one engine call under a given
+  `ExecPlan`. Slot time is a nonnegative linear fit over the analytic
+  slot FLOPs (`mc_slot_model`), scaled by the measured working-set
+  profile factor at the plan's per-device live bytes; run time adds a
+  per-engine-call `dispatch_us` for every seed chunk and divides the
+  compute term over the plan's device mesh. Every term is clamped
+  nonnegative, so predictions are **monotone non-decreasing in N,
+  seeds and steps** (pinned in `tests/test_costmodel.py`).
+  `analytic_cost_model()` builds the same interface from the closed-form
+  slot model and nominal CPU-class peaks — the fallback when no
+  calibration artifact exists, so cost-model consumers always work.
+
+* **Consumers** — `plan.auto_plan(..., cost_model="measured")` picks
+  `seed_chunk` by predicted wall-clock under the memory budget
+  (conservative: it deviates from the analytic choice only for a
+  predicted win > 5%, and falls back to the analytic path exactly when
+  no calibration entry matches — behavior-pinned); the sweep server
+  (`repro.serving.mc_server`) prices merged-vs-separate batches with
+  `predict_run_us` plus `compile_s` for unseen shape classes, making
+  the coalescer pad-waste-aware (docs/serving.md).
+
+`cached_machine_peaks` additionally lets repeated roofline/bench
+invocations reuse the artifact's peaks instead of re-measuring —
+`benchmarks/roofline.py` routes through it.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import os
+import time
+from typing import Optional
+
+import numpy as np
+
+CALIBRATION_VERSION = 1
+# nominal CPU-class ceilings for the analytic fallback model (2-core CI
+# container scale); a calibration artifact replaces them with measurement
+_NOMINAL_PEAKS = {"peak_gflops": 8.0, "peak_gibs": 6.0}
+_US = 1e6
+
+
+def default_calibration_path() -> str:
+    """The artifact location: `REPRO_CALIBRATION_PATH` when set, else the
+    tracked `benchmarks/CALIBRATION_mc.json` next to the bench records."""
+    env = os.environ.get("REPRO_CALIBRATION_PATH")
+    if env:
+        return env
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))))))
+    return os.path.join(root, "benchmarks", "CALIBRATION_mc.json")
+
+
+def platform_key(device_count: Optional[int] = None,
+                 platform: Optional[str] = None) -> str:
+    """Artifact entry key: `<platform>/<device_count>` — the staleness
+    axes. A calibration measured on cpu/1 never serves a cpu/4 or tpu/8
+    process."""
+    import jax
+
+    plat = platform if platform is not None else jax.default_backend()
+    ndev = device_count if device_count is not None else jax.device_count()
+    return f"{plat}/{int(ndev)}"
+
+
+# --------------------------------------------------------------------------
+# analytic slot model + machine peaks (the roofline's microbench machinery)
+# --------------------------------------------------------------------------
+def mc_slot_model(algo: str, n: int, d: int, m: int = 1) -> dict:
+    """Analytic per-(row, seed, step) cost of one engine slot, f32.
+
+    Counts the dominant O(N·d) terms of the quadratic-problem scan body
+    (`benchmarks/roofline.py` renders this next to measured step times):
+
+    gbma (single antenna, hoisted plan):
+      flops: grad 4·N·d (X@θ, residual scale, +λθ) + energy 2·N·d +
+             superposition einsum 2·N·d + risk 2·d² → 8·N·d + 2·d²
+      bytes: X streamed twice (grad passes) + g materialized once and read
+             twice (energy, einsum) + gains N → (5·N·d + N) · 4
+
+    blind (M antennas): the M-antenna MRC combine adds per antenna two
+      real einsums over g (4·N·d) and the complex gain pair (2·N reads):
+      flops: 6·N·d + 2·d² + M·(4·N·d + 6·d)
+      bytes: (3·N·d + M·(2·N·d + 2·N)) · 4
+
+    A model, not an HLO count: XLA fusion removes some traffic (fused
+    grad→einsum skips one g pass) and adds some (padding); treat ratios,
+    not digits, as the signal.
+    """
+    if algo == "gbma":
+        flops = 8 * n * d + 2 * d * d
+        bytes_ = (5 * n * d + n) * 4
+    elif algo == "blind":
+        flops = 6 * n * d + 2 * d * d + m * (4 * n * d + 6 * d)
+        bytes_ = (3 * n * d + m * (2 * n * d + 2 * n)) * 4
+    else:
+        raise ValueError(f"no slot model for algo {algo!r}")
+    return {"flops": flops, "bytes": bytes_,
+            "intensity": flops / bytes_}
+
+
+def _algo_family(algo: str) -> str:
+    """Map any registered algorithm onto the slot-model family whose
+    dominant terms it shares: blind (M-antenna MRC) or gbma (everything
+    single-antenna — momentum/nesterov/power_control add O(d) work the
+    O(N·d) model absorbs)."""
+    from repro.core.mc.slots import ALGO_REGISTRY
+
+    spec = ALGO_REGISTRY.get(algo)
+    return "blind" if (spec is not None and spec.blind) else "gbma"
+
+
+def measure_machine_peaks(dim: int = 1536, reps: int = 3) -> dict:
+    """Microbenchmarked machine peaks: f32 matmul GFLOP/s and big-copy
+    GiB/s — the two roofline ceilings. In-process so the numbers share
+    the calling run's thermal/contention conditions."""
+    import jax
+    import jax.numpy as jnp
+
+    a = jnp.asarray(np.random.rand(dim, dim), jnp.float32)
+    mm = jax.jit(lambda x: x @ x)
+    jax.block_until_ready(mm(a))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(mm(a))
+        best = min(best, time.perf_counter() - t0)
+    peak_flops = 2 * dim**3 / best
+
+    big = jnp.asarray(np.random.rand(64 * 2**20 // 4), jnp.float32)  # 64 MiB
+    cp = jax.jit(lambda x: x + 1.0)
+    jax.block_until_ready(cp(big))
+    best_bw = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(cp(big))
+        best_bw = min(best_bw, time.perf_counter() - t0)
+    peak_bw = 2 * big.size * 4 / best_bw  # read + write
+    return {"peak_gflops": peak_flops / 1e9,
+            "peak_gibs": peak_bw / 2**30}
+
+
+def cached_machine_peaks(dim: int = 1536, reps: int = 3, *,
+                         path: Optional[str] = None,
+                         device_count: Optional[int] = None,
+                         measure=measure_machine_peaks,
+                         write: bool = True) -> dict:
+    """Machine peaks through the calibration artifact: return the stored
+    peaks when this platform/device-count has an entry, else measure
+    once and (best-effort) persist a peaks-only entry so repeated
+    roofline/bench invocations stop re-measuring. The staleness check is
+    the entry key itself — a different platform or device count never
+    reuses foreign peaks."""
+    path = default_calibration_path() if path is None else path
+    key = platform_key(device_count)
+    data = _read_artifact(path)
+    entry = (data or {}).get("entries", {}).get(key)
+    if entry and "peaks" in entry:
+        return dict(entry["peaks"])
+    peaks = measure(dim=dim, reps=reps)
+    if write:
+        try:
+            _write_entry(path, key, {"peaks": peaks, "peaks_dim": dim})
+        except OSError:
+            pass  # read-only checkout: serve the measurement, skip caching
+    return peaks
+
+
+def _read_artifact(path: str) -> Optional[dict]:
+    """The artifact dict, or None when missing/unreadable/stale-version."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if not isinstance(data, dict) \
+            or data.get("version") != CALIBRATION_VERSION:
+        return None
+    return data
+
+
+def _write_entry(path: str, key: str, entry: dict) -> None:
+    data = _read_artifact(path) or {"version": CALIBRATION_VERSION,
+                                    "entries": {}}
+    merged = dict(data["entries"].get(key, {}))
+    merged.update(entry)
+    data["entries"][key] = merged
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+# --------------------------------------------------------------------------
+# configuration / workload records
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CalibrationConfig:
+    """The calibration suite's knobs (documented in docs/performance.md).
+
+    n_grid / dim_grid: the (N, dim) grid each algo family's warm slot
+        time is sampled on — the regressor of the linear step-time fit.
+    steps / seeds: horizon and seed count of every calibration run
+        (small: the suite measures warm steady state, not convergence).
+    chunk_probe: seed_chunk of the chunked side of the dispatch probe
+        (all-live vs chunked on one workload isolates per-call cost).
+    probe_seeds: seed count of the working-set profile probe — large
+        enough that the all-live side leaves cache on CI-class hosts.
+    warm_reps: best-of repetitions per timed measurement.
+    algos: algorithm families to fit (one coefficient pair each).
+    peaks_dim: matmul size of the machine-peaks microbench.
+    """
+
+    n_grid: tuple = (64, 256, 1024)
+    dim_grid: tuple = (8, 24)
+    steps: int = 60
+    seeds: int = 8
+    chunk_probe: int = 2
+    probe_seeds: int = 128
+    warm_reps: int = 3
+    algos: tuple = ("gbma", "blind")
+    peaks_dim: int = 1536
+
+    @classmethod
+    def smoke(cls) -> "CalibrationConfig":
+        """CI-size suite: every probe exercised, nothing slow."""
+        return cls(n_grid=(16, 48), dim_grid=(4, 8), steps=20, seeds=4,
+                   chunk_probe=2, probe_seeds=16, warm_reps=2,
+                   peaks_dim=256)
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """The cost-relevant shape of one engine call (padded batch view):
+    `n_max` is the padded node count every row pays, `m_sizes` the
+    antenna counts present (max is the padded M)."""
+
+    n_rows: int
+    seeds: int
+    steps: int
+    n_max: int
+    dim: int
+    algo_set: tuple = ("gbma",)
+    m_sizes: tuple = ()
+    b_max: int = 0
+
+
+# --------------------------------------------------------------------------
+# the model
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Predicted engine-call cost under an `ExecPlan` (module docstring).
+
+    coeffs: per-family nonnegative (c0_us, c1_us_per_flop) of the linear
+        slot-time fit `step_us = c0 + c1 · slot_flops`.
+    dispatch_us: fixed per-engine-call overhead (row assembly, jit
+        dispatch, host transfer) — every seed chunk pays it once.
+    compile_s: one XLA compile of an unseen program shape — consumers
+        add it for shape classes they have not executed yet.
+    chunk_profile: ((live_bytes, factor), ...) — measured slowdown of
+        the slot time as the per-device live working set grows past
+        cache; factors are non-decreasing in live_bytes by construction.
+    peaks: microbenchmarked {peak_gflops, peak_gibs}.
+    source: 'measured' (calibration artifact) or 'analytic' (fallback).
+    """
+
+    coeffs: tuple  # ((family, c0_us, c1_us), ...)
+    dispatch_us: float
+    compile_s: float
+    chunk_profile: tuple  # ((live_bytes, factor), ...) sorted, monotone
+    peaks: tuple  # (("peak_gflops", v), ("peak_gibs", v))
+    source: str = "analytic"
+
+    def _coeff(self, family: str) -> Optional[tuple]:
+        for fam, c0, c1 in self.coeffs:
+            if fam == family:
+                return c0, c1
+        return None
+
+    def _profile_factor(self, live_bytes: float) -> float:
+        prof = self.chunk_profile
+        if not prof:
+            return 1.0
+        if live_bytes <= prof[0][0]:
+            return prof[0][1]
+        for (b0, f0), (b1, f1) in zip(prof, prof[1:]):
+            if live_bytes <= b1:
+                t = (live_bytes - b0) / max(b1 - b0, 1.0)
+                return f0 + t * (f1 - f0)
+        return prof[-1][1]  # clamp: beyond the probed range
+
+    def step_us(self, algo: str, n: int, dim: int, m: int = 1,
+                live_bytes: Optional[float] = None) -> float:
+        """Predicted per-(row, seed, step) slot time in microseconds."""
+        fam = _algo_family(algo)
+        model = mc_slot_model(fam, n, dim, max(m, 1))
+        co = self._coeff(fam)
+        if co is not None:
+            base = co[0] + co[1] * model["flops"]
+        else:
+            peaks = dict(self.peaks)
+            base = _US * max(
+                model["flops"] / (peaks["peak_gflops"] * 1e9),
+                model["bytes"] / (peaks["peak_gibs"] * 2**30))
+        if live_bytes is not None:
+            base *= self._profile_factor(float(live_bytes))
+        return base
+
+    def _live_bytes(self, plan, wl: Workload,
+                    device_count: Optional[int] = None) -> int:
+        from repro.core.mc.exec import estimate_peak_bytes
+        from repro.core.mc.plan import resolve_seed_shards
+
+        n_sh = resolve_seed_shards(plan, wl.seeds,
+                                   device_count=device_count)
+        est = estimate_peak_bytes(
+            n_rows=wl.n_rows, seeds=wl.seeds, steps=wl.steps,
+            n_max=wl.n_max, dim=wl.dim, algo_set=tuple(wl.algo_set),
+            seed_chunk=plan.seed_chunk, m_sizes=tuple(wl.m_sizes),
+            b_max=wl.b_max, keep_seed_curves=False,
+            rng_plan=plan.rng_plan, n_shards=max(n_sh, 1),
+            row_shards=max(plan.row_shards, 1))
+        return est["per_device_peak_bytes"]
+
+    def predict_step_us(self, plan, wl: Workload,
+                        device_count: Optional[int] = None) -> float:
+        """Per-(row, seed, step) slot time of `wl` under `plan` — the
+        padded n_max every row pays, at the plan's working set."""
+        live = self._live_bytes(plan, wl, device_count)
+        m = max(wl.m_sizes) if wl.m_sizes else 1
+        return max(self.step_us(a, wl.n_max, wl.dim, m, live_bytes=live)
+                   for a in wl.algo_set)
+
+    def predict_run_us(self, plan, wl: Workload,
+                       device_count: Optional[int] = None) -> float:
+        """Total predicted wall-clock (µs) of one engine call under
+        `plan`: the compute term divided over the plan's device mesh,
+        plus `dispatch_us` per seed chunk. Monotone non-decreasing in
+        N, seeds and steps (all coefficients are clamped ≥ 0)."""
+        from repro.core.mc.plan import resolve_seed_shards
+
+        step = self.predict_step_us(plan, wl, device_count)
+        chunk = plan.seed_chunk if plan.seed_chunk else wl.seeds
+        n_calls = -(-wl.seeds // max(chunk, 1))
+        n_sh = resolve_seed_shards(plan, wl.seeds,
+                                   device_count=device_count)
+        mesh = max(n_sh, 1) * max(plan.row_shards, 1)
+        compute = wl.n_rows * wl.seeds * wl.steps * step / mesh
+        return compute + n_calls * self.dispatch_us
+
+
+def analytic_cost_model(peaks: Optional[dict] = None) -> CostModel:
+    """The calibration-free fallback: closed-form slot costs over nominal
+    (or supplied) peaks, heuristic dispatch/compile/profile constants.
+    Keeps every cost-model consumer functional when no artifact exists;
+    `auto_plan` additionally pins its analytic *selection* path in that
+    case (this model only serves the server's merge decisions)."""
+    from repro.core.mc.plan import DEFAULT_CHUNK_TARGET_BYTES
+
+    p = dict(_NOMINAL_PEAKS if peaks is None else peaks)
+    return CostModel(
+        coeffs=(),
+        dispatch_us=500.0,
+        compile_s=1.0,
+        chunk_profile=((DEFAULT_CHUNK_TARGET_BYTES, 1.0),
+                       (8 * DEFAULT_CHUNK_TARGET_BYTES, 2.0)),
+        peaks=tuple(sorted(p.items())),
+        source="analytic")
+
+
+def load_cost_model(path: Optional[str] = None, *,
+                    platform: Optional[str] = None,
+                    device_count: Optional[int] = None
+                    ) -> Optional[CostModel]:
+    """The measured model from the calibration artifact, or None when the
+    file is missing, its version is stale, or no entry matches this
+    platform/device count (peaks-only entries don't count — they carry
+    no fitted coefficients)."""
+    path = default_calibration_path() if path is None else path
+    data = _read_artifact(path)
+    if data is None:
+        return None
+    entry = data.get("entries", {}).get(
+        platform_key(device_count, platform))
+    if not entry or "coeffs" not in entry:
+        return None
+    coeffs = tuple((fam, float(c["c0_us"]), float(c["c1_us"]))
+                   for fam, c in sorted(entry["coeffs"].items()))
+    profile = tuple((float(b), float(f))
+                    for b, f in entry.get("chunk_profile", ()))
+    return CostModel(
+        coeffs=coeffs,
+        dispatch_us=float(entry.get("dispatch_us", 500.0)),
+        compile_s=float(entry.get("compile_s", 1.0)),
+        chunk_profile=profile,
+        peaks=tuple(sorted(entry.get("peaks", _NOMINAL_PEAKS).items())),
+        source="measured")
+
+
+# --------------------------------------------------------------------------
+# the calibration suite
+# --------------------------------------------------------------------------
+def _calib_problem(n: int, dim: int, seed: int = 0):
+    from repro.core.mc.problems import quadratic_mc_problem
+
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, dim)).astype(np.float32)
+    y = rng.normal(size=(n,)).astype(np.float32)
+    return quadratic_mc_problem(x, y, 0.1, np.zeros(dim, np.float32))
+
+
+def _timed_run(prob, algo: str, steps: int, seeds: int, *,
+               seed_chunk: Optional[int] = None,
+               warm_reps: int = 3) -> float:
+    """Warm best-of wall-clock of one engine call (host results
+    included — the figure every cost-model consumer actually pays)."""
+    from repro.core.channel import ChannelConfig
+    from repro.core.mc.engine import run_mc
+
+    ch = ChannelConfig(fading="rayleigh", noise_std=0.5)
+    m = 2 if _algo_family(algo) == "blind" else None
+
+    def call():
+        return run_mc(prob, [ch], algo, [0.05], steps, seeds,
+                      n_antennas=m, seed_chunk=seed_chunk,
+                      keep_seed_curves=True, shard_seeds=False)
+
+    call()  # compile + warm-up
+    best = float("inf")
+    for _ in range(warm_reps):
+        t0 = time.perf_counter()
+        call()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _fit_nonneg(x: np.ndarray, y: np.ndarray) -> tuple:
+    """Least-squares line with both coefficients clamped ≥ 0 — the
+    clamp is what makes every downstream prediction monotone."""
+    x, y = np.asarray(x, float), np.asarray(y, float)
+    vx = np.sum((x - x.mean()) ** 2)
+    c1 = max(0.0, float(np.sum((x - x.mean()) * (y - y.mean())) / vx)) \
+        if vx > 0 else 0.0
+    c0 = max(0.0, float(y.mean() - c1 * x.mean()))
+    return c0, c1
+
+
+def calibrate(cfg: Optional[CalibrationConfig] = None, *,
+              path: Optional[str] = None,
+              device_count: Optional[int] = None,
+              verbose: bool = False) -> dict:
+    """Run the calibration suite and persist its artifact entry keyed by
+    `<platform>/<device_count>`. Returns the entry dict. See the module
+    docstring for what is measured; total runtime is dominated by one
+    XLA compile per grid point (seconds each), not by the runs."""
+    import jax
+
+    from repro.core.mc.exec import estimate_peak_bytes
+
+    cfg = CalibrationConfig() if cfg is None else cfg
+    path = default_calibration_path() if path is None else path
+    key = platform_key(device_count)
+
+    def log(msg):
+        if verbose:
+            print(f"calibrate[{key}]: {msg}", flush=True)
+
+    peaks = measure_machine_peaks(dim=cfg.peaks_dim)
+    log(f"peaks: {peaks['peak_gflops']:.2f} GFLOP/s, "
+        f"{peaks['peak_gibs']:.2f} GiB/s")
+
+    samples, coeffs = [], {}
+    for algo in cfg.algos:
+        fam = _algo_family(algo)
+        xs, ys = [], []
+        for n in cfg.n_grid:
+            for dim in cfg.dim_grid:
+                prob = _calib_problem(n, dim)
+                t = _timed_run(prob, algo, cfg.steps, cfg.seeds,
+                               warm_reps=cfg.warm_reps)
+                m = 2 if fam == "blind" else 1
+                step_us = t / (cfg.steps * cfg.seeds) * _US
+                flops = mc_slot_model(fam, n, dim, m)["flops"]
+                xs.append(flops)
+                ys.append(step_us)
+                samples.append([algo, int(n), int(dim),
+                                round(step_us, 3)])
+                log(f"{algo} N={n} d={dim}: {step_us:.1f} us/slot")
+        c0, c1 = _fit_nonneg(xs, ys)
+        coeffs[fam] = {"c0_us": round(c0, 4), "c1_us": c1}
+        log(f"{fam}: step_us = {c0:.2f} + {c1:.3e} * flops")
+
+    # dispatch probe: the same tiny workload all-live vs chunked — the
+    # per-call difference is row assembly + jit dispatch + host transfer
+    n0, d0 = cfg.n_grid[0], cfg.dim_grid[0]
+    prob0 = _calib_problem(n0, d0)
+    t_live = _timed_run(prob0, "gbma", cfg.steps, cfg.seeds,
+                        warm_reps=cfg.warm_reps)
+    t_chunk = _timed_run(prob0, "gbma", cfg.steps, cfg.seeds,
+                         seed_chunk=cfg.chunk_probe,
+                         warm_reps=cfg.warm_reps)
+    k = max(cfg.seeds // cfg.chunk_probe, 2)
+    dispatch_us = max(50.0, (t_chunk - t_live) / (k - 1) * _US)
+    log(f"dispatch: {dispatch_us:.0f} us/call")
+
+    # working-set profile: warm step time vs per-device live bytes on a
+    # probe workload, one point per seed_chunk (dispatch overhead
+    # subtracted so the factor isolates the memory effect)
+    n_p, d_p = cfg.n_grid[-1], cfg.dim_grid[-1]
+    prob_p = _calib_problem(n_p, d_p)
+    profile_pts = []
+    chunks = sorted({max(1, cfg.probe_seeds // 16),
+                     max(1, cfg.probe_seeds // 4), cfg.probe_seeds})
+    for chunk in chunks:
+        t = _timed_run(prob_p, "gbma", cfg.steps, cfg.probe_seeds,
+                       seed_chunk=None if chunk >= cfg.probe_seeds
+                       else chunk, warm_reps=cfg.warm_reps)
+        calls = -(-cfg.probe_seeds // chunk)
+        t_adj = max(t - (calls - 1) * dispatch_us / _US, 1e-9)
+        live = estimate_peak_bytes(
+            n_rows=1, seeds=cfg.probe_seeds, steps=cfg.steps, n_max=n_p,
+            dim=d_p, algo_set=("gbma",),
+            seed_chunk=None if chunk >= cfg.probe_seeds else chunk,
+            keep_seed_curves=False)["per_device_peak_bytes"]
+        step_us = t_adj / (cfg.steps * cfg.probe_seeds) * _US
+        profile_pts.append((live, step_us))
+        log(f"profile chunk={chunk}: {step_us:.1f} us/slot "
+            f"@ {live / 2**20:.1f} MiB live")
+    profile_pts.sort()
+    base = min(s for _, s in profile_pts)
+    factors = np.maximum.accumulate(
+        [max(1.0, s / base) for _, s in profile_pts])
+    chunk_profile = [[int(b), round(float(f), 4)]
+                     for (b, _), f in zip(profile_pts, factors)]
+
+    # compile probe: a grid-foreign shape's first call minus its warm
+    # steady state — one fresh `_mc_core` trace at calibration scale
+    n_c = cfg.n_grid[-1] + 1
+    prob_c = _calib_problem(n_c, cfg.dim_grid[0])
+    t0 = time.perf_counter()
+    _timed_run(prob_c, "gbma", cfg.steps, cfg.seeds, warm_reps=1)
+    t_cold_total = time.perf_counter() - t0
+    t_warm_c = _timed_run(prob_c, "gbma", cfg.steps, cfg.seeds,
+                          warm_reps=cfg.warm_reps)
+    compile_s = max(0.05, t_cold_total - 2 * t_warm_c)
+    log(f"compile: {compile_s:.2f} s")
+
+    entry = {
+        "config": dataclasses.asdict(cfg),
+        "peaks": peaks,
+        "peaks_dim": cfg.peaks_dim,
+        "coeffs": coeffs,
+        "dispatch_us": round(dispatch_us, 1),
+        "compile_s": round(compile_s, 3),
+        "chunk_profile": chunk_profile,
+        "samples": samples,
+        "jax_version": jax.__version__,
+    }
+    _write_entry(path, key, entry)
+    log(f"artifact -> {path}")
+    return entry
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Calibrate the MC cost model and persist the "
+                    "versioned JSON artifact (module docstring).")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-size suite (CalibrationConfig.smoke())")
+    ap.add_argument("--out", default=None,
+                    help="artifact path (default: REPRO_CALIBRATION_PATH "
+                         "or benchmarks/CALIBRATION_mc.json)")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    cfg = CalibrationConfig.smoke() if args.smoke else CalibrationConfig()
+    entry = calibrate(cfg, path=args.out, verbose=not args.quiet)
+    coeffs = ", ".join(
+        f"{fam}: {c['c0_us']:.2f}+{c['c1_us']:.2e}*flops us"
+        for fam, c in entry["coeffs"].items())
+    print(f"costmodel,calibrated,{platform_key()},{coeffs},"
+          f"dispatch_us={entry['dispatch_us']},"
+          f"compile_s={entry['compile_s']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -80,6 +80,15 @@ Array = jax.Array
 _DATA_STREAM = 0x64617461  # b"data"
 
 _TRACE_COUNT = 0
+_CACHE_EPOCH = 0
+
+
+def cache_epoch() -> int:
+    """Monotone counter bumped by every `clear_cache()`. Consumers that
+    key decisions on "has this program shape compiled before" (the sweep
+    server's shape-class registry) compare epochs to invalidate their
+    seen-sets exactly when the jit caches they mirror are dropped."""
+    return _CACHE_EPOCH
 
 
 def trace_count(reset: bool = False) -> int:
@@ -100,8 +109,9 @@ def clear_cache() -> bool:
     cold benchmark timings) and reset the trace counter. Returns False on
     JAX versions without jit clear_cache support — callers should then
     skip compile-count asserts."""
-    global _TRACE_COUNT
+    global _TRACE_COUNT, _CACHE_EPOCH
     _TRACE_COUNT = 0
+    _CACHE_EPOCH += 1
     cleared = False
     for fn in (_mc_core, _mc_stats, _mc_moments_merge):
         if hasattr(fn, "clear_cache"):

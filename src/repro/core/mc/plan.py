@@ -159,7 +159,10 @@ def auto_plan(*, n_rows: int, seeds: int, steps: int, n_max: int, dim: int,
               rng_plan: str = "hoisted", ota_impl: str = "auto",
               memory_budget_bytes: Optional[int] = None,
               target_chunk_bytes: Optional[int] = None,
-              device_count: Optional[int] = None) -> ExecPlan:
+              device_count: Optional[int] = None,
+              cost_model: str = "analytic",
+              calibration_path: Optional[str] = None,
+              _model=None) -> ExecPlan:
     """Derive an `ExecPlan` from the workload, the analytic memory model
     and the device topology. Fully deterministic given its inputs: every
     returned field is concrete (no `None` placement), so the plan is a
@@ -180,8 +183,26 @@ def auto_plan(*, n_rows: int, seeds: int, steps: int, n_max: int, dim: int,
     chunks (the throughput configuration — only (C, steps+1) statistics
     transfer); pass True explicitly when per-seed curves are needed
     (`energy_to_target`).
+
+    `cost_model="measured"` re-prices the seed-chunk choice with the
+    calibration-fed cost model (`repro.core.mc.costmodel`): every
+    shardable chunk that fits the memory budget is a candidate, ranked
+    by `CostModel.predict_run_us` (compute at the measured slot rate ×
+    the working-set profile factor, plus per-call dispatch). The choice
+    is conservative: it deviates from the analytic chunk only when the
+    predicted win exceeds 5% — microbench fits are not trusted for
+    coin-flip margins. When no calibration artifact matches this
+    platform/device count (`costmodel.load_cost_model` → None) the
+    analytic path runs EXACTLY — behavior-pinned in
+    `tests/test_costmodel.py`. `_model` injects a `CostModel` directly
+    (tests); `calibration_path` overrides the artifact location.
     """
     from repro.core.mc.exec import estimate_peak_bytes
+
+    if cost_model not in ("analytic", "measured"):
+        raise ValueError(
+            f"cost_model must be 'analytic' or 'measured', "
+            f"got {cost_model!r}")
 
     ndev = jax.device_count() if device_count is None else int(device_count)
     budget = device_memory_budget_bytes() if memory_budget_bytes is None \
@@ -220,6 +241,44 @@ def auto_plan(*, n_rows: int, seeds: int, steps: int, n_max: int, dim: int,
                           else candidates[0])
         if seed_chunk >= seeds:
             seed_chunk = None  # chunking the full axis is the all-live call
+
+    if cost_model == "measured":
+        model = _model
+        if model is None:
+            from repro.core.mc import costmodel as _costmodel
+            model = _costmodel.load_cost_model(calibration_path,
+                                               device_count=ndev)
+        if model is not None:
+            from repro.core.mc.costmodel import Workload
+
+            wl = Workload(n_rows=n_rows, seeds=seeds, steps=steps,
+                          n_max=n_max, dim=dim, algo_set=tuple(algo_set),
+                          m_sizes=tuple(m_sizes), b_max=b_max)
+
+            def candidate(chunk: Optional[int]) -> ExecPlan:
+                return ExecPlan(
+                    rng_plan=rng_plan, seed_chunk=chunk,
+                    n_shards=0 if n_sh <= 1 else n_sh,
+                    row_shards=max(row_sh, 1),
+                    keep_seed_curves=False, ota_impl=ota_impl)
+
+            chunks = [None if c >= seeds else c
+                      for c in _divisors_desc(seeds)
+                      if c % max(n_sh, 1) == 0]
+            fits = [c for c in chunks if per_device(c) <= budget]
+            if fits:
+                pred = {c: model.predict_run_us(candidate(c), wl,
+                                                device_count=ndev)
+                        for c in fits}
+                best = min(fits, key=lambda c: (pred[c],
+                                                -(c or seeds)))
+                # conservative: keep the analytic chunk inside a 5%
+                # prediction band — deviate only for a clear win
+                if seed_chunk in pred \
+                        and pred[seed_chunk] <= 1.05 * pred[best]:
+                    best = seed_chunk
+                seed_chunk = best
+
     if keep_seed_curves is None:
         keep_seed_curves = seed_chunk is None
     return ExecPlan(

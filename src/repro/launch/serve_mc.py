@@ -68,11 +68,17 @@ def _solo(req: SweepRequest):
                   theta0=req.theta0, shard_seeds=False)
 
 
-def _selftest(steps: int, seeds: int, quantum: int) -> int:
+def _selftest(steps: int, seeds: int, quantum: int,
+              bucket_base: float = 2.0) -> int:
+    # The demo mix spans two N-buckets inside the gbma signature, but a
+    # fresh server has seen neither shape class — first sight merges
+    # (compiles dominate the cost model's prediction), so the bucketed
+    # router keeps the one-compile-per-signature invariant this test pins.
     reqs = _demo_requests(steps, seeds)
     n_sigs = 3
     clear_cache()
-    results = serve_sync(reqs, McServeConfig(quantum_seeds=quantum))
+    results = serve_sync(reqs, McServeConfig(quantum_seeds=quantum,
+                                             bucket_base=bucket_base))
     compiles = trace_count()
     stats = serve_sync.last_stats
     ok = True
@@ -91,10 +97,16 @@ def _selftest(steps: int, seeds: int, quantum: int) -> int:
     if n_batches != n_sigs:
         ok = False
         print(f"FAIL: {n_batches} batches for {n_sigs} signatures")
+    if any(b["pad_flops_ratio"] < 1.0 for b in stats.batches):
+        ok = False
+        print("FAIL: pad_flops_ratio < 1.0 (padded FLOPs below useful)")
     verdict = "PASS" if ok else "FAIL"
     print(f"selftest {verdict}: {len(reqs)} requests -> {n_batches} "
           f"batches, {compiles} compiles, batches="
-          f"{[(b['requests'], b['rows'], b['quanta']) for b in stats.batches]}")
+          f"{[(b['requests'], b['rows'], b['quanta']) for b in stats.batches]}, "
+          f"pad_ratios="
+          f"{[b['pad_flops_ratio'] for b in stats.batches]}, "
+          f"occupancy={stats.bucket_occupancy}")
     return 0 if ok else 1
 
 
@@ -104,23 +116,30 @@ def main() -> None:
     ap.add_argument("--seeds", type=int, default=8)
     ap.add_argument("--quantum", type=int, default=4,
                     help="seeds per scheduling quantum")
+    ap.add_argument("--bucket-base", type=float, default=2.0,
+                    help="geometric N-bucket base of the pad-waste-aware "
+                         "coalescer; <= 1 disables bucketing")
     ap.add_argument("--selftest", action="store_true",
                     help="assert one compile per distinct signature and "
                          "demux == solo run_mc; exit nonzero on failure")
     args = ap.parse_args()
     if args.selftest:
-        sys.exit(_selftest(args.steps, args.seeds, args.quantum))
+        sys.exit(_selftest(args.steps, args.seeds, args.quantum,
+                           args.bucket_base))
     reqs = _demo_requests(args.steps, args.seeds)
     clear_cache()
     t0 = time.time()
-    results = serve_sync(reqs, McServeConfig(quantum_seeds=args.quantum))
+    results = serve_sync(reqs, McServeConfig(quantum_seeds=args.quantum,
+                                             bucket_base=args.bucket_base))
     dt = time.time() - t0
     stats = serve_sync.last_stats
     print(f"{len(reqs)} requests -> {len(stats.batches)} coalesced "
-          f"batches, {trace_count()} compiles, {dt:.1f}s")
+          f"batches, {trace_count()} compiles, {dt:.1f}s, "
+          f"bucket occupancy {stats.bucket_occupancy}")
     for b in stats.batches:
         print(f"  sig={b['signature']} requests={b['requests']} "
-              f"rows={b['rows']} seeds={b['seeds']} quanta={b['quanta']}")
+              f"rows={b['rows']} seeds={b['seeds']} quanta={b['quanta']} "
+              f"n_max={b['n_max']} pad_flops_ratio={b['pad_flops_ratio']}")
     for i, res in enumerate(results):
         print(f"  request {i}: final mean risk {res.mean[:, -1]}")
 

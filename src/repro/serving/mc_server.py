@@ -31,6 +31,34 @@ The server is three small pieces:
   `max_batch_rows`) closes the batch and starts the next one — same
   signature, but scheduled separately.
 
+* **Pad-waste-aware bucketing.** Coalescing pads every row to the batch
+  N_max, so a N=32 minnow merged with a N=4096 whale pays N=4096 FLOPs
+  per slot — cheap cold (one compile amortized across strangers), a pure
+  tax warm. The router therefore quantizes each request into a geometric
+  **N-bucket shape class** (`bucket_base`, ×2 by default) and prices
+  merged-vs-separate with the measured cost model
+  (`repro.core.mc.costmodel`): a signature group that spans buckets
+  merges only when `predicted(merged) ≤ predicted(separate) +
+  compile_amortization`, where each side charges `CostModel.compile_s`
+  for every shape class this server instance has not executed yet (a
+  per-instance registry, invalidated when `mc.clear_cache()` bumps
+  `exec.cache_epoch()`). On top of the static prediction the router
+  closes the loop with **measured layout feedback** (`measure_layouts`):
+  once a (signature, bucket) group's shapes are compiled, it times its
+  own warm batches (observations polluted by a recompile are discarded
+  via `trace_count()`), tries the group's two layouts — `merged` (one
+  padded batch) and `exact` (one batch per distinct N, zero pad) — once
+  each, then routes to the measured-cheaper one (µs per padded node).
+  Net effect: the first sight of a cross-bucket group merges (compiles
+  dominate), and steady-state traffic settles into whatever mix of
+  padded and exact batches this machine actually runs fastest — the
+  `serve_coalesce` bench entry records the warm win. Counter-based RNG
+  keeps every routing choice invisible in the numbers: bucketed demux ==
+  solo `run_mc` ≤ 1e-6 (property-tested). `ServeStats.bucket_occupancy`,
+  `ServeStats.layouts` and per-batch `pad_flops_ratio`/`layout` make the
+  routing observable. (Observations are µs per *demanded* node, so for
+  a stationary mix comparing rates compares round totals exactly.)
+
 * **Fairness-preserving preemption.** A batch does not run its whole
   seed axis in one blocking call: the scheduler round-robins *seed
   quanta* of `quantum_seeds` across all live batches — the same
@@ -63,6 +91,7 @@ from __future__ import annotations
 import asyncio
 import dataclasses
 import hashlib
+import math
 import time
 from collections import deque
 from typing import Optional, Sequence, Union
@@ -158,12 +187,33 @@ class McServeConfig:
     max_batch_rows: hard cap on rows per coalesced engine call.
     coalesce_window: seconds `serve_forever` waits after a wakeup for
         straggler requests before draining (0 = drain immediately).
+    bucket_base: geometric base of the N-bucket shape classes the
+        pad-waste-aware coalescer quantizes requests into (a request
+        whose largest row has N nodes lands in class base^ceil(log_base
+        N)). Values <= 1 (or 0/None) disable bucketing: every
+        signature group merges monolithically, the pre-cost-model
+        behavior.
+    compile_amortization_s: extra predicted seconds a merged batch may
+        cost over separate ones and still merge — slack biasing the
+        merge decision toward fewer compiles/dispatches. Unseen shape
+        classes already charge `CostModel.compile_s` inside the
+        prediction; this knob is on top (default 0 = decide purely on
+        predicted wall-clock).
+    measure_layouts: close the loop on the cost model: once a
+        (signature, bucket) group's shapes are compiled, time its warm
+        batches, try the `merged` and `exact` layouts once each, and
+        route steady-state traffic to the measured-cheaper one. False
+        restores the purely predicted (always-merged-within-bucket)
+        routing.
     """
 
     memory_budget_bytes: int = 2 * 2**30
     quantum_seeds: int = 64
     max_batch_rows: int = 256
     coalesce_window: float = 0.0
+    bucket_base: float = 2.0
+    compile_amortization_s: float = 0.0
+    measure_layouts: bool = True
 
 
 # --------------------------------------------------------------------------
@@ -235,21 +285,39 @@ class _NormRequest:
 
 @dataclasses.dataclass
 class ServeStats:
-    """Router observability, asserted on by the deterministic tests."""
+    """Router observability, asserted on by the deterministic tests.
+
+    `bucket_occupancy` counts admitted-and-routed requests per N-bucket
+    shape class (empty while bucketing is disabled); each entry of
+    `batches` records its batch's `n_max`, `bucket`, `layout` (the
+    measured-feedback routing that produced it — None outside the
+    layout loop) and `pad_flops_ratio` = rows·N_max / Σ N_i — the
+    padded-FLOPs multiplier the batch actually paid (1.0 = no pad
+    waste). `layouts` snapshots the router's measured layout
+    observations: "sig12/bucket" -> {layout: µs per demanded node}."""
 
     admitted: int = 0
     rejected: int = 0
     cancelled: int = 0
     failed_batches: int = 0
     batches: list = dataclasses.field(default_factory=list)
+    bucket_occupancy: dict = dataclasses.field(default_factory=dict)
+    layouts: dict = dataclasses.field(default_factory=dict)
 
 
 class _Job:
     """One coalesced batch in flight: merged rows + a seed cursor."""
 
-    def __init__(self, pending: Sequence[_Pending], cfg: McServeConfig):
+    def __init__(self, pending: Sequence[_Pending], cfg: McServeConfig,
+                 layout=None):
         self.pending = list(pending)
         self.cfg = cfg
+        # measured-layout bookkeeping: ((signature, bucket), layout name)
+        # tag from the router, wall-µs of warm quanta, and whether any
+        # quantum recompiled (which disqualifies the observation)
+        self.layout = layout
+        self.obs_us = 0.0
+        self.recompiled = False
         first = pending[0].req
         self.signature = first.signature
         self.algo = first.algo
@@ -272,6 +340,7 @@ class _Job:
             self.spans.append((off, off + r.n_rows))
             off += r.n_rows
         self.n_rows = off
+        self.row_nodes = tuple(p.n_nodes for p in self.problems)
         self.fracs = tuple(fracs) if first.fracs is not None else None
         self.m_per_row = tuple(m_rows) if first.m_per_row is not None \
             else None
@@ -303,7 +372,7 @@ class McSweepServer:
     after a round of submissions (tests, `serve_sync`)."""
 
     def __init__(self, cfg: McServeConfig = McServeConfig(), *,
-                 clock=None, executor=None):
+                 clock=None, executor=None, cost_model=None):
         self.cfg = cfg
         self.clock = clock if clock is not None else WallClock()
         self.executor = executor if executor is not None else LoopExecutor()
@@ -312,6 +381,18 @@ class McSweepServer:
         self._wakeup: Optional[asyncio.Event] = None
         self._task: Optional[asyncio.Task] = None
         self._running = False
+        # pad-waste-aware routing state: the injected (or lazily loaded)
+        # CostModel, the per-instance registry of (signature, bucket)
+        # shape classes this server has already executed, the measured
+        # layout observations ((signature, bucket) -> {layout: [µs,
+        # padded nodes]}) and the padded problem-pack cache — all
+        # mirrored on `exec.cache_epoch()` so `mc.clear_cache()` forgets
+        # them too
+        self._cost_model = cost_model
+        self._seen: set = set()
+        self._layout_obs: dict = {}
+        self._stack_cache: dict = {}
+        self._seen_epoch = exec_mod.cache_epoch()
 
     # ---- client surface -------------------------------------------------
     async def submit(self, request: SweepRequest) -> MCResult:
@@ -361,8 +442,8 @@ class McSweepServer:
         quantum per job until every job finishes."""
         while self._queue:
             pending, self._queue = self._queue, []
-            ready = deque(_Job(group, self.cfg)
-                          for group in self._coalesce(pending))
+            ready = deque(_Job(group, self.cfg, layout=tag)
+                          for group, tag in self._coalesce(pending))
             while ready:
                 job = ready.popleft()
                 if job.abandoned:
@@ -544,31 +625,193 @@ class McSweepServer:
     # ---- coalescing -----------------------------------------------------
     def _coalesce(self, pending: Sequence[_Pending]) -> list:
         """Group signature-equal requests (submission order preserved),
-        then pack each group into batches under the admission budget and
-        the row cap. Returns a list of pending-lists, one per batch."""
+        partition each group by the pad-waste-aware bucket rule
+        (`_partition`), then pack every partition into batches under the
+        admission budget and the row cap. Returns a list of
+        (pending-list, layout-tag) pairs, one per batch. Every routed
+        request's shape class is recorded in the seen-registry
+        afterwards — the next drain prices those classes as already
+        compiled."""
+        self._sync_seen_epoch()
         groups: dict[str, list[_Pending]] = {}
         for p in pending:
             groups.setdefault(p.req.signature, []).append(p)
         batches = []
-        for group in groups.values():
-            cur: list[_Pending] = []
-            for p in group:
-                trial = [q.req for q in cur] + [p.req]
-                rows = sum(r.n_rows for r in trial)
-                if cur and (rows > self.cfg.max_batch_rows
-                            or self._estimate(trial)
-                            > self.cfg.memory_budget_bytes):
-                    batches.append(cur)
-                    cur = [p]
-                else:
-                    cur.append(p)
-            batches.append(cur)
+        for sig, group in groups.items():
+            for part, tag in self._partition(sig, group):
+                batches.extend((b, tag) for b in self._pack(part))
+        if self._bucketing:
+            occ = self.stats.bucket_occupancy
+            for batch, _ in batches:
+                for p in batch:
+                    b = self._bucket(max(pr.n_nodes
+                                         for pr in p.req.problems))
+                    self._seen.add((p.req.signature, b))
+                    occ[b] = occ.get(b, 0) + 1
+        return batches
+
+    @property
+    def _bucketing(self) -> bool:
+        base = self.cfg.bucket_base
+        return bool(base) and base > 1.0
+
+    def _bucket(self, n: int) -> int:
+        """The geometric shape class of node count `n`: the smallest
+        base^k >= n (integer-rounded so fractional bases stay exact)."""
+        b = 1
+        while b < n:
+            b = max(b + 1, int(math.ceil(b * self.cfg.bucket_base)))
+        return b
+
+    def _sync_seen_epoch(self) -> None:
+        epoch = exec_mod.cache_epoch()
+        if epoch != self._seen_epoch:
+            self._seen.clear()
+            self._layout_obs.clear()
+            self._stack_cache.clear()
+            self._seen_epoch = epoch
+
+    def cost_model(self):
+        """The routing `CostModel`: injected at construction, else the
+        calibration artifact for this platform/device-count, else the
+        analytic fallback (lazy — servers that never see cross-bucket
+        traffic never load it)."""
+        if self._cost_model is None:
+            from repro.core.mc import costmodel as costmodel_mod
+
+            self._cost_model = (costmodel_mod.load_cost_model()
+                                or costmodel_mod.analytic_cost_model())
+        return self._cost_model
+
+    def _predict_batch_us(self, reqs: Sequence[_NormRequest]) -> float:
+        """Predicted wall-clock of serving `reqs` as ONE padded batch,
+        priced the way the scheduler will actually run it: every row at
+        the merged N_max, seed quanta as the chunk grain, single device
+        (`shard_seeds=False` in `_engine_call`)."""
+        from repro.core.mc.costmodel import Workload
+        from repro.core.mc.plan import ExecPlan
+
+        first = reqs[0]
+        wl = Workload(
+            n_rows=sum(r.n_rows for r in reqs), seeds=first.seeds,
+            steps=first.steps,
+            n_max=max(p.n_nodes for r in reqs for p in r.problems),
+            dim=first.problems[0].dim, algo_set=(first.algo,),
+            m_sizes=tuple(sorted({m for r in reqs
+                                  for m in (r.m_per_row or ())})),
+            b_max=max(r.b_max for r in reqs))
+        plan = ExecPlan(seed_chunk=min(self.cfg.quantum_seeds,
+                                       first.seeds),
+                        n_shards=0, row_shards=1, keep_seed_curves=True)
+        return self.cost_model().predict_run_us(plan, wl, device_count=1)
+
+    def _partition(self, sig: str, group: list) -> list:
+        """The merge decision (docs/serving.md), two levels, returning
+        (part, layout-tag) pairs.
+
+        Cross-bucket (predicted): a signature group that spans several
+        N-buckets merges only when the cost model prices the merged
+        padded batch at or below the per-bucket batches — each side
+        charged `compile_s` per shape class this server has not executed
+        yet, plus the `compile_amortization_s` slack on the separate
+        side.
+
+        Within-bucket (measured): each per-bucket group with more than
+        one distinct N then picks its layout — `merged` (one padded
+        batch) or `exact` (one zero-pad batch per distinct N) — from the
+        router's own warm-batch timings: unseen shapes merge (compile
+        amortization), each layout is explored once, then traffic
+        exploits the measured-cheaper µs per demanded node (ties
+        merge). Bucketing disabled = everything merges, untagged."""
+        if not self._bucketing:
+            return [(group, None)]
+        sub: dict[int, list] = {}
+        for p in group:
+            b = self._bucket(max(pr.n_nodes for pr in p.req.problems))
+            sub.setdefault(b, []).append(p)
+        if len(sub) > 1:
+            compile_us = self.cost_model().compile_s * 1e6
+            t_merged = self._predict_batch_us([p.req for p in group])
+            if (sig, max(sub)) not in self._seen:
+                t_merged += compile_us  # merged batch compiles at max-N
+            t_sep = 0.0
+            for b, ps in sub.items():
+                t_sep += self._predict_batch_us([p.req for p in ps])
+                if (sig, b) not in self._seen:
+                    t_sep += compile_us
+            slack = self.cfg.compile_amortization_s * 1e6
+            if t_merged <= t_sep + slack:
+                return [(group, None)]
+        parts = []
+        for b in sorted(sub):
+            parts.extend(self._layout(sig, b, sub[b]))
+        return parts
+
+    def _layout(self, sig: str, bucket: int, ps: list) -> list:
+        """Route one (signature, bucket) group by measured layout
+        feedback; returns (part, tag) pairs. Groups with a single
+        distinct N have nothing to decide (merged == exact)."""
+        by_n: dict[int, list] = {}
+        for p in ps:
+            n = max(pr.n_nodes for pr in p.req.problems)
+            by_n.setdefault(n, []).append(p)
+        if len(by_n) <= 1:
+            return [(ps, None)]
+        if not self.cfg.measure_layouts:
+            return [(ps, None)]  # purely predicted routing: merge
+        key = (sig, bucket)
+        obs = self._layout_obs.get(key, {})
+        if key not in self._seen:
+            choice = "merged"  # first sight: compile amortization wins
+        elif "merged" not in obs:
+            choice = "merged"  # explore the padded layout first
+        elif "exact" not in obs:
+            choice = "exact"
+        else:
+            per_node = {k: v[0] / max(v[1], 1) for k, v in obs.items()}
+            choice = ("merged" if per_node["merged"] <= per_node["exact"]
+                      else "exact")
+        if choice == "merged":
+            return [(ps, (key, "merged"))]
+        return [(by_n[n], (key, "exact")) for n in sorted(by_n)]
+
+    def _pack(self, group: list) -> list:
+        """Greedy-pack one mergeable run of requests into batches under
+        the admission budget and the row cap."""
+        batches = []
+        cur: list[_Pending] = []
+        for p in group:
+            trial = [q.req for q in cur] + [p.req]
+            rows = sum(r.n_rows for r in trial)
+            if cur and (rows > self.cfg.max_batch_rows
+                        or self._estimate(trial)
+                        > self.cfg.memory_budget_bytes):
+                batches.append(cur)
+                cur = [p]
+            else:
+                cur.append(p)
+        batches.append(cur)
         return batches
 
     # ---- execution ------------------------------------------------------
+    def _stacked(self, problems: Sequence[MCProblem]) -> MCProblemBatch:
+        """The padded problem pack for `problems`, cached per identity
+        tuple: persistent servers re-serving the same library-built
+        problems skip the numpy re-pad every round (problem data is
+        treated as immutable after submit). The cache holds strong
+        references, so the id-keys cannot alias, and is bounded."""
+        key = tuple(map(id, problems))
+        hit = self._stack_cache.get(key)
+        if hit is None:
+            hit = (MCProblemBatch.stack(problems), tuple(problems))
+            while len(self._stack_cache) >= 64:
+                self._stack_cache.pop(next(iter(self._stack_cache)))
+            self._stack_cache[key] = hit
+        return hit[0]
+
     def _engine_call(self, job: _Job, off: int, q: int):
         res = run_mc(
-            MCProblemBatch.stack(job.problems), job.channels, job.algo,
+            self._stacked(job.problems), job.channels, job.algo,
             job.betas, job.steps, q, seed0=job.seed0 + off,
             theta0=job.theta0, n_antennas=job.m_per_row,
             power_budget=job.budgets,
@@ -583,6 +826,8 @@ class McSweepServer:
         q = min(self.cfg.quantum_seeds, job.seeds - off)
         info = {"signature": job.signature[:12], "off": off, "quantum": q,
                 "rows": job.n_rows}
+        tc0 = exec_mod.trace_count()
+        t0 = time.perf_counter()
         try:
             risks, cum_e = await self.executor.run(
                 lambda: self._engine_call(job, off, q), info=info)
@@ -594,6 +839,9 @@ class McSweepServer:
                         ServeError(f"batch {job.signature[:12]} failed "
                                    f"at seed offset {off}: {e!r}"))
             return False
+        job.obs_us += (time.perf_counter() - t0) * 1e6
+        if exec_mod.trace_count() != tc0:
+            job.recompiled = True  # compile pollutes the warm timing
         job.risks[:, off:off + q] = risks
         job.cum_e[:, off:off + q] = cum_e
         job.off = off + q
@@ -612,6 +860,20 @@ class McSweepServer:
                 continue
             p.future.set_result(slice_result(full, slice(lo, hi)))
         self.stats.cancelled += cancelled
+        n_max = max(job.row_nodes)
+        if job.layout is not None and not job.recompiled:
+            key, choice = job.layout
+            ent = self._layout_obs.setdefault(key, {}) \
+                .setdefault(choice, [0.0, 0])
+            ent[0] += job.obs_us
+            # normalize by the *demanded* (unpadded) nodes: both layouts
+            # serve the same traffic, so µs per demanded node compares
+            # totals exactly — the merged layout's pad tax shows up as a
+            # worse rate, not a bigger denominator
+            ent[1] += sum(job.row_nodes)
+            self.stats.layouts[f"{key[0][:12]}/{key[1]}"] = {
+                k: round(v[0] / max(v[1], 1), 2)
+                for k, v in self._layout_obs[key].items()}
         self.stats.batches.append({
             "signature": job.signature[:12],
             "requests": len(job.pending),
@@ -619,6 +881,11 @@ class McSweepServer:
             "seeds": job.seeds,
             "quanta": job.quanta_run,
             "cancelled": cancelled,
+            "n_max": n_max,
+            "bucket": self._bucket(n_max) if self._bucketing else 0,
+            "layout": job.layout[1] if job.layout is not None else None,
+            "pad_flops_ratio": round(
+                job.n_rows * n_max / sum(job.row_nodes), 4),
         })
 
 

@@ -1,0 +1,270 @@
+"""Measured cost model: predictions, the calibration artifact, planner
+routing, and the bench-runner clobber guard.
+
+The load-bearing pins:
+
+  * `predict_run_us` is monotone non-decreasing in N, seeds and steps —
+    every fitted coefficient is clamped >= 0 and the working-set profile
+    factors are cummax'd, so the planner can trust comparisons.
+  * The calibration artifact is versioned and keyed by
+    `<platform>/<device_count>`: a version bump, a foreign key, or a
+    peaks-only entry (no fitted coefficients) is *stale* and
+    `load_cost_model` returns None.
+  * `auto_plan(cost_model="measured")` with no calibration entry is the
+    analytic path EXACTLY (behavior pin); with an injected model it
+    re-prices the seed chunk by predicted wall-clock.
+  * An unfiltered `python -m benchmarks.run` routes tracked-record
+    benches to the `.smoke.json` path unless `--write-bench` is passed
+    (the bench-clobber footgun).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import pytest
+
+from repro.core.mc.costmodel import (
+    CALIBRATION_VERSION,
+    CalibrationConfig,
+    CostModel,
+    Workload,
+    analytic_cost_model,
+    cached_machine_peaks,
+    load_cost_model,
+    mc_slot_model,
+    platform_key,
+)
+from repro.core.mc.plan import ExecPlan, auto_plan
+
+
+# --------------------------------------------------------------------------
+# fixtures: synthetic artifacts / models
+# --------------------------------------------------------------------------
+def _entry(**over) -> dict:
+    entry = {
+        "coeffs": {"gbma": {"c0_us": 10.0, "c1_us": 1e-3},
+                   "blind": {"c0_us": 20.0, "c1_us": 2e-3}},
+        "dispatch_us": 300.0,
+        "compile_s": 1.5,
+        "chunk_profile": [[1 << 20, 1.0], [64 << 20, 1.7]],
+        "peaks": {"peak_gflops": 4.0, "peak_gibs": 3.0},
+    }
+    entry.update(over)
+    return entry
+
+
+def _write_artifact(path, entry=None, key=None,
+                    version=CALIBRATION_VERSION) -> None:
+    data = {"version": version,
+            "entries": {key if key else platform_key():
+                        _entry() if entry is None else entry}}
+    path.write_text(json.dumps(data))
+
+
+def _synthetic(dispatch_us=0.0, compile_s=0.0, c0=0.0, c1=1.0,
+               chunk_profile=()) -> CostModel:
+    return CostModel(
+        coeffs=(("blind", c0, c1), ("gbma", c0, c1)),
+        dispatch_us=dispatch_us, compile_s=compile_s,
+        chunk_profile=chunk_profile,
+        peaks=(("peak_gflops", 1.0), ("peak_gibs", 1.0)),
+        source="measured")
+
+
+_PLAN = ExecPlan(seed_chunk=4, n_shards=0, row_shards=1,
+                 keep_seed_curves=False)
+
+
+def _wl(**over) -> Workload:
+    base = dict(n_rows=2, seeds=8, steps=50, n_max=64, dim=8)
+    base.update(over)
+    return Workload(**base)
+
+
+# --------------------------------------------------------------------------
+# slot model + prediction properties
+# --------------------------------------------------------------------------
+def test_slot_model_families_and_roofline_delegate():
+    g = mc_slot_model("gbma", 64, 8)
+    assert g["flops"] == 8 * 64 * 8 + 2 * 8 * 8
+    assert g["bytes"] == (5 * 64 * 8 + 64) * 4
+    b = mc_slot_model("blind", 64, 8, m=4)
+    assert b["flops"] > g["flops"]
+    from benchmarks.roofline import mc_slot_model as roofline_model
+    assert roofline_model("blind", 64, 8, 4) == b
+    with pytest.raises(ValueError, match="no slot model"):
+        mc_slot_model("warp", 8, 8)
+
+
+@pytest.mark.parametrize("model", [analytic_cost_model(),
+                                   _synthetic(dispatch_us=300.0, c0=5.0,
+                                              c1=1e-3)])
+def test_predict_run_us_monotone_in_n_seeds_steps(model):
+    """The planner comparison contract: predicted wall-clock never
+    decreases when the workload grows along any axis."""
+    for axis, grid in (("n_max", (16, 64, 256, 1024)),
+                       ("seeds", (4, 8, 16, 64)),
+                       ("steps", (10, 50, 200, 1000))):
+        preds = [model.predict_run_us(_PLAN, _wl(**{axis: v}),
+                                      device_count=1) for v in grid]
+        assert preds == sorted(preds), (axis, preds)
+        assert all(p > 0 for p in preds)
+
+
+def test_profile_factor_interpolates_and_clamps():
+    m = _synthetic(chunk_profile=((100.0, 1.0), (200.0, 2.0)))
+    assert m._profile_factor(50.0) == 1.0    # below the probed range
+    assert m._profile_factor(150.0) == pytest.approx(1.5)
+    assert m._profile_factor(10_000.0) == 2.0  # clamped beyond it
+    assert _synthetic()._profile_factor(123.0) == 1.0  # no profile
+
+
+def test_predict_step_us_prices_the_worst_family():
+    m = _synthetic(c0=1.0, c1=1e-3)
+    wl = _wl(algo_set=("gbma", "blind"), m_sizes=(2,))
+    blind_only = m.predict_step_us(_PLAN, _wl(algo_set=("blind",),
+                                              m_sizes=(2,)),
+                                   device_count=1)
+    assert m.predict_step_us(_PLAN, wl, device_count=1) == blind_only
+
+
+# --------------------------------------------------------------------------
+# the calibration artifact
+# --------------------------------------------------------------------------
+def test_load_cost_model_roundtrip(tmp_path):
+    p = tmp_path / "cal.json"
+    _write_artifact(p)
+    m = load_cost_model(str(p))
+    assert m is not None and m.source == "measured"
+    assert dict((f, (a, b)) for f, a, b in m.coeffs) == \
+        {"gbma": (10.0, 1e-3), "blind": (20.0, 2e-3)}
+    assert m.dispatch_us == 300.0 and m.compile_s == 1.5
+    assert m.chunk_profile == ((float(1 << 20), 1.0),
+                               (float(64 << 20), 1.7))
+
+
+def test_stale_artifacts_are_not_loaded(tmp_path):
+    missing = tmp_path / "nope.json"
+    assert load_cost_model(str(missing)) is None
+
+    garbage = tmp_path / "garbage.json"
+    garbage.write_text("{not json")
+    assert load_cost_model(str(garbage)) is None
+
+    stale = tmp_path / "stale.json"
+    _write_artifact(stale, version=CALIBRATION_VERSION + 1)
+    assert load_cost_model(str(stale)) is None
+
+    foreign = tmp_path / "foreign.json"
+    _write_artifact(foreign, key="tpu/8")
+    assert load_cost_model(str(foreign)) is None
+    assert load_cost_model(str(foreign), platform="tpu",
+                           device_count=8) is not None
+
+    peaks_only = tmp_path / "peaks.json"
+    _write_artifact(peaks_only,
+                    entry={"peaks": {"peak_gflops": 1.0,
+                                     "peak_gibs": 1.0}})
+    assert load_cost_model(str(peaks_only)) is None  # no coefficients
+
+
+def test_cached_machine_peaks_measures_once(tmp_path):
+    p = tmp_path / "cal.json"
+    calls = []
+
+    def fake(dim=1536, reps=3):
+        calls.append(dim)
+        return {"peak_gflops": 1.0, "peak_gibs": 2.0}
+
+    first = cached_machine_peaks(dim=64, reps=1, path=str(p), measure=fake)
+    assert first == {"peak_gflops": 1.0, "peak_gibs": 2.0}
+    assert calls == [64]
+    # second call is served from the artifact entry — no re-measure
+    second = cached_machine_peaks(dim=64, reps=1, path=str(p),
+                                  measure=fake)
+    assert second == first and calls == [64]
+    # a different device count is a different entry key: measured afresh
+    cached_machine_peaks(dim=64, reps=1, path=str(p), device_count=7,
+                         measure=fake)
+    assert calls == [64, 64]
+    data = json.loads(p.read_text())
+    assert data["version"] == CALIBRATION_VERSION
+    assert set(data["entries"]) == {platform_key(), platform_key(7)}
+
+
+def test_smoke_calibration_config_is_strictly_smaller():
+    full, smoke = CalibrationConfig(), CalibrationConfig.smoke()
+    assert max(smoke.n_grid) < max(full.n_grid)
+    assert smoke.probe_seeds < full.probe_seeds
+    assert smoke.peaks_dim < full.peaks_dim
+
+
+# --------------------------------------------------------------------------
+# auto_plan routing
+# --------------------------------------------------------------------------
+_AUTO_KW = dict(n_rows=4, seeds=64, steps=400, n_max=512, dim=16,
+                memory_budget_bytes=1 << 30, device_count=1)
+
+
+def test_auto_plan_measured_without_calibration_is_analytic(tmp_path):
+    """The behavior pin: no matching calibration entry -> the analytic
+    plan, field for field."""
+    analytic = auto_plan(**_AUTO_KW)
+    measured = auto_plan(**_AUTO_KW, cost_model="measured",
+                         calibration_path=str(tmp_path / "absent.json"))
+    assert measured == analytic
+
+
+def test_auto_plan_rejects_unknown_cost_model():
+    with pytest.raises(ValueError, match="cost_model"):
+        auto_plan(**_AUTO_KW, cost_model="vibes")
+
+
+def test_auto_plan_injected_model_reprices_the_chunk():
+    """A dispatch-dominated model makes every extra engine call a loss:
+    the measured branch picks the all-live call (one dispatch) where the
+    analytic cache-target heuristic would chunk."""
+    analytic = auto_plan(**_AUTO_KW, target_chunk_bytes=1 << 24)
+    assert analytic.seed_chunk is not None  # the heuristic chunks
+    plan = auto_plan(**_AUTO_KW, target_chunk_bytes=1 << 24,
+                     cost_model="measured",
+                     _model=_synthetic(dispatch_us=1e9, c0=0.0, c1=0.0))
+    assert plan.seed_chunk is None  # one call, everything else equal
+    assert (plan.n_shards, plan.row_shards) == \
+        (analytic.n_shards, analytic.row_shards)
+
+
+def test_auto_plan_keeps_analytic_chunk_inside_the_tie_band():
+    """A flat model (every chunk predicts identically) must not move the
+    choice off the analytic chunk — conservative within 5%."""
+    analytic = auto_plan(**_AUTO_KW, target_chunk_bytes=1 << 24)
+    plan = auto_plan(**_AUTO_KW, target_chunk_bytes=1 << 24,
+                     cost_model="measured",
+                     _model=_synthetic(dispatch_us=0.0, c0=1.0, c1=0.0))
+    assert plan == analytic
+
+
+# --------------------------------------------------------------------------
+# the bench-clobber footgun
+# --------------------------------------------------------------------------
+def test_unfiltered_bench_run_never_writes_tracked_record(monkeypatch):
+    """`python -m benchmarks.run [bench_montecarlo]` must route the
+    tracked-record bench to its smoke path unless `--write-bench` is
+    passed; the flag flips the kwarg."""
+    import benchmarks.bench_montecarlo as bm
+    import benchmarks.run as runner
+
+    seen = []
+
+    def fake_run(verbose=True, smoke=False, write_bench=True):
+        seen.append(write_bench)
+        return {}
+
+    monkeypatch.setattr(bm, "run", fake_run)
+    monkeypatch.setattr(sys, "argv", ["run", "bench_montecarlo"])
+    runner.main()
+    monkeypatch.setattr(sys, "argv",
+                        ["run", "bench_montecarlo", "--write-bench"])
+    runner.main()
+    assert seen == [False, True]

@@ -129,6 +129,30 @@ def test_performance_md_documents_the_exec_plan_surface():
         "the documented large_chunked_placed entry left the benchmark")
 
 
+def test_performance_md_documents_the_cost_model():
+    """The measured cost model is part of the execution-layer contract:
+    every `CalibrationConfig` knob and the artifact/consumer vocabulary
+    must appear in docs/performance.md — adding a calibration knob
+    without documenting it fails tier-1."""
+    import dataclasses
+
+    from repro.core.mc import CalibrationConfig
+
+    text = (ROOT / "docs" / "performance.md").read_text()
+    for f in dataclasses.fields(CalibrationConfig):
+        assert f"`{f.name}`" in text, (
+            f"CalibrationConfig.{f.name} is a calibration knob but "
+            "docs/performance.md does not document it")
+    for name in ("costmodel", "CALIBRATION_mc.json",
+                 "REPRO_CALIBRATION_PATH", "predict_run_us",
+                 "load_cost_model", "cached_machine_peaks",
+                 'cost_model="measured"', "measured_plan",
+                 "--write-bench"):
+        assert name in text, (
+            f"docs/performance.md must document {name!r} (measured "
+            "cost model / calibration artifact section)")
+
+
 def test_serving_md_pins_the_mc_server_surface():
     """docs/serving.md is the sweep-server contract: every request and
     config field must appear in its schema/knob tables, the typed errors
@@ -152,7 +176,10 @@ def test_serving_md_pins_the_mc_server_surface():
                  "AdmissionError", "RequestError", "ServeError",
                  "quantum", "coalesc", "serve_sync", "serve_forever",
                  "InlineExecutor", "ManualClock", "TracingExecutor",
-                 "serve_coalesce", "--selftest"):
+                 "serve_coalesce", "--selftest", "pad_flops_ratio",
+                 "bucket_occupancy", "predict_run_us", "cache_epoch",
+                 "shape class", "monolithic_warm_s", "`layouts`",
+                 "demanded node"):
         assert name in text, (
             f"docs/serving.md must document {name!r} (signature/"
             "admission/preemption/harness sections)")

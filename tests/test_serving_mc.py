@@ -35,6 +35,7 @@ from repro.core.mc import (
     run_mc,
     trace_count,
 )
+from repro.core.mc.costmodel import CostModel
 from repro.serving.mc_server import (
     AdmissionError,
     InlineExecutor,
@@ -441,6 +442,204 @@ def test_engine_failure_contained_to_its_batch():
     assert srv.stats.failed_batches == 1
     assert [b["requests"] for b in srv.stats.batches] == [1]
     _assert_matches_solo(out[2], lone)
+
+
+# --------------------------------------------------------------------------
+# pad-waste-aware bucketing
+# --------------------------------------------------------------------------
+def _cost_model(dispatch_us=0.0, compile_s=0.0, c0=0.0, c1=1.0):
+    """A synthetic routing model: compute = c0 + c1 * slot_flops, with
+    dispatch/compile charges the test controls exactly."""
+    return CostModel(coeffs=(("blind", c0, c1), ("gbma", c0, c1)),
+                     dispatch_us=dispatch_us, compile_s=compile_s,
+                     chunk_profile=(),
+                     peaks=(("peak_gflops", 1.0), ("peak_gibs", 1.0)),
+                     source="measured")
+
+
+def test_bucket_shape_classes():
+    srv = McSweepServer()
+    assert [srv._bucket(n) for n in (1, 2, 3, 5, 8, 12, 17)] == \
+        [1, 2, 4, 8, 8, 16, 32]
+    assert srv._bucketing
+    assert not McSweepServer(McServeConfig(bucket_base=0))._bucketing
+    assert not McSweepServer(McServeConfig(bucket_base=1.0))._bucketing
+
+
+def test_pad_ratio_and_occupancy_recorded_on_merge():
+    """A cross-bucket group on a fresh server merges (compiles dominate)
+    and the batch entry records exactly the pad tax it paid."""
+    reqs = [_req(6, 0.5, data_seed=0), _req(12, 1.0, data_seed=1)]
+    srv = McSweepServer(McServeConfig(quantum_seeds=SEEDS),
+                        executor=InlineExecutor(),
+                        cost_model=_cost_model(compile_s=10.0))
+    results = serve_sync(reqs, server=srv)
+    assert [b["requests"] for b in srv.stats.batches] == [2]
+    batch = srv.stats.batches[0]
+    assert batch["n_max"] == 12 and batch["bucket"] == 16
+    assert batch["pad_flops_ratio"] == round(2 * 12 / 18, 4)
+    assert srv.stats.bucket_occupancy == {8: 1, 16: 1}
+    for res, req in zip(results, reqs):
+        _assert_matches_solo(res, req)
+
+
+def test_bucketing_disabled_is_the_monolithic_router():
+    """bucket_base <= 1 restores the pre-cost-model behavior: every
+    signature group merges, nothing is bucketed or recorded."""
+    reqs = [_req(3, 0.5, data_seed=0), _req(24, 1.0, data_seed=1)]
+    srv = McSweepServer(McServeConfig(quantum_seeds=SEEDS, bucket_base=0),
+                        executor=InlineExecutor(),
+                        cost_model=_cost_model())  # split-happy model
+    serve_sync(reqs, server=srv)
+    assert [b["requests"] for b in srv.stats.batches] == [2]
+    assert srv.stats.batches[0]["bucket"] == 0
+    assert srv.stats.bucket_occupancy == {}
+
+
+def test_first_sight_merges_then_steady_state_splits():
+    """The merge decision over a persistent server: round 1 merges the
+    cross-bucket group (two unseen shape classes vs one — compiles
+    dominate), round 2 splits it (everything compiled, pad waste is the
+    only term), and `clear_cache()` forgets the registry so round 3
+    merges again."""
+    mk = lambda: [_req(4, 0.5, data_seed=0), _req(24, 1.0, data_seed=1)]
+    ex = TracingExecutor()
+    srv = McSweepServer(McServeConfig(quantum_seeds=SEEDS), executor=ex,
+                        cost_model=_cost_model(compile_s=10.0))
+
+    def round_():
+        reqs = mk()
+
+        async def inner():
+            tasks = await submit_all(srv, reqs)
+            await srv.drain()
+            return await asyncio.gather(*tasks)
+
+        results = run(inner())
+        for res, req in zip(results, reqs):
+            _assert_matches_solo(res, req)
+
+    round_()
+    assert [b["requests"] for b in srv.stats.batches] == [2]
+    round_()
+    assert [b["requests"] for b in srv.stats.batches] == [2, 1, 1]
+    assert [c["rows"] for c in ex.calls] == [2, 1, 1]
+    assert [b["pad_flops_ratio"] for b in srv.stats.batches[1:]] == \
+        [1.0, 1.0]
+    clear_cache()  # bumps exec.cache_epoch() -> the registry resets
+    round_()
+    assert [b["requests"] for b in srv.stats.batches] == [2, 1, 1, 2]
+
+
+def test_layout_loop_explores_then_exploits_measured_winner():
+    """The within-bucket measured layout loop over a persistent server:
+    first sight merges (compile amortization), the warm `merged` and
+    `exact` layouts are each explored once (recompile-polluted rounds
+    don't count as observations), and steady state exploits whichever
+    µs-per-node observation is cheaper — injected here so the exploit
+    choice is deterministic."""
+    clear_cache()  # deterministic compile rounds for this jit cache
+    reqs = lambda: [_req(20, 0.5, data_seed=0), _req(28, 1.0, data_seed=1)]
+    srv = McSweepServer(McServeConfig(quantum_seeds=SEEDS),
+                        executor=InlineExecutor(),
+                        cost_model=_cost_model(compile_s=10.0))
+    key = (_sig(reqs()[0]), srv._bucket(28))
+
+    def round_():
+        rs = reqs()
+        for res, req in zip(serve_sync(rs, server=srv), rs):
+            _assert_matches_solo(res, req)
+        return [b["requests"] for b in srv.stats.batches]
+
+    assert round_() == [2]            # r1: first sight merges (compiles)
+    assert srv._layout_obs == {}      # ...so nothing was observed
+    assert round_() == [2, 2]         # r2: explore merged, warm -> obs
+    assert list(srv._layout_obs[key]) == ["merged"]
+    # r3: explore exact — its rows=1 shapes are already compiled (the
+    # solo verification calls above share the jit cache), so the round
+    # is warm and the observation lands immediately
+    assert round_() == [2, 2, 1, 1]
+    assert sorted(srv._layout_obs[key]) == ["exact", "merged"]
+    assert srv.stats.layouts == {
+        f"{key[0][:12]}/{key[1]}": {
+            k: round(v[0] / v[1], 2)
+            for k, v in srv._layout_obs[key].items()}}
+    # exploit: the measured-cheaper layout wins, whichever it is
+    srv._layout_obs[key] = {"merged": [1.0, 100], "exact": [9.0, 100]}
+    assert round_()[-1:] == [2]
+    assert srv.stats.batches[-1]["layout"] == "merged"
+    srv._layout_obs[key] = {"merged": [9.0, 100], "exact": [1.0, 100]}
+    assert round_()[-2:] == [1, 1]
+    assert [b["layout"] for b in srv.stats.batches[-2:]] == \
+        ["exact", "exact"]
+    assert [b["pad_flops_ratio"] for b in srv.stats.batches[-2:]] == \
+        [1.0, 1.0]
+
+
+def test_measure_layouts_off_is_the_purely_predicted_router():
+    """measure_layouts=False keeps within-bucket groups merged in steady
+    state (the pre-feedback behavior) and tags nothing."""
+    mk = lambda: [_req(20, 0.5, data_seed=0), _req(28, 1.0, data_seed=1)]
+    srv = McSweepServer(
+        McServeConfig(quantum_seeds=SEEDS, measure_layouts=False),
+        executor=InlineExecutor(), cost_model=_cost_model(compile_s=10.0))
+    for _ in range(3):
+        serve_sync(mk(), server=srv)
+    assert [b["requests"] for b in srv.stats.batches] == [2, 2, 2]
+    assert all(b["layout"] is None for b in srv.stats.batches)
+    assert srv._layout_obs == {}
+
+
+def test_stack_cache_reuses_padded_packs(monkeypatch):
+    """A persistent server re-serving the same problem objects pads and
+    stacks them once; later rounds reuse the cached pack (and still
+    demux correctly)."""
+    from repro.serving import mc_server as srv_mod
+
+    calls = []
+    orig = MCProblemBatch.stack
+    monkeypatch.setattr(
+        srv_mod.MCProblemBatch, "stack",
+        classmethod(lambda cls, probs: (calls.append(1), orig(probs))[1]))
+    req = _req(9, 0.5, data_seed=3)
+    srv = McSweepServer(McServeConfig(quantum_seeds=SEEDS),
+                        executor=InlineExecutor())
+    serve_sync([req], server=srv)
+    first_round = len(calls)
+    assert first_round >= 1
+    res2 = serve_sync([req], server=srv)[0]
+    assert len(calls) == first_round  # cache hit: no re-stack
+    _assert_matches_solo(res2, req)
+
+
+@settings(max_examples=4, deadline=None)
+@given(kind=strategies.sampled_from(("quadratic", "logistic")),
+       algo=strategies.sampled_from(("gbma", "momentum")),
+       n_small=strategies.sampled_from((3, 5)),
+       n_big=strategies.sampled_from((24, 40)),
+       minibatch=strategies.booleans())
+def test_property_bucketed_split_demux_matches_solo(kind, algo, n_small,
+                                                    n_big, minibatch):
+    """Property: whatever the routing decides, the numbers are invisible
+    — here a zero-compile model always splits the N-spread pair, and
+    each bucketed batch's demux still matches a dedicated solo run
+    <= 1e-6 (counter-based RNG makes routing a pure scheduling choice)."""
+    frac = 0.5 if (minibatch and kind == "logistic") else 1.0
+    a = _req(n_small, 0.5, 0.08, kind=kind, algo=algo, batch_frac=frac,
+             data_seed=0)
+    b = _req(n_big, 1.0, 0.05, kind=kind, algo=algo, batch_frac=frac,
+             data_seed=1)
+    assert _sig(a) == _sig(b)
+    srv = McSweepServer(McServeConfig(quantum_seeds=SEEDS),
+                        executor=InlineExecutor(),
+                        cost_model=_cost_model())
+    results = serve_sync([a, b], server=srv)
+    assert [s["requests"] for s in srv.stats.batches] == [1, 1]
+    assert all(s["pad_flops_ratio"] == 1.0 for s in srv.stats.batches)
+    assert set(srv.stats.bucket_occupancy) == \
+        {srv._bucket(n_small), srv._bucket(n_big)}
+    for res, req in zip(results, [a, b]):
+        _assert_matches_solo(res, req)
 
 
 # --------------------------------------------------------------------------
