@@ -18,13 +18,19 @@
       per-node power budget through binding territory — the local error
       accumulation carries the truncated mass forward, so convergence
       degrades gracefully instead of stalling.
+  (g) partial participation — each slot every node independently
+      transmits with probability p (the unreliable-node setting of the
+      federated OTA literature); the OTA sum loses mass but also noise
+      averaging, so convergence degrades smoothly with p.
 
 Every sweep runs through the Monte Carlo engine. (a) is a single vmapped
 call over the five phase configs — a one-config-list change, no new loop
 code; (b) needs one call per fading family (the family is a static compile
 choice); (d) uses the engine's `n_antennas`; (e) batches the three
 algorithms per-row in one compile; (f) batches the budgets per-row (the
-budget is data) in one compile.
+budget is data) in one compile; (g) batches the participation
+probabilities per-row (p is data behind one static mask flag) in one
+compile.
 """
 from __future__ import annotations
 
@@ -125,6 +131,16 @@ def run(verbose: bool = True) -> list[str]:
         label = "inf(blind)" if not np.isfinite(f) else f"{f:g}"
         rows.append(f"ablation_blind_budget,frac={label},"
                     f"final={emp[-1]:.4e}")
+    # ---- (g) partial participation: per-row p sweep, one compile ----------
+    ch = ChannelConfig(fading="rayleigh", noise_std=0.5)
+    beta = stepsize_theorem1(prob.pc, ch, N, safety=0.8)
+    ps = (1.0, 0.9, 0.7, 0.5, 0.3)
+    res = run_mc(mc, [ch] * len(ps), "gbma", [beta] * len(ps), STEPS,
+                 SEEDS, participation=list(ps))
+    for p, emp in zip(ps, res.mean):
+        rows.append(f"ablation_participation,p={p:g},"
+                    f"final={emp[-1]:.4e}")
+
     if verbose:
         print("\n".join(rows))
     return rows

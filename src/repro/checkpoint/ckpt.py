@@ -2,9 +2,27 @@
 
 Leaves are stored in an .npz keyed by '/'-joined tree paths; restore
 validates structure against a template tree and re-casts dtypes.
+
+Crash-safety contract (docs/performance.md, "Fault tolerance"):
+
+* **Atomic writes** — `save` writes to a temp file, fsyncs it (and,
+  best-effort, its directory) before `os.replace`-ing it into place, so
+  a crash mid-write can never leave a half-written artifact under the
+  final name.
+* **Content hash** — every artifact carries a sha256 of its own leaves
+  (dtype/shape headers + raw bytes) under the reserved `__sha256__` key;
+  `peek`/`restore` verify it, so a bit-flipped or torn file raises a
+  typed `CheckpointCorrupt` instead of silently restoring garbage.
+  Legacy artifacts without the hash still load (unverified).
+* **Keep-last-2 rotation** — `save` rotates the previous artifact to
+  `<path>.prev` before replacing, so one good checkpoint survives even
+  a corrupting crash during the newest write; consumers (the resume
+  path of `repro.core.mc.exec.run_chunked`) fall back to it on
+  `CheckpointCorrupt`.
 """
 from __future__ import annotations
 
+import hashlib
 import os
 from typing import Any
 
@@ -12,6 +30,22 @@ import jax
 import numpy as np
 
 PyTree = Any
+
+# reserved leaf: the artifact's own content sha256 as a (32,) uint8 array
+_SHA_KEY = "__sha256__"
+# keep-last-2 rotation: the previous artifact survives under this suffix
+PREV_SUFFIX = ".prev"
+
+
+class CheckpointCorrupt(Exception):
+    """A checkpoint file that cannot be trusted: unreadable archive
+    (zero-length, truncated, torn write) or content-hash mismatch (bit
+    flip). Carries the `path` and a human-readable `reason`."""
+
+    def __init__(self, path: str, reason: str):
+        self.path = path
+        self.reason = reason
+        super().__init__(f"corrupt checkpoint at {path}: {reason}")
 
 
 def _flatten(tree: PyTree) -> dict:
@@ -26,11 +60,67 @@ def _flatten(tree: PyTree) -> dict:
     return flat
 
 
+def _content_sha(flat: dict) -> np.ndarray:
+    """sha256 over the artifact's leaves (sorted keys; dtype/shape headers
+    + raw bytes — the same leaf-hashing scheme the resume fingerprint
+    uses), as a (32,) uint8 array npz can round-trip."""
+    h = hashlib.sha256()
+    for key in sorted(flat):
+        if key == _SHA_KEY:
+            continue
+        arr = np.asarray(flat[key])
+        h.update(f"{key}:{arr.dtype.str}:{arr.shape};".encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return np.frombuffer(h.digest(), np.uint8)
+
+
 def save(path: str, tree: PyTree) -> None:
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    """Atomically persist `tree` at `path` with a content sha256 and
+    keep-last-2 rotation (previous artifact -> `path + '.prev'`)."""
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    flat = _flatten(tree)
+    flat[_SHA_KEY] = _content_sha(flat)
     tmp = path + ".tmp.npz"
-    np.savez(tmp, **_flatten(tree))
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(path):
+        os.replace(path, path + PREV_SUFFIX)
     os.replace(tmp, path)
+    try:  # directory fsync: makes the replace itself durable (best-effort
+        # — not every filesystem supports opening a directory)
+        dfd = os.open(parent, os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
+    except OSError:
+        pass
+
+
+def _load_verified(path: str) -> dict:
+    """{flat_key: array} of a checkpoint, sha-verified. Raises
+    `CheckpointCorrupt` on a missing/unreadable archive (zero-length,
+    truncated, torn write) or a content-hash mismatch (bit flip)."""
+    if not os.path.exists(path):
+        raise CheckpointCorrupt(path, "file does not exist")
+    if os.path.getsize(path) == 0:
+        raise CheckpointCorrupt(path, "zero-length file")
+    try:
+        with np.load(path, allow_pickle=False) as data:
+            flat = dict(data.items())
+    except Exception as e:  # BadZipFile / EOFError / zlib error / OSError
+        raise CheckpointCorrupt(
+            path, f"unreadable archive (truncated or torn write): "
+                  f"{type(e).__name__}: {e}") from e
+    sha = flat.pop(_SHA_KEY, None)
+    if sha is not None and not np.array_equal(
+            np.asarray(sha, np.uint8).ravel(), _content_sha(flat)):
+        raise CheckpointCorrupt(
+            path, "content sha256 mismatch (bit flip or partial write)")
+    return flat
 
 
 def peek(path: str) -> dict:
@@ -38,14 +128,14 @@ def peek(path: str) -> dict:
 
     For callers that must inspect identity/cursor leaves (e.g. a workload
     fingerprint) before they can know what shapes to validate against —
-    the resume path of `repro.core.mc.exec.run_chunked`."""
-    with np.load(path, allow_pickle=False) as data:
-        return dict(data.items())
+    the resume path of `repro.core.mc.exec.run_chunked`. Verifies the
+    content sha256 and raises `CheckpointCorrupt` on a zero-length,
+    truncated or bit-flipped file."""
+    return _load_verified(path)
 
 
 def restore(path: str, template: PyTree) -> PyTree:
-    with np.load(path, allow_pickle=False) as data:
-        flat = dict(data.items())
+    flat = _load_verified(path)
     leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for p, t in leaves_t:

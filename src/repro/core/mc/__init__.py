@@ -48,7 +48,8 @@ from repro.core.mc.costmodel import (
 )
 from repro.core.mc.exec import cache_epoch, estimate_peak_bytes, \
     static_signature
-from repro.core.mc.plan import ExecPlan, auto_plan, validate_plan
+from repro.core.mc.plan import ExecPlan, RetryPolicy, auto_plan, \
+    validate_plan
 from repro.core.mc.problems import (
     MCProblem,
     MCProblemBatch,
@@ -92,6 +93,7 @@ __all__ = [
     "MCResult",
     "PROBLEMS",
     "ProblemSpec",
+    "RetryPolicy",
     "SlotCtx",
     "auto_plan",
     "clear_cache",

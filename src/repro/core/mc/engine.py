@@ -226,6 +226,7 @@ def run_mc(
     plan: Union[ExecPlan, str, None] = None,
     resume_dir: Optional[str] = None,
     memory_budget_bytes: Optional[int] = None,
+    participation: Union[float, Sequence[float]] = 1.0,
 ) -> MCResult:
     """Run `seeds` Monte Carlo trajectories for each batch row.
 
@@ -301,6 +302,17 @@ def run_mc(
     the next call — an interrupted-then-resumed sweep is bit-identical
     to an uninterrupted one (counter-based RNG; see
     `exec.run_chunked`).
+
+    `participation` (scalar or one per row): per-slot node participation
+    probability p ∈ (0, 1] — each step each node independently transmits
+    with probability p and stays silent (zero transmission, zero energy)
+    otherwise, drawn from one extra hoisted counter-based stream
+    (disjoint fold_in constant, so enabling dropout shifts no other
+    draw). The edge still normalizes by the full N — the paper-level
+    graceful-degradation setting (ROADMAP item b, arXiv 2310.03371) —
+    and a per-row p sweep is ONE compile (p is data). The default 1.0
+    statically disables the stream and is bit-identical to a run without
+    the knob.
     """
     ch_batch = channels if isinstance(channels, ChannelBatch) \
         else ChannelBatch.stack(list(channels))
@@ -399,6 +411,22 @@ def run_mc(
     n_sizes = tuple(sorted(set(n_nodes)))
     algo_set = tuple(dict.fromkeys(algos))
 
+    # ---- normalize node participation ----------------------------------
+    if isinstance(participation, (int, float, np.integer, np.floating)):
+        parts = (float(participation),) * n_rows
+    else:
+        parts = tuple(float(p) for p in participation)
+        if len(parts) != n_rows:
+            raise ValueError(f"need one participation per row: "
+                             f"{len(parts)} vs C={n_rows}")
+    if any(not (0.0 < p <= 1.0) for p in parts):
+        raise ValueError(f"participation must be in (0, 1], got {parts}")
+    # static on/off only — the probabilities themselves are data, so a
+    # per-row p sweep shares one compile; p = 1.0 everywhere disables the
+    # mask stream entirely (bit-identical to a run without the knob, and
+    # params stays key-identical so resume fingerprints don't shift)
+    participation_on = any(p < 1.0 for p in parts)
+
     # ---- resolve the execution plan ------------------------------------
     # Three sources, one record: an explicit ExecPlan, "auto" (derived
     # from the memory model + topology), or the legacy kwargs building
@@ -413,6 +441,7 @@ def run_mc(
             n_rows=n_rows, seeds=seeds, steps=steps, n_max=n_max, dim=dim,
             algo_set=algo_set, n_antennas=n_antennas, m_sizes=m_sizes,
             b_max=b_max, invert_channel=invert_channel,
+            participation_on=participation_on,
             memory_budget_bytes=memory_budget_bytes)
     else:
         shim_shards: Optional[int] = None
@@ -481,6 +510,8 @@ def run_mc(
         # exactly (float32 rounds above 2^24); the single consumer divides
         # by it after an explicit float cast
         params["b_count"] = jnp.asarray(b_counts, jnp.int32)
+    if participation_on:
+        params["participation"] = jnp.asarray(parts, jnp.float32)
 
     t0 = jnp.zeros((dim,), jnp.float32) if theta0 is None \
         else jnp.asarray(theta0, jnp.float32)
@@ -495,14 +526,16 @@ def run_mc(
         sample_idx_fn=(sto_spec.sample_indices_row
                        if sto_spec is not None else None),
         sgrad_idx_fn=(sto_spec.stochastic_grad_from_idx
-                      if sto_spec is not None else None))
+                      if sto_spec is not None else None),
+        participation_on=participation_on)
     if eff_plan.seed_chunk is not None:
         risks, cum_e, mean, ci95 = exec_mod.run_chunked(
             params, betas, t0, seed_ints, data,
             seed_chunk=eff_plan.seed_chunk,
             keep_seed_curves=eff_plan.keep_seed_curves,
             n_shards=n_shards, row_shards=eff_plan.row_shards,
-            core_kwargs=core_kwargs, resume_dir=resume_dir)
+            core_kwargs=core_kwargs, resume_dir=resume_dir,
+            retry=eff_plan.retry)
     else:
         seed_arr = jnp.asarray(seed_ints)
         if eff_plan.keep_seed_curves:

@@ -78,6 +78,10 @@ Array = jax.Array
 # fold_in constant deriving the per-trajectory minibatch key stream from
 # the trajectory key — disjoint from the `split(key, steps)` slot keys
 _DATA_STREAM = 0x64617461  # b"data"
+# fold_in constant for the per-step node-participation mask stream —
+# disjoint from both the slot keys and the minibatch stream, so enabling
+# dropout cannot shift any other draw
+_PART_STREAM = 0x70617274  # b"part"
 
 _TRACE_COUNT = 0
 _CACHE_EPOCH = 0
@@ -127,7 +131,7 @@ _STATIC_ARGNAMES = (
     "grad_fn", "risk_fn", "row_based", "algo_set", "fading", "steps",
     "n_sizes", "n_antennas", "m_sizes", "invert_channel", "h_min",
     "n_shards", "row_shards", "sgrad_fn", "b_max", "ota_impl", "rng_plan",
-    "phase_zero", "sample_idx_fn", "sgrad_idx_fn",
+    "phase_zero", "sample_idx_fn", "sgrad_idx_fn", "participation_on",
 )
 
 
@@ -136,7 +140,8 @@ def _mc_core_impl(params, betas, theta0, seeds, data, *, grad_fn, risk_fn,
                   m_sizes, invert_channel, h_min, n_shards, row_shards=1,
                   sgrad_fn=None, b_max=0, ota_impl="inline",
                   rng_plan="hoisted", phase_zero=False, sample_idx_fn=None,
-                  sgrad_idx_fn=None, reduce_moments=False):
+                  sgrad_idx_fn=None, participation_on=False,
+                  reduce_moments=False):
     """(C,)-batched rows × (S,) seeds × scan(steps), placed on a 2-D
     ("rows", "mc") device mesh when `n_shards > 0` or `row_shards > 1`.
 
@@ -229,7 +234,7 @@ def _mc_core_impl(params, betas, theta0, seeds, data, *, grad_fn, risk_fn,
             return jax.lax.switch(p["algo_idx"], branches, k)
 
         def body(carry, x):
-            k, h_slot, dk, dr_all, idx = x
+            k, h_slot, dk, dr_all, idx, pu = x
             if use_ec:
                 theta, m, e_res, cum_e = carry
             else:
@@ -254,9 +259,19 @@ def _mc_core_impl(params, betas, theta0, seeds, data, *, grad_fn, risk_fn,
                 # 0*NaN would leak it into ec=0 rows
                 alpha = jnp.where(p["ec"] > 0, alpha, 1.0)
                 x_tx = alpha[:, None] * u
-                e_res = p["ec"] * (u - x_tx)
             else:
                 x_tx = g
+            if participation_on:
+                # per-step Bernoulli node mask: a dropped node transmits
+                # nothing this slot (and spends no energy); the edge still
+                # normalizes by the full N — graceful degradation, not
+                # participant-aware rescaling
+                x_tx = (pu < p["participation"]).astype(
+                    jnp.float32)[:, None] * x_tx
+            if use_ec:
+                # residual sees the MASKED transmission: a dropped node
+                # carries its whole update forward as error feedback
+                e_res = p["ec"] * (u - x_tx)
             cum_e = cum_e + p["energy"] * jnp.sum(
                 x_tx.astype(jnp.float32) ** 2)
             v = slot(x_tx, k, h_slot, dr_all)
@@ -321,8 +336,20 @@ def _mc_core_impl(params, betas, theta0, seeds, data, *, grad_fn, risk_fn,
             carry0 = (t0, jnp.zeros_like(t0),
                       jnp.zeros((row["mask"].shape[0], t0.shape[0]),
                                 jnp.float32), jnp.float32(0.0))
+        part_u = None
+        if participation_on:
+            # the mask stream is hoisted under EVERY rng plan (one code
+            # path): a batched uniform over `split(fold_in(key, part), steps)`
+            # is stream-identical to per-step in-scan draws over the same
+            # keys, and the body stays pure linear algebra
+            part_keys = jax.random.split(
+                jax.random.fold_in(key, _PART_STREAM), steps)
+            part_u = jax.vmap(
+                lambda pk: jax.random.uniform(pk, (n_max_,), jnp.float32))(
+                    part_keys)
         carry_fin, (risks, cum_e) = jax.lax.scan(
-            body, carry0, (step_keys, h_all, data_keys, draws_all, idx_all))
+            body, carry0,
+            (step_keys, h_all, data_keys, draws_all, idx_all, part_u))
         theta_fin = carry_fin[0]
         fin = risk_fn(row, theta_fin) if row_based else risk_fn(theta_fin)
         risks = jnp.concatenate([risks, fin[None]])
@@ -452,9 +479,52 @@ def finalize_merged_stats(mean: np.ndarray, m2: np.ndarray,
 
 
 # --------------------------------------------------------------------------
-# seed-chunked scheduler (+ resume)
+# seed-chunked scheduler (+ resume + chunk-level fault isolation)
 # --------------------------------------------------------------------------
 _RESUME_FILE = "mc_chunked_resume.npz"
+
+# Fault-injection seam: hooks fire at the START of every chunk attempt
+# with {"off": int, "attempt": int, "stage": "moments"|"curves"}; a hook
+# that raises simulates that chunk failing (tests/_fault_harness.py
+# schedules deterministic fault patterns through this).
+_CHUNK_FAULT_HOOKS = []
+
+
+def install_chunk_fault_hook(hook):
+    """Register a chunk-attempt hook (fault injection); returns a
+    remover callable. Hooks see every attempt of every chunk and may
+    raise to make that attempt fail."""
+    _CHUNK_FAULT_HOOKS.append(hook)
+
+    def remove():
+        try:
+            _CHUNK_FAULT_HOOKS.remove(hook)
+        except ValueError:
+            pass
+    return remove
+
+
+def _attempt_chunk(retry, off, stage, attempt_fn, reset_fn=None):
+    """Run one chunk with the plan's `RetryPolicy`: on an exception the
+    accumulator state is rolled back (`reset_fn`), the policy's capped
+    exponential backoff waits, and the chunk re-runs — replaying its
+    exact counter-based streams, so a retried chunk is indistinguishable
+    from a first-try one. `retry=None` (or an exhausted budget)
+    re-raises: fail-fast is the legacy behavior and the checkpoint on
+    disk stays at the last completed chunk."""
+    attempt = 1
+    while True:
+        try:
+            for hook in list(_CHUNK_FAULT_HOOKS):
+                hook({"off": int(off), "attempt": attempt, "stage": stage})
+            return attempt_fn()
+        except Exception:
+            if retry is None or attempt >= retry.max_attempts:
+                raise
+            if reset_fn is not None:
+                reset_fn()
+            retry.wait(attempt)
+            attempt += 1
 
 
 def _hash_array_leaf(h, name, value) -> None:
@@ -523,7 +593,7 @@ def _workload_fingerprint(params, betas, theta0, seed_ints, data,
 
 def run_chunked(params, betas, theta0, seed_ints, data, *, seed_chunk,
                 keep_seed_curves, n_shards, row_shards=1, core_kwargs,
-                resume_dir=None):
+                resume_dir=None, retry=None):
     """Drive the seed axis in blocks of `seed_chunk` through one compiled
     program (chunk seed ints are data). Returns the same
     (risks, cum_energy, mean, ci95) quadruple as the single-shot paths,
@@ -544,7 +614,17 @@ def run_chunked(params, betas, theta0, seed_ints, data, *, seed_chunk,
     equals uninterrupted bit-for-bit. A checkpoint written by a
     different workload (fingerprint mismatch) raises instead of
     silently corrupting the sweep; a finished sweep's checkpoint
-    short-circuits straight to finalization.
+    short-circuits straight to finalization. A CORRUPT checkpoint
+    (truncated, bit-flipped — `ckpt.CheckpointCorrupt`) falls back to
+    the rotated `.prev` artifact, and when both are bad the sweep
+    restarts from scratch with a warning — never a crash, never a
+    silent resume from garbage.
+
+    `retry` (a `plan.RetryPolicy`) adds chunk-level fault isolation: a
+    chunk that raises is rolled back and re-attempted with capped
+    exponential backoff; counter-based RNG replays its exact streams, so
+    a sweep surviving k faults within budget is bit-identical to the
+    fault-free run.
     """
     seeds = len(seed_ints)
     if seed_chunk <= 0:
@@ -565,9 +645,13 @@ def run_chunked(params, betas, theta0, seed_ints, data, *, seed_chunk,
         cum_e = np.empty((n_rows, seeds, steps), np.float32)
         for off in range(0, seeds, seed_chunk):
             blk = jnp.asarray(seed_ints[off:off + seed_chunk])
-            r, ce = _mc_core(params, betas, theta0, blk, data,
-                             n_shards=n_shards, row_shards=row_shards,
-                             **core_kwargs)
+
+            def _run(blk=blk):
+                return _mc_core(params, betas, theta0, blk, data,
+                                n_shards=n_shards, row_shards=row_shards,
+                                **core_kwargs)
+
+            r, ce = _attempt_chunk(retry, off, "curves", _run)
             risks[:, off:off + seed_chunk] = np.asarray(r)
             cum_e[:, off:off + seed_chunk] = np.asarray(ce)
         return (risks, cum_e) + host_seed_stats(risks)
@@ -580,8 +664,19 @@ def run_chunked(params, betas, theta0, seed_ints, data, *, seed_chunk,
     ckpt_path = None
     if resume_dir is not None:
         ckpt_path = os.path.join(resume_dir, _RESUME_FILE)
-        if os.path.exists(ckpt_path):
-            raw = ckpt.peek(ckpt_path)
+        candidates = [p for p in (ckpt_path, ckpt_path + ckpt.PREV_SUFFIX)
+                      if os.path.exists(p)]
+        raw = None
+        for cand in candidates:
+            try:
+                raw = ckpt.peek(cand)
+                break
+            except ckpt.CheckpointCorrupt as e:
+                # fall back to the rotated artifact; a torn newest write
+                # costs at most one chunk of progress
+                import warnings
+                warnings.warn(f"ignoring corrupt resume checkpoint: {e}")
+        if raw is not None:
             if not np.array_equal(raw.get("fingerprint"), fp):
                 raise ValueError(
                     f"checkpoint at {ckpt_path} belongs to a different "
@@ -591,11 +686,33 @@ def run_chunked(params, betas, theta0, seed_ints, data, *, seed_chunk,
             start = int(raw["next_off"])
             acc_mean = jnp.asarray(raw["acc_mean"])
             acc_m2 = jnp.asarray(raw["acc_m2"])
+        elif candidates:
+            import warnings
+            warnings.warn(
+                f"no intact resume checkpoint under {resume_dir} — "
+                "restarting the sweep from the first chunk")
     for off in range(start, seeds, seed_chunk):
         blk = jnp.asarray(seed_ints[off:off + seed_chunk])
-        acc_mean, acc_m2 = _mc_moments_merge(
-            acc_mean, acc_m2, np.float32(off), params, betas, theta0, blk,
-            data, n_shards=n_shards, row_shards=row_shards, **core_kwargs)
+        # the merge DONATES the accumulators: for retry, snapshot them to
+        # host first so a failed attempt can roll back (the f32 round-trip
+        # is value-preserving — bit-identity holds)
+        snap = (np.asarray(acc_mean), np.asarray(acc_m2)) \
+            if retry is not None else None
+
+        def _merge(blk=blk, off=off):
+            return _mc_moments_merge(
+                acc_mean, acc_m2, np.float32(off), params, betas, theta0,
+                blk, data, n_shards=n_shards, row_shards=row_shards,
+                **core_kwargs)
+
+        def _reset(snap=snap):
+            nonlocal acc_mean, acc_m2
+            acc_mean = jnp.asarray(snap[0])
+            acc_m2 = jnp.asarray(snap[1])
+
+        acc_mean, acc_m2 = _attempt_chunk(
+            retry, off, "moments", _merge,
+            _reset if retry is not None else None)
         if ckpt_path is not None:
             # np.asarray copies to host BEFORE the next merge donates the
             # accumulator buffers back to XLA
@@ -621,6 +738,7 @@ def estimate_peak_bytes(*, n_rows: int, seeds: int, steps: int, n_max: int,
                         keep_seed_curves: bool = True,
                         rng_plan: str = "hoisted",
                         invert_channel: bool = False,
+                        participation_on: bool = False,
                         n_shards: int = 1, row_shards: int = 1) -> dict:
     """Analytic peak-memory estimate (bytes) of one engine call, per the
     execution-layer memory model (docs/performance.md).
@@ -653,6 +771,9 @@ def estimate_peak_bytes(*, n_rows: int, seeds: int, steps: int, n_max: int,
                 invert_channel=invert_channel)
         if b_max > 0:
             per_traj_draws += steps * n_max * b_max  # minibatch indices
+    if participation_on:
+        # the node-dropout mask stream hoists under EVERY rng plan
+        per_traj_draws += steps * n_max
     draw_bytes = n_rows * s_live * per_traj_draws * _F32
     # scanned outputs: risks (steps+1) + cum_energy (steps) per trajectory
     curve_bytes = n_rows * s_live * (2 * steps + 1) * _F32

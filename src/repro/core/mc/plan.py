@@ -30,7 +30,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+import time
+from typing import Callable, Optional
 
 import jax
 
@@ -43,6 +44,38 @@ DEFAULT_MEMORY_BUDGET_BYTES = 2 * 2**30
 # `large_chunked` benchmark entry — ~100 MiB at the hand-tuned chunk=32),
 # while staying big enough to amortize per-chunk dispatch.
 DEFAULT_CHUNK_TARGET_BYTES = 128 * 2**20
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Capped-exponential-backoff retry budget for one seed chunk (or one
+    serving quantum). A chunk that raises — injected fault, OOM, XLA
+    error, executor death — is re-attempted up to `max_attempts` times
+    total, waiting `delay_s(attempt)` between attempts. Counter-based RNG
+    makes the retried chunk replay its exact streams, so a sweep that
+    survives k faults within budget is bit-identical to the fault-free
+    run (pinned in tests/test_fault_tolerance.py).
+
+    max_attempts: total attempts per chunk (1 = no retry).
+    base_delay_s: backoff before the 2nd attempt; doubles per attempt.
+    cap_delay_s:  backoff ceiling.
+    sleep:        injectable sleep callable (tests/serving pass a virtual
+                  clock's sleep; None = `time.sleep`).
+    """
+
+    max_attempts: int = 3
+    base_delay_s: float = 0.05
+    cap_delay_s: float = 2.0
+    sleep: Optional[Callable] = None
+
+    def delay_s(self, attempt: int) -> float:
+        """Backoff after failed attempt number `attempt` (1-based)."""
+        return min(self.cap_delay_s,
+                   self.base_delay_s * 2 ** max(attempt - 1, 0))
+
+    def wait(self, attempt: int) -> None:
+        (self.sleep if self.sleep is not None else time.sleep)(
+            self.delay_s(attempt))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +97,10 @@ class ExecPlan:
     keep_seed_curves: False reduces per-seed curves to (mean, ci95) on
                 device — Chan-merged moments under chunking.
     ota_impl:   'auto' | 'pallas' | 'ref' routing of the OTA slot.
+    retry:      a `RetryPolicy` for chunk-level fault isolation in
+                `exec.run_chunked` (None = fail fast, the legacy
+                behavior). Retried chunks replay their counter-based RNG
+                streams, so surviving a fault never perturbs results.
     """
 
     rng_plan: str = "hoisted"
@@ -72,14 +109,21 @@ class ExecPlan:
     row_shards: int = 1
     keep_seed_curves: bool = True
     ota_impl: str = "auto"
+    retry: Optional[RetryPolicy] = None
 
     def replace(self, **kw) -> "ExecPlan":
         """A copy with the given fields swapped (frozen dataclass)."""
         return dataclasses.replace(self, **kw)
 
     def asdict(self) -> dict:
-        """Plain-dict view (benchmark/topology records)."""
-        return dataclasses.asdict(self)
+        """Plain-dict view (benchmark/topology records). The retry
+        policy's injectable sleep callable is not JSON material — it is
+        recorded by qualname (or None)."""
+        d = dataclasses.asdict(self)
+        if d.get("retry") is not None and d["retry"].get("sleep") is not None:
+            sleep = d["retry"]["sleep"]
+            d["retry"]["sleep"] = getattr(sleep, "__qualname__", repr(sleep))
+        return d
 
 
 def validate_plan(plan: ExecPlan, *, seeds: int, n_rows: int) -> None:
@@ -106,6 +150,16 @@ def validate_plan(plan: ExecPlan, *, seeds: int, n_rows: int) -> None:
         raise ValueError(
             f"row_shards={plan.row_shards} must be >= 1 and divide the "
             f"row count ({n_rows})")
+    if plan.retry is not None:
+        if plan.retry.max_attempts < 1:
+            raise ValueError(
+                f"retry.max_attempts must be >= 1, "
+                f"got {plan.retry.max_attempts}")
+        if plan.retry.base_delay_s < 0 or plan.retry.cap_delay_s < 0:
+            raise ValueError(
+                "retry delays must be nonnegative, got "
+                f"base_delay_s={plan.retry.base_delay_s}, "
+                f"cap_delay_s={plan.retry.cap_delay_s}")
 
 
 def resolve_seed_shards(plan: ExecPlan, seeds: int,
@@ -155,6 +209,7 @@ def _divisors_desc(n: int) -> list:
 def auto_plan(*, n_rows: int, seeds: int, steps: int, n_max: int, dim: int,
               algo_set=("gbma",), n_antennas=None, m_sizes=(),
               b_max: int = 0, invert_channel: bool = False,
+              participation_on: bool = False,
               keep_seed_curves: Optional[bool] = None,
               rng_plan: str = "hoisted", ota_impl: str = "auto",
               memory_budget_bytes: Optional[int] = None,
@@ -221,6 +276,7 @@ def auto_plan(*, n_rows: int, seeds: int, steps: int, n_max: int, dim: int,
             n_antennas=n_antennas, m_sizes=tuple(m_sizes), b_max=b_max,
             keep_seed_curves=False, rng_plan=rng_plan,
             invert_channel=invert_channel,
+            participation_on=participation_on,
             n_shards=max(n_sh, 1), row_shards=max(row_sh, 1))
         return est["per_device_peak_bytes"]
 

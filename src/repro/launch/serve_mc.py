@@ -10,10 +10,19 @@ nonzero on violation — the CI `serve-smoke` job runs this mode:
     compile — `trace_count()` equals the number of distinct signatures;
   * every demuxed per-request result matches a dedicated solo `run_mc`
     call to <= 1e-6 relative.
+
+`--selftest --chaos` additionally drives the fault-tolerance paths (the
+CI `chaos-smoke` job runs this): one injected engine-layer chunk fault
+retried bit-identically, one transient quantum failure recovered under
+`McServeConfig.retry`, and one mid-run deadline expiry resolving with a
+`PartialResult` that matches a dedicated run over the completed seeds —
+all on a virtual clock, no wall-clock sleeps.
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
+import dataclasses
 import sys
 import time
 
@@ -110,6 +119,143 @@ def _selftest(steps: int, seeds: int, quantum: int,
     return 0 if ok else 1
 
 
+class _VirtualClock:
+    """Injected server clock: advanced only by scripted events."""
+
+    def __init__(self):
+        self.now = 0.0
+
+    def time(self) -> float:
+        return self.now
+
+    async def sleep(self, dt: float) -> None:
+        self.now += dt
+        await asyncio.sleep(0)
+
+
+def _chaos(steps: int, seeds: int, quantum: int) -> int:
+    """Chaos scenarios for `--selftest --chaos`: scripted faults at the
+    engine and serving layers, each checked against its fault-free
+    reference. Returns 0/1 like `_selftest`."""
+    from repro.core.mc import ExecPlan, RetryPolicy
+    from repro.core.mc import exec as exec_mod
+    from repro.serving.mc_server import (
+        InlineExecutor,
+        McSweepServer,
+        PartialResult,
+    )
+
+    ok = True
+
+    def rel(a, b):
+        return np.max(np.abs(np.asarray(a) - np.asarray(b))
+                      / np.maximum(np.abs(np.asarray(b)), 1e-12))
+
+    # -- scenario 0: engine-layer chunk retry is bit-identical ----------
+    args = (_problem(12, 8, 0),
+            [ChannelConfig(fading="rayleigh", noise_std=0.5)],
+            "gbma", [0.08], steps, seeds)
+    plan = ExecPlan(seed_chunk=quantum, keep_seed_curves=False)
+    clean = run_mc(*args, plan=plan)
+    fired = []
+
+    def fail_first_attempts(info):
+        if info["attempt"] == 1:  # every chunk fails once
+            fired.append(info["off"])
+            raise RuntimeError("chaos: injected chunk fault")
+
+    remove = exec_mod.install_chunk_fault_hook(fail_first_attempts)
+    try:
+        survived = run_mc(*args, plan=plan.replace(
+            retry=RetryPolicy(max_attempts=2, sleep=lambda dt: None)))
+    finally:
+        remove()
+    if not (fired and np.array_equal(survived.mean, clean.mean)
+            and np.array_equal(survived.ci95, clean.ci95)):
+        ok = False
+        print(f"FAIL: chunk retry not bit-identical after {len(fired)} "
+              f"injected faults")
+
+    class _ChaosExecutor(InlineExecutor):
+        """Fails the `fail_at`-th engine call once; jumps the virtual
+        clock by `jump` after the `jump_after`-th call (a scripted slow
+        quantum)."""
+
+        def __init__(self, clock, fail_at=None, jump_after=None,
+                     jump=0.0):
+            self.clock = clock
+            self.fail_at = fail_at
+            self.jump_after = jump_after
+            self.jump = jump
+            self.n = 0
+
+        async def run(self, fn, info=None):
+            idx, self.n = self.n, self.n + 1
+            if idx == self.fail_at:
+                self.fail_at = None
+                raise RuntimeError("chaos: transient quantum failure")
+            out = await super().run(fn, info)
+            if idx == self.jump_after:
+                self.clock.now += self.jump
+            return out
+
+    async def drive(srv, reqs):
+        tasks = [asyncio.ensure_future(srv.submit(r)) for r in reqs]
+        await asyncio.sleep(0)
+        await srv.drain()
+        return await asyncio.gather(*tasks, return_exceptions=True)
+
+    # -- scenario 1: transient quantum failure recovered by cfg.retry ---
+    req = _demo_requests(steps, seeds)[0]
+    clock = _VirtualClock()
+    srv = McSweepServer(
+        McServeConfig(quantum_seeds=quantum,
+                      retry=RetryPolicy(max_attempts=3,
+                                        base_delay_s=0.01)),
+        executor=_ChaosExecutor(clock, fail_at=0), clock=clock)
+    (res,) = asyncio.run(drive(srv, [req]))
+    retries = srv.stats.retries
+    if isinstance(res, Exception) or retries < 1 \
+            or rel(res.risks, _solo(req).risks) > 1e-6:
+        ok = False
+        print(f"FAIL: retried quantum did not recover to the solo "
+              f"result ({res!r}, retries={retries})")
+
+    # -- scenario 2: mid-run deadline expiry -> PartialResult -----------
+    reqs = _demo_requests(steps, seeds)[:2]
+    hurried = dataclasses.replace(reqs[0], deadline_s=5.0)
+    patient = reqs[1]
+    clock = _VirtualClock()
+    srv = McSweepServer(
+        McServeConfig(quantum_seeds=quantum),
+        executor=_ChaosExecutor(clock, jump_after=0, jump=10.0),
+        clock=clock)
+    part, full = asyncio.run(drive(srv, [hurried, patient]))
+    part_ref = dataclasses.replace(hurried, seeds=quantum,
+                                   deadline_s=None)
+    if not (isinstance(part, PartialResult)
+            and part.seeds_completed == quantum
+            and part.result is not None
+            and rel(part.result.risks, _solo(part_ref).risks) <= 1e-6):
+        ok = False
+        print(f"FAIL: deadline expiry did not degrade gracefully "
+              f"({part!r})")
+    if isinstance(full, Exception) \
+            or rel(full.risks, _solo(patient).risks) > 1e-6:
+        ok = False
+        print("FAIL: the expired request disturbed its batchmate")
+    if srv.stats.deadline_expired != 1:
+        ok = False
+        print(f"FAIL: deadline_expired={srv.stats.deadline_expired}")
+
+    verdict = "PASS" if ok else "FAIL"
+    print(f"chaos {verdict}: {len(fired)} chunk faults retried "
+          f"bit-identically, 1 quantum failure recovered "
+          f"(retries={retries}), 1 deadline expiry -> "
+          f"PartialResult({quantum}/{seeds} seeds)")
+    return 0 if ok else 1
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=30)
@@ -122,10 +268,17 @@ def main() -> None:
     ap.add_argument("--selftest", action="store_true",
                     help="assert one compile per distinct signature and "
                          "demux == solo run_mc; exit nonzero on failure")
+    ap.add_argument("--chaos", action="store_true",
+                    help="with --selftest: also run the scripted fault "
+                         "scenarios (chunk retry, quantum retry, "
+                         "deadline expiry)")
     args = ap.parse_args()
     if args.selftest:
-        sys.exit(_selftest(args.steps, args.seeds, args.quantum,
-                           args.bucket_base))
+        rc = _selftest(args.steps, args.seeds, args.quantum,
+                       args.bucket_base)
+        if args.chaos:
+            rc |= _chaos(args.steps, args.seeds, args.quantum)
+        sys.exit(rc)
     reqs = _demo_requests(args.steps, args.seeds)
     clear_cache()
     t0 = time.time()

@@ -71,6 +71,19 @@ The server is three small pieces:
   quantum share one compiled slice shape; a ragged final quantum costs
   one extra compile.
 
+* **Fault tolerance.** Deadlines: a request still running when its
+  (relative) `deadline_s` expires resolves with a typed `PartialResult`
+  over the seeds its batch completed — the quantum scheduler's stitched
+  per-quantum results make the partial statistics exactly what a
+  dedicated `run_mc` over those seeds returns, and batchmates keep
+  running. Retry: `McServeConfig.retry` re-attempts a failed engine
+  quantum under capped exponential backoff before the failure reaches
+  any client. Watchdog: `hang_threshold_s` quarantines a signature whose
+  engine call ran too long (post-hoc on the injectable clock — fully
+  deterministic under the test harness) so one poison request cannot
+  starve the queue; later same-signature submits fail fast with
+  `QuarantinedError` carrying the original cause.
+
 Results demux back per request with `mc.slice_result` row views of the
 batch `MCResult`. Clients cancelling mid-batch detach their future; the
 batch still completes for its other requests (and a batch whose every
@@ -102,6 +115,7 @@ from repro.core.channel import ChannelConfig
 from repro.core.mc import exec as exec_mod
 from repro.core.mc.engine import MCResult, run_mc, slice_result
 from repro.core.mc.exec import estimate_peak_bytes, host_seed_stats
+from repro.core.mc.plan import RetryPolicy
 from repro.core.mc.problems import PROBLEMS, MCProblem, MCProblemBatch
 from repro.core.mc.slots import ALGO_REGISTRY
 
@@ -122,6 +136,37 @@ class AdmissionError(ServeError):
     """Request rejected by admission control: its own single-quantum
     working set (analytic `estimate_peak_bytes`) exceeds the server's
     memory budget."""
+
+
+class QuarantinedError(ServeError):
+    """The request's signature is quarantined: an earlier engine call for
+    it exceeded the hang threshold (`McServeConfig.hang_threshold_s`), so
+    the watchdog fenced the signature off rather than let one poison
+    request starve the queue. Carries the original cause; raised both on
+    the hung batch's own futures and on every subsequent same-signature
+    `submit`."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PartialResult:
+    """What a deadline-expired request resolves with (docs/serving.md):
+    the statistics of the seeds its batch HAD completed when the deadline
+    passed, instead of an error or an unbounded wait.
+
+    result:          an `MCResult` over the completed seed prefix —
+                     risks/cum_energy sliced to `seeds_completed`,
+                     mean/ci95 computed over exactly those seeds (the
+                     quantum scheduler replays per-seed streams, so these
+                     match a dedicated `run_mc` over the same seeds).
+                     None when the deadline passed before any quantum
+                     finished (`seeds_completed == 0`).
+    seeds_completed: seeds actually run when the deadline expired.
+    seeds_requested: the request's full seed count.
+    """
+
+    result: Optional[MCResult]
+    seeds_completed: int
+    seeds_requested: int
 
 
 # --------------------------------------------------------------------------
@@ -159,6 +204,13 @@ class SweepRequest:
     theta0:      shared starting iterate (whole-call data: requests must
                  agree on it to coalesce, so its bytes fold into the
                  signature); None = zeros.
+    deadline_s:  relative deadline in seconds (measured on the server's
+                 clock from admission). A request still running when it
+                 expires resolves with a typed `PartialResult` over the
+                 seeds its batch completed — batchmates are unaffected.
+                 None falls back to `McServeConfig.default_deadline_s`
+                 (None = no deadline). NOT a signature facet: requests
+                 differing only in deadline still coalesce.
     """
 
     problem: Union[MCProblem, Sequence[MCProblem]]
@@ -173,6 +225,7 @@ class SweepRequest:
     power_budget: Optional[Union[float, Sequence[float]]] = None
     momentum: float = 0.9
     theta0: Optional[np.ndarray] = None
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,6 +258,18 @@ class McServeConfig:
         route steady-state traffic to the measured-cheaper one. False
         restores the purely predicted (always-merged-within-bucket)
         routing.
+    default_deadline_s: deadline applied to requests that set none
+        (None = unbounded). Per-request `SweepRequest.deadline_s` wins.
+    hang_threshold_s: per-batch watchdog (None = off): an engine call
+        whose elapsed time on the server clock exceeds this quarantines
+        the batch's signature — its unresolved futures fail with
+        `QuarantinedError`, and every later same-signature submit is
+        rejected with the original cause, so one poison request cannot
+        starve the queue.
+    retry: a `RetryPolicy` re-attempting a failed engine quantum with
+        capped exponential backoff (backoff waits on the server clock —
+        virtual under the test harness). None (default) keeps the legacy
+        fail-fast containment: the batch's futures carry the error.
     """
 
     memory_budget_bytes: int = 2 * 2**30
@@ -214,6 +279,9 @@ class McServeConfig:
     bucket_base: float = 2.0
     compile_amortization_s: float = 0.0
     measure_layouts: bool = True
+    default_deadline_s: Optional[float] = None
+    hang_threshold_s: Optional[float] = None
+    retry: Optional[RetryPolicy] = None
 
 
 # --------------------------------------------------------------------------
@@ -257,6 +325,11 @@ class InlineExecutor:
 class _Pending:
     req: "_NormRequest"
     future: asyncio.Future
+    # absolute deadline on the server clock (None = unbounded), and
+    # whether this request already resolved with a PartialResult — which
+    # is NOT a cancellation for the stats
+    deadline: Optional[float] = None
+    expired: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -277,6 +350,7 @@ class _NormRequest:
     theta0: Optional[np.ndarray]
     signature: str
     b_max: int
+    deadline_s: Optional[float]  # effective (request or config default)
 
     @property
     def n_rows(self) -> int:
@@ -300,6 +374,9 @@ class ServeStats:
     rejected: int = 0
     cancelled: int = 0
     failed_batches: int = 0
+    retries: int = 0
+    deadline_expired: int = 0
+    quarantined: int = 0
     batches: list = dataclasses.field(default_factory=list)
     bucket_occupancy: dict = dataclasses.field(default_factory=dict)
     layouts: dict = dataclasses.field(default_factory=dict)
@@ -393,18 +470,30 @@ class McSweepServer:
         self._layout_obs: dict = {}
         self._stack_cache: dict = {}
         self._seen_epoch = exec_mod.cache_epoch()
+        # watchdog fence: signature -> original cause string; same-
+        # signature submits are rejected with QuarantinedError(cause)
+        self._quarantined: dict = {}
 
     # ---- client surface -------------------------------------------------
     async def submit(self, request: SweepRequest) -> MCResult:
         """Validate, admit and enqueue a request; resolves with this
         request's own `MCResult` slice once its batch completes. Raises
         `RequestError`/`AdmissionError` before enqueueing — a bad request
-        never reaches the router queue."""
+        never reaches the router queue. A signature the watchdog fenced
+        off raises `QuarantinedError` with the original cause."""
         norm = self._normalize(request)
+        cause = self._quarantined.get(norm.signature)
+        if cause is not None:
+            self.stats.rejected += 1
+            raise QuarantinedError(
+                f"signature {norm.signature[:12]} is quarantined: {cause}")
         self._admit(norm)
         self.stats.admitted += 1
         fut = asyncio.get_running_loop().create_future()
-        self._queue.append(_Pending(req=norm, future=fut))
+        deadline = None if norm.deadline_s is None \
+            else self.clock.time() + norm.deadline_s
+        self._queue.append(_Pending(req=norm, future=fut,
+                                    deadline=deadline))
         if self._wakeup is not None:
             self._wakeup.set()
         return await fut
@@ -446,15 +535,51 @@ class McSweepServer:
                           for group, tag in self._coalesce(pending))
             while ready:
                 job = ready.popleft()
+                self._expire_deadlines(job)
                 if job.abandoned:
-                    self.stats.cancelled += len(job.pending)
+                    # futures all resolved — only true cancellations (not
+                    # deadline expiries) count as cancelled; either way
+                    # the remaining quanta are dropped, so an expired
+                    # request never blocks the ring
+                    self.stats.cancelled += sum(
+                        1 for p in job.pending if not p.expired)
                     continue
                 if not await self._run_quantum(job):
                     continue  # batch failed; futures already resolved
+                self._expire_deadlines(job)
                 if job.done:
                     self._finish(job)
                 else:
                     ready.append(job)
+
+    # ---- deadlines ------------------------------------------------------
+    def _expire_deadlines(self, job: _Job) -> None:
+        """Resolve every pending request whose deadline has passed with a
+        `PartialResult` over the seeds the batch completed so far. Runs
+        before and after every quantum: graceful degradation costs at
+        most one quantum of latency, batchmates keep running, and a job
+        whose every client expired becomes `abandoned` (its remaining
+        quanta are dropped)."""
+        now = self.clock.time()
+        off = job.off
+        for p, (lo, hi) in zip(job.pending, job.spans):
+            if p.future.done() or p.deadline is None or now < p.deadline:
+                continue
+            if off > 0:
+                risks = job.risks[lo:hi, :off].copy()
+                cum_e = job.cum_e[lo:hi, :off].copy()
+                mean, ci95 = host_seed_stats(risks)
+                res = MCResult(risks=risks,
+                               mean=mean.astype(np.float32),
+                               ci95=ci95.astype(np.float32),
+                               cum_energy=cum_e, bounds=None, plan=None)
+            else:
+                res = None
+            p.expired = True
+            self.stats.deadline_expired += 1
+            p.future.set_result(PartialResult(
+                result=res, seeds_completed=off,
+                seeds_requested=job.seeds))
 
     # ---- validation / signature / admission -----------------------------
     def _normalize(self, req: SweepRequest) -> _NormRequest:
@@ -561,6 +686,11 @@ class McSweepServer:
             raise RequestError(
                 f"theta0 shape {theta0.shape} != (dim,) = "
                 f"({probs[0].dim},)")
+        deadline_s = req.deadline_s if req.deadline_s is not None \
+            else self.cfg.default_deadline_s
+        if deadline_s is not None and not deadline_s > 0:
+            raise RequestError(
+                f"deadline_s must be positive, got {deadline_s!r}")
         sig = self._signature(kind, probs[0], req.algo, req.steps,
                               req.seeds, req.seed0, channels[0].fading,
                               fracs is not None, m_per_row is not None,
@@ -570,7 +700,7 @@ class McSweepServer:
             betas=betas, steps=int(req.steps), seeds=int(req.seeds),
             seed0=int(req.seed0), fracs=fracs, m_per_row=m_per_row,
             budgets=budgets, momentum=float(req.momentum), theta0=theta0,
-            signature=sig, b_max=b_max)
+            signature=sig, b_max=b_max, deadline_s=deadline_s)
 
     @staticmethod
     def _signature(kind, prob, algo, steps, seeds, seed0, fading,
@@ -821,23 +951,57 @@ class McSweepServer:
 
     async def _run_quantum(self, job: _Job) -> bool:
         """One scheduling quantum of `job`; False when the batch failed
-        (its futures carry the exception) and must leave the ring."""
+        (its futures carry the exception) and must leave the ring.
+
+        With `cfg.retry` set, a failed engine call re-attempts under the
+        policy's capped backoff (waited on the server clock) before the
+        failure is routed to the clients — counter-based RNG replays the
+        quantum's exact seed streams, so a retried quantum is
+        indistinguishable from a first-try one. With
+        `cfg.hang_threshold_s` set, an engine call whose elapsed server-
+        clock time exceeds the threshold quarantines the signature
+        (post-hoc watchdog: deterministic under an injected clock, no
+        racing timers)."""
         off = job.off
         q = min(self.cfg.quantum_seeds, job.seeds - off)
         info = {"signature": job.signature[:12], "off": off, "quantum": q,
                 "rows": job.n_rows}
-        tc0 = exec_mod.trace_count()
-        t0 = time.perf_counter()
-        try:
-            risks, cum_e = await self.executor.run(
-                lambda: self._engine_call(job, off, q), info=info)
-        except Exception as e:  # noqa: BLE001 — routed to the clients
-            self.stats.failed_batches += 1
+        attempt = 1
+        while True:
+            tc0 = exec_mod.trace_count()
+            t0 = time.perf_counter()
+            w0 = self.clock.time()
+            try:
+                risks, cum_e = await self.executor.run(
+                    lambda: self._engine_call(job, off, q), info=info)
+                break
+            except Exception as e:  # noqa: BLE001 — routed to the clients
+                policy = self.cfg.retry
+                if policy is not None and attempt < policy.max_attempts:
+                    self.stats.retries += 1
+                    await self.clock.sleep(policy.delay_s(attempt))
+                    attempt += 1
+                    continue
+                self.stats.failed_batches += 1
+                for p in job.pending:
+                    if not p.future.done():
+                        p.future.set_exception(
+                            ServeError(f"batch {job.signature[:12]} failed "
+                                       f"at seed offset {off}: {e!r}"))
+                return False
+        elapsed = self.clock.time() - w0
+        if self.cfg.hang_threshold_s is not None \
+                and elapsed > self.cfg.hang_threshold_s:
+            cause = (f"engine call at seed offset {off} took "
+                     f"{elapsed:.3f}s > hang_threshold_s="
+                     f"{self.cfg.hang_threshold_s}")
+            self._quarantined[job.signature] = cause
+            self.stats.quarantined += 1
             for p in job.pending:
                 if not p.future.done():
-                    p.future.set_exception(
-                        ServeError(f"batch {job.signature[:12]} failed "
-                                   f"at seed offset {off}: {e!r}"))
+                    p.future.set_exception(QuarantinedError(
+                        f"signature {job.signature[:12]} quarantined: "
+                        f"{cause}"))
             return False
         job.obs_us += (time.perf_counter() - t0) * 1e6
         if exec_mod.trace_count() != tc0:
@@ -853,10 +1017,13 @@ class McSweepServer:
         full = MCResult(risks=job.risks, mean=mean.astype(np.float32),
                         ci95=ci95.astype(np.float32), cum_energy=job.cum_e,
                         bounds=None, plan=None)
-        cancelled = 0
+        cancelled = expired = 0
         for p, (lo, hi) in zip(job.pending, job.spans):
-            if p.future.done():  # client cancelled mid-batch
-                cancelled += 1
+            if p.future.done():  # cancelled mid-batch, or deadline fired
+                if p.expired:
+                    expired += 1
+                else:
+                    cancelled += 1
                 continue
             p.future.set_result(slice_result(full, slice(lo, hi)))
         self.stats.cancelled += cancelled
@@ -881,6 +1048,7 @@ class McSweepServer:
             "seeds": job.seeds,
             "quanta": job.quanta_run,
             "cancelled": cancelled,
+            "expired": expired,
             "n_max": n_max,
             "bucket": self._bucket(n_max) if self._bucketing else 0,
             "layout": job.layout[1] if job.layout is not None else None,

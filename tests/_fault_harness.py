@@ -1,0 +1,117 @@
+"""Composable fault injectors for the fault-tolerance suite.
+
+Layered on the deterministic serving harness (`tests/_serving_harness`):
+nothing here touches the wall clock or threads — every fault is a
+scripted, replayable event.
+
+* `ChunkFaultSchedule` — context manager injecting executor-level chunk
+  failures into `exec.run_chunked` through the
+  `exec.install_chunk_fault_hook` seam: `{off: n_failures}` makes the
+  chunk at seed offset `off` fail its first `n_failures` attempts and
+  succeed after. Records every fired fault for assertions.
+* `ClockJump`        — callable that jumps a `ManualClock` forward by
+  `dt`; hung-engine-call scenarios attach it with
+  `TracingExecutor.after_call` so the watchdog's post-hoc elapsed check
+  sees a "hang" without any real waiting.
+* `FlakyOnce`        — predicate for `TracingExecutor.fail_when` that
+  matches its first `times` matching calls only — fail-then-succeed at
+  the serving level (`fail_when` alone fails EVERY matching call, which
+  can never recover).
+* `torn_write` / `bit_flip` — file corruptors for checkpoint tests:
+  truncate to half (a torn write) or flip one payload bit (silent
+  storage corruption). `bit_flip` takes an optional `needle` so the
+  flip provably lands in array data rather than zip/npy header padding
+  the loader would shrug off.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.core.mc import exec as exec_mod
+
+
+class ChunkFaultSchedule:
+    """Deterministic chunk-failure schedule for `run_chunked`.
+
+    schedule: {seed_offset: n_failures} — the chunk starting at that
+    offset raises `RuntimeError` on its first n attempts (attempts are
+    1-based), then succeeds. Use as a context manager; `fired` collects
+    the injected-fault info dicts in order.
+    """
+
+    def __init__(self, schedule: dict):
+        self.schedule = dict(schedule)
+        self.fired = []
+        self._remove = None
+
+    def __call__(self, info: dict) -> None:
+        if self.schedule.get(info["off"], 0) >= info["attempt"]:
+            self.fired.append(dict(info))
+            raise RuntimeError(
+                f"injected chunk fault at off={info['off']} "
+                f"attempt={info['attempt']}")
+
+    def __enter__(self) -> "ChunkFaultSchedule":
+        self._remove = exec_mod.install_chunk_fault_hook(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if self._remove is not None:
+            self._remove()
+            self._remove = None
+
+
+class ClockJump:
+    """Jump a `ManualClock` forward by `dt` when called — the
+    deterministic 'hang': attach via `TracingExecutor.after_call(k, ...)`
+    and the k-th quantum's elapsed virtual time exceeds any threshold
+    below `dt` without a single real sleep."""
+
+    def __init__(self, clock, dt: float):
+        self.clock = clock
+        self.dt = dt
+
+    def __call__(self) -> None:
+        self.clock.now += self.dt
+
+
+class FlakyOnce:
+    """`fail_when` predicate matching only the first `times` calls that
+    satisfy `match` — a transient (recoverable) engine failure."""
+
+    def __init__(self, match, times: int = 1):
+        self.match = match
+        self.times = times
+        self.hits = 0
+
+    def __call__(self, info: dict) -> bool:
+        if self.hits < self.times and self.match(info):
+            self.hits += 1
+            return True
+        return False
+
+
+def torn_write(path: str) -> None:
+    """Truncate `path` to half its size — the on-disk state of a write
+    torn by a crash (no atomic-replace discipline)."""
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size // 2)
+
+
+def bit_flip(path: str, needle: bytes = None) -> None:
+    """Flip one bit of `path`. With `needle` (e.g. an array's
+    `.tobytes()`), the flipped byte is inside that payload — guaranteed
+    content corruption; without it, the middle byte flips (which may
+    land in inert archive padding)."""
+    with open(path, "r+b") as f:
+        blob = f.read()
+        pos = len(blob) // 2
+        if needle is not None:
+            at = blob.find(needle)
+            if at < 0:
+                raise AssertionError(
+                    "needle not found in file — not a stored payload")
+            pos = at + len(needle) // 2
+        f.seek(pos)
+        f.write(bytes([blob[pos] ^ 0x01]))

@@ -188,6 +188,45 @@ def test_serving_md_pins_the_mc_server_surface():
         "README.md must cross-link docs/serving.md")
 
 
+def test_fault_tolerance_docs_pin_the_retry_and_checkpoint_surface():
+    """The fault-tolerance contract spans both guides: every
+    `RetryPolicy` field and the checkpoint/retry vocabulary must appear
+    in docs/performance.md, the serving-side degradation vocabulary in
+    docs/serving.md, and the participation knob in docs/montecarlo.md —
+    adding a policy field or typed error without documenting it fails
+    tier-1."""
+    import dataclasses
+
+    from repro.core.mc import RetryPolicy
+
+    perf = (ROOT / "docs" / "performance.md").read_text()
+    for f in dataclasses.fields(RetryPolicy):
+        assert f"`{f.name}`" in perf, (
+            f"RetryPolicy.{f.name} is a retry knob but "
+            "docs/performance.md does not document it")
+    for name in ("RetryPolicy", "CheckpointCorrupt", "sha256",
+                 "os.replace", "`.prev`", "install_chunk_fault_hook",
+                 "bit-identical", "_fault_harness"):
+        assert name in perf, (
+            f"docs/performance.md must document {name!r} (fault-"
+            "tolerance section)")
+    serving = (ROOT / "docs" / "serving.md").read_text()
+    for name in ("PartialResult", "QuarantinedError", "`deadline_s`",
+                 "default_deadline_s", "hang_threshold_s",
+                 "seeds_completed", "seeds_requested", "watchdog",
+                 "deadline_expired", "quarantined", "--chaos",
+                 "chaos-smoke", "ClockJump", "FlakyOnce"):
+        assert name in serving, (
+            f"docs/serving.md must document {name!r} (fault-tolerance "
+            "section)")
+    mc_doc = (ROOT / "docs" / "montecarlo.md").read_text()
+    for name in ("`participation`", 'b"part"', "one compile"):
+        assert name in mc_doc, (
+            f"docs/montecarlo.md must document {name!r} (node-dropout "
+            "section)")
+    assert (ROOT / "tests" / "_fault_harness.py").is_file()
+
+
 def test_training_md_pins_the_transport_surface():
     """docs/training.md is the training-route contract: every registry
     aggregator must appear in its routing table, the transport knobs it

@@ -22,6 +22,7 @@ The load-bearing assertions:
 from __future__ import annotations
 
 import asyncio
+import dataclasses
 
 import numpy as np
 import pytest
@@ -36,16 +37,20 @@ from repro.core.mc import (
     trace_count,
 )
 from repro.core.mc.costmodel import CostModel
+from repro.core.mc.plan import RetryPolicy
 from repro.serving.mc_server import (
     AdmissionError,
     InlineExecutor,
     McServeConfig,
     McSweepServer,
+    PartialResult,
+    QuarantinedError,
     RequestError,
     ServeError,
     SweepRequest,
     serve_sync,
 )
+from tests._fault_harness import ClockJump, FlakyOnce
 from tests._hypothesis_compat import given, settings, strategies
 from tests._serving_harness import (
     ManualClock,
@@ -691,3 +696,238 @@ def test_submissions_during_drain_are_picked_up():
     assert len(srv.stats.batches) == 2
     _assert_matches_solo(r1, first)
     _assert_matches_solo(r2, late)
+
+
+# --------------------------------------------------------------------------
+# deadlines, quarantine, retry (fault tolerance)
+# --------------------------------------------------------------------------
+def _partial_ref(req, seeds_completed):
+    """Dedicated-run reference for a PartialResult: the same request
+    truncated to the seeds the batch had completed at expiry."""
+    return dataclasses.replace(req, seeds=seeds_completed,
+                               deadline_s=None)
+
+
+def test_deadline_mid_run_resolves_partial_batchmates_unaffected():
+    """Acceptance: a deadline expiring mid-run resolves that request
+    with a typed PartialResult whose statistics match a dedicated
+    `run_mc` over the completed seeds to <= 1e-6, while its batchmate
+    runs to completion and still matches its solo."""
+    hurried = _req(6, 0.5, seeds=8, data_seed=0, deadline_s=5.0)
+    patient = _req(9, 1.0, seeds=8, data_seed=1)
+    clock = ManualClock()
+    ex = TracingExecutor()
+    ex.after_call(0, ClockJump(clock, 10.0))  # quantum 0 "takes" 10 s
+    srv = McSweepServer(McServeConfig(quantum_seeds=4), executor=ex,
+                        clock=clock)
+
+    async def inner():
+        tasks = await submit_all(srv, [hurried, patient])
+        await srv.drain()
+        return await asyncio.gather(*tasks)
+
+    part, full = run(inner())
+    assert isinstance(part, PartialResult)
+    assert part.seeds_completed == 4 and part.seeds_requested == 8
+    _assert_matches_solo(part.result, _partial_ref(hurried, 4))
+    _assert_matches_solo(full, patient)  # batchmate untouched
+    assert [c["off"] for c in ex.calls] == [0, 4]  # batch ran to the end
+    assert srv.stats.deadline_expired == 1
+    assert srv.stats.cancelled == 0  # expiry is not a cancellation
+    assert srv.stats.batches[0]["expired"] == 1
+
+
+def test_deadline_expiring_before_any_quantum_yields_empty_partial():
+    """A request whose deadline passes before its first quantum resolves
+    with seeds_completed == 0 and result None, and its lone job is
+    dropped without computing anything."""
+    req = _req(6, 0.5, seeds=8, data_seed=0, deadline_s=1.0)
+    clock = ManualClock()
+    ex = TracingExecutor()
+    srv = McSweepServer(McServeConfig(quantum_seeds=4), executor=ex,
+                        clock=clock)
+
+    async def inner():
+        (task,) = await submit_all(srv, [req])
+        clock.now += 2.0  # deadline passes while queued
+        await srv.drain()
+        return await task
+
+    part = run(inner())
+    assert isinstance(part, PartialResult)
+    assert part.result is None and part.seeds_completed == 0
+    assert ex.calls == []  # nothing was computed for an expired request
+    assert srv.stats.cancelled == 0
+
+
+def test_all_clients_expired_drops_remaining_quanta():
+    """When every client of a batch has expired, the scheduler frees the
+    batch instead of computing seeds nobody will read."""
+    reqs = [_req(6, 0.5, seeds=12, data_seed=0, deadline_s=5.0),
+            _req(9, 1.0, seeds=12, data_seed=1, deadline_s=6.0)]
+    clock = ManualClock()
+    ex = TracingExecutor()
+    ex.after_call(0, ClockJump(clock, 10.0))
+    srv = McSweepServer(McServeConfig(quantum_seeds=4), executor=ex,
+                        clock=clock)
+
+    async def inner():
+        tasks = await submit_all(srv, reqs)
+        await srv.drain()
+        return await asyncio.gather(*tasks)
+
+    p1, p2 = run(inner())
+    assert len(ex.calls) == 1  # quanta 2 and 3 never ran
+    assert {p.seeds_completed for p in (p1, p2)} == {4}
+    assert srv.stats.deadline_expired == 2
+    assert srv.stats.cancelled == 0
+    assert srv.stats.batches == []  # the batch never completed
+
+
+@settings(max_examples=4, deadline=None)
+@given(jump_after=strategies.integers(min_value=0, max_value=1),
+       quantum=strategies.sampled_from([2, 4]))
+def test_deadline_expiry_never_blocks_batchmates(jump_after, quantum):
+    """Property: wherever the deadline lands in the quantum schedule,
+    the expired request gets a well-formed PartialResult and the
+    deadline-free batchmate always completes and matches its solo."""
+    hurried = _req(6, 0.5, seeds=8, data_seed=0, deadline_s=3.0)
+    patient = _req(9, 1.0, seeds=8, data_seed=1)
+    clock = ManualClock()
+    ex = TracingExecutor()
+    ex.after_call(jump_after, ClockJump(clock, 10.0))
+    srv = McSweepServer(McServeConfig(quantum_seeds=quantum),
+                        executor=ex, clock=clock)
+
+    async def inner():
+        tasks = await submit_all(srv, [hurried, patient])
+        await srv.drain()
+        return await asyncio.gather(*tasks)
+
+    part, full = run(inner())
+    assert isinstance(part, PartialResult)
+    done = min((jump_after + 1) * quantum, 8)
+    assert part.seeds_completed == done and part.seeds_requested == 8
+    if done:
+        _assert_matches_solo(part.result, _partial_ref(hurried, done))
+    _assert_matches_solo(full, patient)
+
+
+def test_hung_engine_call_quarantines_the_signature():
+    """Watchdog: an engine call exceeding hang_threshold_s (measured on
+    the injected clock — no racing timers) fails the batch with
+    QuarantinedError, and later submits of the same signature are
+    rejected at submit with the original cause; other signatures are
+    unaffected."""
+    hung = _req(6, 0.5, seeds=SEEDS, data_seed=0)
+    other = _req(6, 0.5, steps=STEPS + 4, data_seed=1)  # distinct sig
+    assert _sig(hung) != _sig(other)
+    clock = ManualClock()
+    ex = TracingExecutor()
+    ex.after_call(0, ClockJump(clock, 9.0))
+    srv = McSweepServer(
+        McServeConfig(quantum_seeds=SEEDS, hang_threshold_s=1.0),
+        executor=ex, clock=clock)
+
+    async def inner():
+        tasks = await submit_all(srv, [hung, other])
+        await srv.drain()
+        first = await asyncio.gather(*tasks, return_exceptions=True)
+        try:  # same signature again: fenced off at submit
+            await srv.submit(_req(6, 0.5, seeds=SEEDS, data_seed=5))
+            resubmit = None
+        except QuarantinedError as e:
+            resubmit = e
+        return first, resubmit
+
+    (res_hung, res_other), resubmit = run(inner())
+    assert isinstance(res_hung, QuarantinedError)
+    assert "hang_threshold_s" in str(res_hung)
+    _assert_matches_solo(res_other, other)  # other signature unaffected
+    assert isinstance(resubmit, QuarantinedError)
+    assert "took 9.000s" in str(resubmit)  # original cause preserved
+    assert srv.stats.quarantined == 1
+    assert srv.stats.failed_batches == 0  # quarantine has its own ledger
+    assert srv.stats.rejected == 1
+
+
+def test_transient_engine_failure_retried_to_success():
+    """cfg.retry: a quantum failing once is replayed under the policy's
+    backoff (waited on the server clock) and — counter-based RNG — the
+    final result still matches the dedicated solo run exactly."""
+    req = _req(6, 0.5, seeds=8, data_seed=0)
+    clock = ManualClock()
+    ex = TracingExecutor()
+    ex.fail_when(FlakyOnce(lambda info: info["off"] == 4),
+                 RuntimeError("transient device loss"))
+    srv = McSweepServer(
+        McServeConfig(quantum_seeds=4,
+                      retry=RetryPolicy(max_attempts=3, base_delay_s=0.5)),
+        executor=ex, clock=clock)
+
+    async def inner():
+        (task,) = await submit_all(srv, [req])
+        await srv.drain()
+        return await task
+
+    res = run(inner())
+    _assert_matches_solo(res, req)
+    assert [c["off"] for c in ex.calls] == [0, 4, 4]  # one replay
+    assert clock.sleeps == [0.5]  # backoff waited on the server clock
+    assert srv.stats.retries == 1
+    assert srv.stats.failed_batches == 0
+
+
+def test_retry_budget_exhausted_routes_failure_to_clients():
+    """A persistently failing quantum burns the retry budget and then
+    fails its batch exactly like the no-retry path."""
+    req = _req(6, 0.5, seeds=8, data_seed=0)
+    clock = ManualClock()
+    ex = TracingExecutor()
+    ex.fail_when(lambda info: info["off"] == 0,
+                 RuntimeError("dead device"))
+    srv = McSweepServer(
+        McServeConfig(quantum_seeds=4,
+                      retry=RetryPolicy(max_attempts=2, base_delay_s=0.5)),
+        executor=ex, clock=clock)
+
+    async def inner():
+        (task,) = await submit_all(srv, [req])
+        await srv.drain()
+        return await asyncio.gather(task, return_exceptions=True)
+
+    (err,) = run(inner())
+    assert isinstance(err, ServeError)
+    assert "dead device" in str(err)
+    assert srv.stats.retries == 1  # one re-attempt, then give up
+    assert srv.stats.failed_batches == 1
+
+
+def test_deadline_validation_and_config_default():
+    """deadline_s must be positive; a request without one inherits
+    McServeConfig.default_deadline_s (and can expire under it)."""
+    srv = McSweepServer()
+    with pytest.raises(RequestError, match="deadline_s"):
+        srv._normalize(_req(6, 0.5, deadline_s=0.0))
+    with pytest.raises(RequestError, match="deadline_s"):
+        srv._normalize(_req(6, 0.5, deadline_s=-1.0))
+
+    req = _req(6, 0.5, seeds=8, data_seed=0)  # no per-request deadline
+    clock = ManualClock()
+    ex = TracingExecutor()
+    ex.after_call(0, ClockJump(clock, 10.0))
+    srv = McSweepServer(
+        McServeConfig(quantum_seeds=4, default_deadline_s=5.0),
+        executor=ex, clock=clock)
+
+    async def inner():
+        (task,) = await submit_all(srv, [req])
+        await srv.drain()
+        return await task
+
+    part = run(inner())
+    assert isinstance(part, PartialResult)
+    assert part.seeds_completed == 4
+    # and the per-request knob overrides the config default
+    assert srv._normalize(
+        _req(6, 0.5, deadline_s=42.0)).deadline_s == 42.0
